@@ -1,0 +1,88 @@
+"""Fig. 3 reproduction: throughput ideality vs dispatcher capability.
+
+The paper varies the scalar core's D-cache line / AXI width and measures
+fmatmul throughput against an ideal dispatcher (pre-filled queue), showing
+a 1.54× swing.  The framework analogue measures a small train step under:
+
+  * blocking dispatch (depth 0)      — worst scalar path,
+  * queued dispatch (depth 1,2,4)    — the accelerator-port queue,
+  * ideal dispatcher (lax.scan(n))   — the pre-filled instruction queue,
+
+and reports ideality = steps/s ÷ ideal steps/s.  The paper's monotone
+ideality-vs-dispatch-capability curve must reproduce (ideal ≥ queued ≥
+blocking).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dispatch
+
+
+def _model_step():
+    """A deliberately *small* step: the paper's dispatch bottleneck appears
+    on short vectors, where per-instruction issue cost is not amortised —
+    here, where per-step host dispatch cost rivals device time."""
+    w1 = jax.random.normal(jax.random.PRNGKey(0), (64, 64), jnp.float32)
+
+    def step(x):
+        h = jnp.tanh(x @ w1)
+        h = jnp.tanh(h @ w1.T)
+        return h / (1.0 + jnp.mean(h ** 2))
+
+    return jax.jit(step), jnp.ones((64, 64), jnp.float32)
+
+
+def run(report):
+    step, x0 = _model_step()
+    step(x0).block_until_ready()            # compile
+    n = 400
+
+    def timed(fn):
+        t0 = time.perf_counter()
+        fn()
+        return n / (time.perf_counter() - t0)
+
+    # blocking
+    def blocking():
+        x = x0
+        for _ in range(n):
+            x = step(x)
+            jax.block_until_ready(x)
+    # queued
+    def queued(depth):
+        def go():
+            q = dispatch.DispatchQueue(step, depth=depth)
+            x = x0
+            for _ in range(n):
+                x = q.submit(x)
+            q.drain()
+        return go
+    # ideal: one compiled scan (donates its input -> fresh buffer per call)
+    ideal_run = dispatch.ideal_dispatcher(step, n)
+    fresh = lambda: jnp.ones((64, 64), jnp.float32)
+    ideal_run(fresh()).block_until_ready()   # compile
+
+    results = {
+        "blocking(depth=0)": timed(blocking),
+        "queued(depth=1)": timed(queued(1)),
+        "queued(depth=2)": timed(queued(2)),
+        "queued(depth=4)": timed(queued(4)),
+        "ideal(scan)": timed(
+            lambda: jax.block_until_ready(ideal_run(fresh()))),
+    }
+    ideal = results["ideal(scan)"]
+    rows = [{"mode": k, "steps_per_s": round(v, 1),
+             "ideality": round(v / ideal, 3)} for k, v in results.items()]
+    report.table("fig3_dispatch_ideality", rows)
+    ok_mono = results["ideal(scan)"] >= results["queued(depth=2)"] * 0.85 \
+        and results["queued(depth=2)"] >= results["blocking(depth=0)"] * 0.85
+    swing = ideal / results["blocking(depth=0)"]
+    report.claims("fig3", {
+        "ideality monotone in dispatch capability": (ok_mono, str(rows)),
+        "dispatcher swing >= 1.05x (paper: 1.54x on HW)": (swing >= 1.05,
+                                                           f"{swing:.2f}x"),
+    })

@@ -1,0 +1,76 @@
+"""Benchmark harness: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One module per paper artifact (Fig. 2, Fig. 3, Table II, Table III,
+fconv2d).  Each emits tables + pass/fail claims; the run exits non-zero if
+any paper-claim check fails.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+
+class Report:
+    def __init__(self):
+        self.tables = {}
+        self.claim_results = {}
+        self.notes = []
+        self.failed = []
+
+    def table(self, name, rows):
+        self.tables[name] = rows
+        print(f"\n=== {name} ===")
+        if not rows:
+            print("(empty)")
+            return
+        cols = list(rows[0].keys())
+        widths = {c: max(len(str(c)), *(len(str(r.get(c))) for r in rows))
+                  for c in cols}
+        print(" | ".join(str(c).ljust(widths[c]) for c in cols))
+        print("-+-".join("-" * widths[c] for c in cols))
+        for r in rows:
+            print(" | ".join(str(r.get(c)).ljust(widths[c]) for c in cols))
+
+    def claims(self, name, checks):
+        self.claim_results[name] = checks
+        print(f"\n--- {name}: paper-claim checks ---")
+        for desc, (ok, detail) in checks.items():
+            print(f"  [{'PASS' if ok else 'FAIL'}] {desc}  ({detail})")
+            if not ok:
+                self.failed.append(f"{name}: {desc}")
+
+    def note(self, name, text):
+        self.notes.append((name, text))
+        print(f"  note[{name}]: {text}")
+
+
+def main():
+    from benchmarks import (bench_conv2d, bench_dispatch, bench_matmul,
+                            bench_reduction, bench_roofline)
+    report = Report()
+    t0 = time.time()
+    for name, mod in [("fig2/matmul", bench_matmul),
+                      ("tableII/reduction", bench_reduction),
+                      ("fig3/dispatch", bench_dispatch),
+                      ("conv2d", bench_conv2d),
+                      ("tableIII/roofline", bench_roofline)]:
+        print(f"\n################ {name} ################")
+        try:
+            mod.run(report)
+        except Exception as e:
+            report.failed.append(f"{name}: crashed: {e!r}")
+            print(f"  CRASH {name}: {e!r}")
+    dt = time.time() - t0
+    print(f"\n================ summary ({dt:.1f}s) ================")
+    if report.failed:
+        print(f"{len(report.failed)} FAILED checks:")
+        for f in report.failed:
+            print("  -", f)
+        return 1
+    print("all paper-claim checks PASSED")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,36 @@
+"""Batched serving example: prefill + queued decode across families.
+
+Serves three different architectures (dense, MoE, SSM) through the same
+driver surface — the C6 dispatch queue keeps decode steps in flight.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.serve import generate
+from repro.models import registry
+
+
+def main():
+    rng = np.random.default_rng(0)
+    for arch in ("llama3.2-3b", "qwen2-moe-a2.7b", "mamba2-2.7b"):
+        bundle = registry.build(arch, reduced=True)
+        cfg = bundle.cfg
+        params = jax.jit(bundle.model.init)(jax.random.PRNGKey(0))
+        prompts = rng.integers(0, cfg.vocab, (4, 24)).astype(np.int32)
+        t0 = time.perf_counter()
+        toks = generate(bundle, params, prompts, gen_tokens=24, depth=2)
+        dt = time.perf_counter() - t0
+        assert toks.shape == (4, 24)
+        assert (toks >= 0).all() and (toks < cfg.vocab).all()
+        print(f"{arch:18s} 4 reqs x 24 tokens in {dt:5.2f}s "
+              f"({4*24/dt:6.1f} tok/s)  first: {toks[0][:8]}")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Generate the §Dry-run / §Roofline tables of EXPERIMENTS.md from
+experiments/dryrun/*.json.  Usage:
+    PYTHONPATH=src python experiments/make_report.py > /tmp/tables.md
+"""
+import glob
+import json
+import os
+import sys
+
+
+def load(tag_filter=None):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(
+            os.path.dirname(__file__), "dryrun", "*.json"))):
+        r = json.load(open(f))
+        if tag_filter and r.get("tag") not in tag_filter:
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_roofline_table(recs, mesh="single"):
+    rows = []
+    for r in recs:
+        if r.get("skipped") or r.get("failed") or r["mesh"] != mesh:
+            continue
+        rf = r["roofline"]
+        rows.append((
+            r["arch"], r["shape"], rf["dominant"][:4],
+            1e3 * rf["compute_s"], 1e3 * rf["memory_s"],
+            1e3 * rf["collective_s"], rf["roofline_fraction"],
+            rf["useful_flops_ratio"],
+            r.get("memory", {}).get("per_chip_gib", float("nan"))))
+    rows.sort()
+    out = ["| arch | shape | dom | compute ms | memory ms | coll ms | "
+           "roofline frac | MODEL/HLO flops | GiB/chip |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for a, s, d, c, m, w, f, u, g in rows:
+        out.append(f"| {a} | {s} | {d} | {c:.1f} | {m:.1f} | {w:.1f} | "
+                   f"{f:.4f} | {u:.2f} | {g:.1f} |")
+    return "\n".join(out)
+
+
+def fmt_skips(recs):
+    out = []
+    seen = set()
+    for r in recs:
+        if r.get("skipped") and (r["arch"], r["shape"]) not in seen:
+            seen.add((r["arch"], r["shape"]))
+            out.append(f"| {r['arch']} | {r['shape']} | {r['reason'][:80]} |")
+    return "\n".join(["| arch | shape | reason |", "|---|---|---|"] + out)
+
+
+def fmt_multi_pod(recs):
+    """single vs multi per (arch, shape): wire ratio proves the pod axis."""
+    single = {(r["arch"], r["shape"]): r for r in recs
+              if r["mesh"] == "single" and "roofline" in r}
+    out = ["| arch | shape | bound ms (256c) | bound ms (512c) | scaling |",
+           "|---|---|---|---|---|"]
+    for r in recs:
+        if r["mesh"] != "multi" or "roofline" not in r:
+            continue
+        s = single.get((r["arch"], r["shape"]))
+        if not s:
+            continue
+        bs = 1e3 * max(s["roofline"][k] for k in
+                       ("compute_s", "memory_s", "collective_s"))
+        bm = 1e3 * max(r["roofline"][k] for k in
+                       ("compute_s", "memory_s", "collective_s"))
+        out.append(f"| {r['arch']} | {r['shape']} | {bs:.1f} | {bm:.1f} | "
+                   f"{bs/max(bm,1e-9):.2f}x |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "baseline"
+    recs = load({which})
+    print(f"## {which} — single-pod (16×16 = 256 chips)\n")
+    print(fmt_roofline_table(recs, "single"))
+    print(f"\n## {which} — multi-pod scaling (2×16×16 = 512 chips)\n")
+    print(fmt_multi_pod(recs))
+    if which == "baseline":
+        print("\n## documented skips\n")
+        print(fmt_skips(load()))

@@ -1,0 +1,5 @@
+from repro.checkpoint.store import (CheckpointManager, save_pytree,
+                                    restore_pytree, latest_step)
+
+__all__ = ["CheckpointManager", "save_pytree", "restore_pytree",
+           "latest_step"]

@@ -1,0 +1,23 @@
+"""whisper-large-v3 — enc-dec audio backbone [arXiv:2212.04356].
+
+Conv frontend is a stub: ``input_specs`` provides precomputed frame
+embeddings (enc_seq=1500, d_model).  32 encoder + 32 decoder layers; MHA
+(kv=20 == n_heads).  The real model caps decoder positions at 448; the
+assigned shapes stress the backbone at the grid's seq_len (DESIGN.md).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-large-v3",
+    family="encdec",
+    n_layers=32,           # decoder layers
+    n_enc_layers=32,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=5120,
+    vocab=51_866,
+    act="gelu",
+    enc_seq=1500,
+    max_seq=32_768,
+)

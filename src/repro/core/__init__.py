@@ -1,0 +1,18 @@
+"""The paper's primary contribution as composable JAX modules.
+
+Ara's vector-unit mechanisms, re-expressed for a TPU cluster (see DESIGN.md):
+
+  vrf        — lane-split register-file byte layout (shuffle/deshuffle/reshuffle)
+  masking    — the Mask Unit (packed predication over lanes)
+  reduction  — 3-step hierarchical reductions (array- and mesh-level)
+  stripmine  — vector-length-agnostic chunk scheduler
+  chaining   — fused / overlapped dependent stages (incl. grad accumulation)
+  lanes      — lane-axis (tensor-parallel) sharding rules
+  dispatch   — host-vs-ideal dispatcher models
+  roofline   — roofline terms from compiled HLO artifacts
+"""
+from repro.core import (chaining, dispatch, lanes, masking, reduction,
+                        roofline, stripmine, vrf)
+
+__all__ = ["chaining", "dispatch", "lanes", "masking", "reduction",
+           "roofline", "stripmine", "vrf"]

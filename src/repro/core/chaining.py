@@ -1,0 +1,81 @@
+"""Chaining (paper §VI.A.b — C5): overlap dependent stages at every scale.
+
+In Ara, the SIMD multiplier and the adder are separate functional units, so a
+``vfmul`` chains into a ``vfredsum``: total cycles scale with the number of
+*elements*, not instructions.  The framework applies the same principle at
+three scales:
+
+  * **kernel scale** — fused Pallas kernels (``kernels/dotp.py`` multiply +
+    hierarchical reduce in one pass; flash-attention's online softmax chains
+    QK^T → softmax → PV without materialising intermediates),
+  * **step scale** — microbatch gradient accumulation structured so the
+    all-reduce of microbatch *i* is data-independent of the compute of
+    microbatch *i+1*; XLA's latency-hiding scheduler then overlaps them
+    (``grad_accum_chained``),
+  * **run scale** — the dispatch queue (``core/dispatch.py``) keeps the
+    device busy across steps, the CVA6-vs-ideal-dispatcher experiment.
+
+``grad_accum_chained`` is the training-loop workhorse: it also implements
+the paper's "don't starve while the scalar core stalls" behaviour — the
+device has `depth` microbatches of work queued at any time.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def grad_accum_chained(loss_fn: Callable, params: Any, batch: Any,
+                       *, num_microbatches: int,
+                       reduce_fn: Optional[Callable] = None,
+                       unroll: int = 1):
+    """Gradient accumulation over microbatches with chained reduction.
+
+    ``loss_fn(params, microbatch) -> scalar loss``.  ``batch`` leaves must
+    have a leading batch dim divisible by ``num_microbatches``.
+
+    When ``reduce_fn`` is given (e.g. ``reduction.hier_psum`` bound to mesh
+    axes, inside shard_map), each microbatch's gradient contribution is
+    reduced *inside the scan body* — the reduction of microbatch *i* chains
+    with the compute of microbatch *i+1* exactly like vfmul→vfredsum.  With
+    ``reduce_fn=None`` the caller reduces once at the end (the unchained
+    baseline, for the ablation).
+
+    Returns (mean_loss, grads).
+    """
+    if num_microbatches == 1:
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if reduce_fn is not None:
+            grads = jax.tree.map(reduce_fn, grads)
+            loss = reduce_fn(loss)
+        return loss, grads
+
+    def split(x):
+        return x.reshape(num_microbatches, x.shape[0] // num_microbatches,
+                         *x.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+
+    def body(carry, mb):
+        loss_acc, grad_acc = carry
+        loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+        if reduce_fn is not None:
+            grads = jax.tree.map(reduce_fn, grads)
+            loss = reduce_fn(loss)
+        grad_acc = jax.tree.map(jnp.add, grad_acc, grads)
+        return (loss_acc + loss, grad_acc), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss_sum, grads), _ = lax.scan(body, (jnp.zeros((), jnp.float32), zeros),
+                                    micro, unroll=unroll)
+    scale = 1.0 / num_microbatches
+    return loss_sum * scale, jax.tree.map(lambda g: g * scale, grads)
+
+
+def chained_mulreduce(a: jax.Array, b: jax.Array) -> jax.Array:
+    """vfmul→vfredsum as one fused expression (XLA fuses mul into the
+    reduction); the Pallas variant lives in ``kernels/dotp.py``."""
+    return jnp.sum(a * b, dtype=jnp.float32)

@@ -1,0 +1,549 @@
+"""Static cost analysis of optimized HLO text (trip-count-aware).
+
+Why this exists: ``compiled.cost_analysis()`` counts each ``while`` body
+**once**, regardless of trip count.  Every layer stack in this framework is
+a ``lax.scan`` (one while per model, plus microbatch/CE-block/KV-block
+loops), so the built-in numbers under-count FLOPs and bytes by ~the layer
+count — useless for a roofline.  This module re-derives costs by walking
+the optimized HLO with explicit trip-count multiplication.
+
+Cost model (per instruction):
+
+  * ``dot``          — 2 · |result| · Π(lhs contracting dims) FLOPs;
+                       bytes: operands + result (one pass each).
+  * ``convolution``  — 2 · |result| · Π(kernel dims)/feature_groups.
+  * elementwise/reduce — |result| (or |operand| for reduce) FLOPs.
+  * ``fusion``       — FLOPs of the fused computation; bytes = fusion
+                       operands + result (fusion-internal traffic is free —
+                       the roofline memory model).  In-place
+                       dynamic-update-slice roots are charged the update
+                       size, not the buffer size (XLA aliases the buffer).
+  * ``while``        — (body + cond) × trip count, from
+                       ``backend_config.known_trip_count`` (fallback: the
+                       loop-condition constant, else 1 + a warning).
+  * ``conditional``  — max over branches.
+  * collectives      — wire bytes by ring formulas (see ``roofline``),
+                       plus HBM bytes operands+result.  Counted per
+                       enclosing-loop iteration like everything else.
+
+The result feeds ``core.roofline.RooflineTerms``; wire-byte formulas and
+hardware constants stay in ``roofline``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b(pred|bf16|f8e4m3fn|f8e5m2|[sufc]\d+)\[([\d,]*)\]")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "sign", "compare", "select", "and", "or", "xor", "not",
+    "convert", "floor", "ceil", "round-nearest-afz", "round-nearest-even",
+    "clamp", "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "remainder", "atan2", "is-finite", "popcnt", "clz",
+}
+_TRANSCENDENTAL = {
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "rsqrt",
+    "sqrt", "cbrt", "tanh", "sine", "cosine", "tan", "power", "logistic",
+    "erf", "expm1", "log1p",
+}
+_FREE = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "add-dependency", "partition-id", "replica-id", "iota",
+    "rng-get-and-update-state", "opt-barrier", "domain", "custom-call",
+}
+_LAYOUT = {
+    "copy", "reshape", "transpose", "broadcast", "slice", "concatenate",
+    "pad", "reverse", "gather", "scatter", "sort", "copy-start",
+    "reduce-window", "select-and-scatter", "convert",
+}
+# async -done halves are free (the -start op carries the cost)
+_FREE_DONE = {
+    "copy-done", "all-gather-done", "all-reduce-done",
+    "collective-permute-done", "all-to-all-done", "reduce-scatter-done",
+    "async-done", "async-update",
+}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all"}
+
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_FGC_RE = re.compile(r"feature_group_count=(\d+)")
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    elems = 0
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES.get(dtype, 4)
+    return elems, total
+
+
+def _dims_of(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire_bytes: float = 0.0
+    transcendentals: float = 0.0
+    dot_flops: float = 0.0
+    collective_counts: dict = dataclasses.field(default_factory=dict)
+    collective_wire: dict = dataclasses.field(default_factory=dict)
+    bytes_by_op: dict = dataclasses.field(default_factory=dict)
+    warnings: list = dataclasses.field(default_factory=list)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        self.wire_bytes += mult * other.wire_bytes
+        self.transcendentals += mult * other.transcendentals
+        self.dot_flops += mult * other.dot_flops
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] = \
+                self.collective_counts.get(k, 0) + mult * v
+        for k, v in other.collective_wire.items():
+            self.collective_wire[k] = \
+                self.collective_wire.get(k, 0.0) + mult * v
+        for k, v in other.bytes_by_op.items():
+            self.bytes_by_op[k] = self.bytes_by_op.get(k, 0.0) + mult * v
+        for w in other.warnings:
+            if w not in self.warnings:
+                self.warnings.append(w)
+
+    def _charge(self, op: str, b: float):
+        self.bytes += b
+        self.bytes_by_op[op] = self.bytes_by_op.get(op, 0.0) + b
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    type_str: str
+    op: str
+    operands: list[str]
+    attrs: str
+    line: str
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.instructions: list[Instruction] = []
+        self.types: dict[str, str] = {}
+        self.root: Optional[Instruction] = None
+
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_INST_RE = re.compile(
+    r"^\s*(ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s([\w\-]+)\(")
+
+
+def parse_hlo(text: str) -> tuple[dict[str, Computation], Optional[str]]:
+    comps: dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HDR.match(stripped)
+            if m:
+                cur = Computation(m.group(2))
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        m = _INST_RE.match(line)
+        if not m:
+            continue
+        is_root, name, type_str, op = (m.group(1), m.group(2),
+                                       m.group(3), m.group(4))
+        # operands: balanced-paren scan from the opening paren
+        start = m.end() - 1
+        depth = 0
+        end = start
+        for i in range(start, len(line)):
+            if line[i] == "(":
+                depth += 1
+            elif line[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_str = line[start + 1: end]
+        attrs = line[end + 1:]
+        operands = [o.strip() for o in _split_top(operand_str) if o.strip()]
+        inst = Instruction(name, type_str, op, operands, attrs, line)
+        cur.instructions.append(inst)
+        cur.types[name] = type_str
+        if is_root:
+            cur.root = inst
+    return comps, entry
+
+
+def _split_top(s: str) -> list[str]:
+    out, depth, start = [], 0, 0
+    for i, c in enumerate(s):
+        if c in "([{":
+            depth += 1
+        elif c in ")]}":
+            depth -= 1
+        elif c == "," and depth == 0:
+            out.append(s[start:i])
+            start = i + 1
+    out.append(s[start:])
+    return out
+
+
+def _operand_type(comp: Computation, operand: str) -> str:
+    """Operand tokens look like ``%name`` or ``f32[] %name`` (older dialect)
+    or ``s32[] constant(5)`` (inline)."""
+    tok = operand.strip()
+    if tok.startswith("%"):
+        return comp.types.get(tok[1:], "")
+    # "TYPE %name" form
+    parts = tok.rsplit("%", 1)
+    if len(parts) == 2 and parts[1] in comp.types:
+        return comp.types[parts[1]]
+    return tok  # inline typed literal
+
+
+def _group_size(attrs: str) -> int:
+    m = _GROUPS_IOTA_RE.search(attrs)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _wire_bytes(kind: str, result_bytes: float, operand_bytes: float,
+                group: int) -> float:
+    s = max(group, 1)
+    b = result_bytes
+    if s == 1:
+        return float(b) if kind == "collective-permute" else 0.0
+    if kind == "all-reduce":
+        return 2.0 * b * (s - 1) / s
+    if kind == "all-gather":
+        return b * (s - 1) / s
+    if kind == "reduce-scatter":
+        # result is the shard; wire = shard × (s-1)
+        return float(b) * (s - 1)
+    if kind in ("all-to-all", "ragged-all-to-all"):
+        return b * (s - 1) / s
+    return float(b)   # collective-permute
+
+
+class HloCostModel:
+    def __init__(self, comps: dict[str, Computation]):
+        self.comps = comps
+        self._memo: dict[str, Cost] = {}
+
+    def comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        total = Cost()
+        if comp is None:
+            total.warnings.append(f"missing computation {name}")
+            self._memo[name] = total
+            return total
+        self._memo[name] = total   # break cycles defensively
+        for inst in comp.instructions:
+            total.add(self.inst_cost(inst, comp))
+        return total
+
+    # -- helpers -------------------------------------------------------------
+    def _called(self, inst: Instruction, key: str) -> Optional[str]:
+        m = re.search(key + r"=%?([\w\.\-]+)", inst.attrs)
+        return m.group(1) if m else None
+
+    def _operand_bytes(self, inst: Instruction, comp: Computation) -> float:
+        return float(sum(
+            _shape_elems_bytes(_operand_type(comp, o))[1]
+            for o in inst.operands))
+
+    # -- the cost function ----------------------------------------------------
+    def inst_cost(self, inst: Instruction, comp: Computation) -> Cost:
+        c = Cost()
+        op = inst.op
+        relems, rbytes = _shape_elems_bytes(inst.type_str)
+
+        if op in _FREE or op in _FREE_DONE:
+            if op == "custom-call" and "topk" not in inst.line:
+                c.warnings.append(f"custom-call treated free: "
+                                  f"{inst.line.strip()[:80]}")
+            return c
+
+        if op == "while":
+            trip = 1
+            m = _TRIP_RE.search(inst.attrs)
+            if m:
+                trip = int(m.group(1))
+            else:
+                cond = self._called(inst, "condition")
+                trip = self._trip_from_condition(cond) or 1
+                if trip == 1:
+                    c.warnings.append(
+                        f"while {inst.name}: unknown trip count, using 1")
+            body = self._called(inst, "body")
+            cond = self._called(inst, "condition")
+            if body:
+                c.add(self.comp_cost(body), trip)
+            if cond:
+                c.add(self.comp_cost(cond), trip)
+            return c
+
+        if op == "conditional":
+            branches = re.findall(r"branch_computations=\{([^}]*)\}",
+                                  inst.attrs)
+            names = []
+            if branches:
+                names = [b.strip().lstrip("%")
+                         for b in branches[0].split(",")]
+            else:
+                for key in ("true_computation", "false_computation"):
+                    n = self._called(inst, key)
+                    if n:
+                        names.append(n)
+            if names:
+                costs = [self.comp_cost(n) for n in names]
+                worst = max(costs, key=lambda x: x.flops + x.bytes)
+                c.add(worst)
+            return c
+
+        if op == "call" or op == "async-start":
+            callee = self._called(inst, "to_apply") \
+                or self._called(inst, "calls")
+            if callee:
+                c.add(self.comp_cost(callee))
+            return c
+
+        if op == "fusion":
+            callee = self._called(inst, "calls")
+            if callee:
+                inner = self.comp_cost(callee)
+                c.flops += inner.flops
+                c.transcendentals += inner.transcendentals
+                c.dot_flops += inner.dot_flops
+                c._charge(op, self._fusion_bytes(inst, comp, callee, rbytes))
+            return c
+
+        if op in _COLLECTIVES or op.endswith("-start") and \
+                op.replace("-start", "") in _COLLECTIVES:
+            kind = op.replace("-start", "")
+            ob = self._operand_bytes(inst, comp)
+            group = _group_size(inst.attrs)
+            wire = _wire_bytes(kind, rbytes, ob, group)
+            c.wire_bytes += wire
+            c._charge(op, ob + rbytes)
+            c.collective_counts[kind] = 1
+            c.collective_wire[kind] = wire
+            return c
+
+        if op == "dot":
+            m = _CONTRACT_RE.search(inst.attrs)
+            lhs_type = _operand_type(comp, inst.operands[0])
+            lhs_dims = _dims_of(lhs_type)
+            k = 1
+            if m and m.group(1):
+                for d in m.group(1).split(","):
+                    k *= lhs_dims[int(d)] if int(d) < len(lhs_dims) else 1
+            flops = 2.0 * relems * k
+            c.flops += flops
+            c.dot_flops += flops
+            c._charge(op, self._operand_bytes(inst, comp) + rbytes)
+            return c
+
+        if op == "convolution":
+            rhs_type = _operand_type(comp, inst.operands[1])
+            rhs_dims = _dims_of(rhs_type)
+            m = _FGC_RE.search(inst.attrs)
+            fgc = int(m.group(1)) if m else 1
+            # rhs dims = kernel spatial × in_ch × out_ch (order varies);
+            # 2·|out|·Π(rhs)/out_ch is exact regardless of layout
+            dm = re.search(r"dim_labels=\w+_(\w+)->", inst.attrs)
+            rhs_prod = 1
+            for d in rhs_dims:
+                rhs_prod *= d
+            out_ch = relems and rhs_dims[-1]
+            # use output-feature count from dim_labels 'o' position if found
+            k = rhs_prod
+            if dm:
+                labels = dm.group(1)
+                opos = labels.find("o")
+                if 0 <= opos < len(rhs_dims):
+                    k = rhs_prod // max(rhs_dims[opos], 1)
+            flops = 2.0 * relems * k / max(fgc, 1)
+            c.flops += flops
+            c.dot_flops += flops
+            c._charge(op, self._operand_bytes(inst, comp) + rbytes)
+            return c
+
+        if op == "reduce" or op == "reduce-window":
+            ob = self._operand_bytes(inst, comp)
+            oelems = sum(_shape_elems_bytes(_operand_type(comp, o))[0]
+                         for o in inst.operands)
+            c.flops += oelems
+            c._charge(op, ob + rbytes)
+            return c
+
+        if op == "dynamic-update-slice":
+            upd_type = _operand_type(comp, inst.operands[1])
+            _, upd_b = _shape_elems_bytes(upd_type)
+            c._charge(op, 2.0 * upd_b)
+            return c
+
+        if op == "scatter":
+            # in-place update: charge indices + updates read + write
+            upd_type = _operand_type(comp, inst.operands[-1])
+            _, upd_b = _shape_elems_bytes(upd_type)
+            idx_type = _operand_type(comp, inst.operands[1]) \
+                if len(inst.operands) > 2 else ""
+            _, idx_b = _shape_elems_bytes(idx_type)
+            c._charge(op, 2.0 * upd_b + idx_b)
+            return c
+
+        if op == "dynamic-slice":
+            c._charge(op, 2.0 * rbytes)
+            return c
+
+        if op in _TRANSCENDENTAL:
+            c.flops += relems
+            c.transcendentals += relems
+            c._charge(op, self._operand_bytes(inst, comp) + rbytes)
+            return c
+
+        if op in _ELEMENTWISE:
+            c.flops += relems
+            c._charge(op, self._operand_bytes(inst, comp) + rbytes)
+            return c
+
+        if op in _LAYOUT:
+            c._charge(op, self._operand_bytes(inst, comp) + rbytes)
+            return c
+
+        if op in ("rng", "rng-bit-generator", "map", "cholesky",
+                  "triangular-solve", "fft"):
+            c.flops += relems
+            c._charge(op, self._operand_bytes(inst, comp) + rbytes)
+            return c
+
+        c.warnings.append(f"unknown op {op!r} treated as layout")
+        c._charge(op, self._operand_bytes(inst, comp) + rbytes)
+        return c
+
+    def _fusion_bytes(self, inst: Instruction, comp: Computation,
+                      callee: str, rbytes: float) -> float:
+        """HBM bytes of one fusion: per-operand *actually-read* bytes plus
+        the written bytes.
+
+        A fusion parameter consumed only through ``dynamic-slice`` /
+        ``gather`` reads just the sliced rows — charging the full buffer
+        would bill the whole stacked-layer weight/residual array on every
+        scan iteration (a ~n_layers× overcount).  A parameter that is the
+        in-place buffer of a root ``dynamic-update-slice`` is aliased: the
+        write is the update size, the buffer itself is not streamed.
+        """
+        fused = self.comps.get(callee)
+        if fused is None:
+            return self._operand_bytes(inst, comp) + rbytes
+        # parameter name -> operand index
+        pidx: dict[str, int] = {}
+        for fi in fused.instructions:
+            if fi.op == "parameter":
+                m = re.search(r"parameter\((\d+)\)", fi.line)
+                if m:
+                    pidx[fi.name] = int(m.group(1))
+        root = fused.root
+        dus_buffer_param: Optional[int] = None
+        if root is not None and root.op in ("dynamic-update-slice",
+                                            "scatter"):
+            buf = root.operands[0].strip().lstrip("%")
+            dus_buffer_param = pidx.get(buf)
+        # per-param read bytes: None = full read, else accumulated slices
+        reads: dict[int, Optional[float]] = {}
+        for fi in fused.instructions:
+            for oi, o in enumerate(fi.operands):
+                nm = o.strip().lstrip("%")
+                if nm not in pidx:
+                    continue
+                i = pidx[nm]
+                if fi is root and oi == 0 and \
+                        fi.op in ("dynamic-update-slice", "scatter"):
+                    continue   # aliased in-place buffer
+                if fi.op in ("dynamic-slice", "gather", "slice") and oi == 0:
+                    _, sb = _shape_elems_bytes(fi.type_str)
+                    if reads.get(i, 0.0) is not None:
+                        reads[i] = reads.get(i, 0.0) + sb
+                elif fi.op in ("get-tuple-element",):
+                    pass
+                else:
+                    reads[i] = None
+        total = 0.0
+        for i, o in enumerate(inst.operands):
+            _, full = _shape_elems_bytes(_operand_type(comp, o))
+            r = reads.get(i, 0.0)    # 0.0 = never read; None = full read
+            if i == dus_buffer_param:
+                # aliased in-place buffer: only pay for real reads of it
+                total += full if r is None else min(r, full)
+                continue
+            total += full if r is None else min(r, full)
+        # written bytes
+        if root is not None and root.op == "dynamic-update-slice":
+            upd_type = _operand_type(fused, root.operands[1])
+            _, upd_b = _shape_elems_bytes(upd_type)
+            total += upd_b
+        elif root is not None and root.op == "scatter":
+            upd_type = _operand_type(fused, root.operands[-1])
+            _, upd_b = _shape_elems_bytes(upd_type)
+            total += upd_b
+        else:
+            total += rbytes
+        return total
+
+    def _trip_from_condition(self, cond_name: Optional[str]) -> Optional[int]:
+        comp = self.comps.get(cond_name or "")
+        if comp is None:
+            return None
+        consts = re.findall(r"constant\((\d+)\)",
+                            "\n".join(i.line for i in comp.instructions))
+        if consts:
+            return int(consts[-1])
+        return None
+
+
+def analyze(hlo_text: str) -> Cost:
+    """Trip-count-aware cost of the ENTRY computation of optimized HLO."""
+    comps, entry = parse_hlo(hlo_text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    model = HloCostModel(comps)
+    return model.comp_cost(entry)

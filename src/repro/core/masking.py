@@ -1,0 +1,83 @@
+"""Mask Unit: RVV 1.0 predication over a lane-split VRF (paper §IV.D.1, §V.d).
+
+RVV 1.0 packs mask bits densely — bit ``i`` of the mask lives at bit
+``i % 8`` of byte ``i // 8`` of the mask register's *memory image* — and any
+vector register may act as the mask register.  With a lane-split VRF the mask
+bits a lane needs for its elements generally live in *another* lane, and the
+register holding them was shuffled with whatever EEW last wrote it.  The Mask
+Unit therefore must:
+
+  1. deshuffle the mask register using its recorded EEW,
+  2. unpack the dense bit layout,
+  3. re-distribute bit ``i`` to the lane that owns element ``i``
+     (lane ``i % lanes``, slot ``i // lanes``).
+
+``mask_unit`` implements exactly that.  The generic ``predicate``/
+``apply_mask`` helpers are the element-level semantics (masked-off elements
+keep the old destination value — RVV `mu`), which is also how the system
+layers use predication: causal/sliding attention masks, MoE capacity
+dropping, and tail masking in strip-mined kernels are all instances of C3.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import vrf
+
+
+@partial(jax.jit, static_argnames=("num_bits",))
+def unpack_bits(packed: jax.Array, num_bits: int) -> jax.Array:
+    """LSB-first bit unpack of a uint8 byte image -> bool ``(num_bits,)``."""
+    bits = (packed[..., :, None] >> jnp.arange(8, dtype=jnp.uint8)) & 1
+    return bits.reshape(*packed.shape[:-1], -1)[..., :num_bits].astype(bool)
+
+
+@partial(jax.jit, static_argnames=("num_bits",))
+def pack_bits(bits: jax.Array, num_bits: int) -> jax.Array:
+    """Inverse of :func:`unpack_bits` (pads to a byte boundary with zeros)."""
+    pad = (-num_bits) % 8
+    b = jnp.pad(bits.astype(jnp.uint8), [(0, 0)] * (bits.ndim - 1) + [(0, pad)])
+    b = b.reshape(*bits.shape[:-1], -1, 8)
+    weights = (1 << jnp.arange(8)).astype(jnp.uint8)
+    return (b * weights).sum(-1).astype(jnp.uint8)
+
+
+@partial(jax.jit, static_argnames=("stored_eew", "lanes", "num_elems"))
+def mask_unit(mask_reg_lane_bytes: jax.Array, *, stored_eew: int, lanes: int,
+              num_elems: int) -> jax.Array:
+    """Fetch + deshuffle + unpack + distribute mask bits to lanes.
+
+    Returns a boolean ``(lanes, num_elems // lanes)`` predicate array:
+    ``out[l, s]`` is the mask bit of element ``i = s * lanes + l`` — i.e. the
+    predicate for the element that lane ``l`` holds in slot ``s``.
+    """
+    if num_elems % lanes:
+        raise ValueError(f"{num_elems} elements not divisible by {lanes} lanes")
+    mem = vrf.deshuffle(mask_reg_lane_bytes, eew=stored_eew, lanes=lanes)
+    bits = unpack_bits(mem, num_elems)                     # element order
+    return bits.reshape(num_elems // lanes, lanes).T       # -> (lanes, slots)
+
+
+def apply_mask(dest_old: jax.Array, computed: jax.Array,
+               mask: jax.Array) -> jax.Array:
+    """RVV mask-undisturbed write: keep old destination where mask is 0."""
+    return jnp.where(mask, computed, dest_old)
+
+
+def tail_mask(n: int, vl: jax.Array) -> jax.Array:
+    """Body predicate for a strip-mined chunk: True for the first ``vl``."""
+    return jnp.arange(n) < vl
+
+
+def predicated(fn):
+    """Wrap an elementwise op so masked-off lanes keep the destination value.
+
+    ``predicated(fn)(dest, *args, mask=m)`` == where(m, fn(*args), dest).
+    Used by system layers for capacity dropping and tail handling.
+    """
+    def wrapped(dest_old, *args, mask):
+        return apply_mask(dest_old, fn(*args), mask)
+    return wrapped

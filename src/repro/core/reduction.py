@@ -1,0 +1,157 @@
+"""3-step hierarchical reductions (paper §V.e, Table II) — array & mesh level.
+
+Ara implements ``vredsum`` in three steps:
+
+  1. **intra-lane**  — each lane reduces the elements it already holds
+     (fully data-local, maximal ALU utilisation; cost ~ VL_B / (8 ℓ) cycles),
+  2. **inter-lane**  — log2(ℓ)+1 slide/ALU steps move partial results across
+     lanes (the slide unit is the only all-lane unit; every step pays the
+     lane-crossing latency),
+  3. **SIMD**        — the final 64-bit SIMD word is folded log2(8/EEW) times.
+
+Ideal cycle model (paper): ``VL_B / (8 ℓ) + 1 + log2(ℓ)`` (the +1 is the
+chained multiply for the dot-product benchmark).
+
+This module provides:
+
+  * ``lane_tree_reduce``      — exact array-level emulation of the 3 steps
+    (used by the Table II benchmark and as the reference semantics),
+  * ``ideal_cycles`` / ``simd_lanes`` — the paper's analytical cycle model,
+  * ``butterfly_allreduce``   — the inter-lane step as a mesh collective:
+    log2(axis) recursive-doubling via ``lax.ppermute`` (slide-unit analogue),
+  * ``hier_psum`` / ``hier_allreduce_tree`` — the same schedule at cluster
+    scale for gradient reduction: intra-pod reduce-scatter → inter-pod
+    all-reduce → intra-pod all-gather over the ("pod","data") mesh axes.
+    Intra-pod = intra-lane (cheap, local ICI); inter-pod = inter-lane
+    (expensive, few links); the final all-gather = the SIMD fold's
+    "broadcast back" role.
+
+All mesh functions are written for use inside ``shard_map``.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# Datapath width of one lane, bytes (paper: 64-bit lanes).
+LANE_DATAPATH_BYTES = 8
+
+
+def simd_lanes(eew_bytes: int) -> int:
+    """Elements per SIMD word in one lane cycle (8/EEW)."""
+    return LANE_DATAPATH_BYTES // eew_bytes
+
+
+def ideal_cycles(vl_bytes: int, lanes: int, *, chained_ops: int = 1) -> float:
+    """Paper's ideal dot-product cycle count: VL_B/(8 ℓ) + chained + log2(ℓ)."""
+    return vl_bytes / (LANE_DATAPATH_BYTES * lanes) + chained_ops + math.log2(lanes)
+
+
+@partial(jax.jit, static_argnames=("lanes", "eew_bytes", "op"))
+def lane_tree_reduce(x: jax.Array, *, lanes: int, eew_bytes: int = 8,
+                     op: str = "add") -> jax.Array:
+    """Exact 3-step reduction of a 1-D vector distributed over ``lanes``.
+
+    Element ``i`` belongs to lane ``i % lanes`` (VRF mapping, see
+    ``core.vrf``).  Within a lane, elements are processed SIMD-words at a
+    time (``8 // eew_bytes`` elements per cycle).  Returns a scalar equal to
+    the full reduction; the *order* of partial sums matches the hardware
+    (intra-lane slots first, then lane tree, then SIMD fold), which matters
+    for float reproducibility tests.
+    """
+    ops: dict[str, Callable] = {
+        "add": jnp.add, "max": jnp.maximum, "min": jnp.minimum,
+    }
+    f = ops[op]
+    n = x.shape[-1]
+    k = simd_lanes(eew_bytes)
+    if n % (lanes * k):
+        raise ValueError(f"vector length {n} must divide lanes*simd={lanes * k}")
+    # Lane/SIMD view: element i -> lane i % lanes; within a lane, consecutive
+    # owned elements fill successive SIMD slots of successive cycles.
+    v = x.reshape(-1, lanes, k)                     # [cycle, lane, simd_slot]
+
+    # Step 1: intra-lane — reduce over the cycle axis (data-local).
+    acc = v[0]
+    for c in range(1, v.shape[0]):                  # sequential, as in HW
+        acc = f(acc, v[c])                          # (lanes, k)
+
+    # Step 2: inter-lane — log2(lanes) slide steps (recursive halving).
+    stride = lanes // 2
+    while stride >= 1:
+        acc = f(acc[:stride], acc[stride:2 * stride])
+        stride //= 2
+    word = acc[0]                                   # (k,) one SIMD word
+
+    # Step 3: SIMD fold — log2(k) steps within the word.
+    stride = k // 2
+    while stride >= 1:
+        word = f(word[:stride], word[stride:2 * stride])
+        stride //= 2
+    return word[0]
+
+
+# ---------------------------------------------------------------------------
+# Mesh-level collectives (for use inside shard_map)
+# ---------------------------------------------------------------------------
+
+def butterfly_allreduce(x: jax.Array, axis_name: str) -> jax.Array:
+    """Recursive-doubling all-reduce via ppermute — the inter-lane slide tree.
+
+    log2(N) nearest-neighbour-ish exchange steps instead of one opaque
+    all-reduce.  Equivalent to ``lax.psum(x, axis_name)``; exists so the
+    schedule (and its per-step cost) is explicit and so XLA emits
+    collective-permutes that overlap with compute.
+    """
+    n = lax.axis_size(axis_name)
+    if n & (n - 1):
+        raise ValueError(f"axis {axis_name!r} size {n} must be a power of two")
+    step = 1
+    while step < n:
+        partner = [(i, i ^ step) for i in range(n)]  # XOR exchange (involution)
+        x = x + lax.ppermute(x, axis_name, perm=partner)
+        step <<= 1
+    return x
+
+
+def hier_psum(x: jax.Array, *, pod_axis: str | None = "pod",
+              data_axis: str = "data") -> jax.Array:
+    """3-step hierarchical all-reduce over (pod, data) for one gradient leaf.
+
+      1. intra-pod reduce-scatter over ``data``  (intra-lane: local, cheap),
+      2. inter-pod  all-reduce of the shard over ``pod`` (inter-lane: few,
+         expensive links — moves 1/data_size of the bytes a flat all-reduce
+         over (pod,data) would move across pods),
+      3. intra-pod all-gather over ``data``      (redistribute, like the
+         SIMD-fold writeback).
+
+    Falls back to plain psum over ``data`` when there is no pod axis.
+    Requires the leading dim of ``x`` to be divisible by the data axis size
+    (caller pads — see ``optim.flatten_for_reduction``).
+    """
+    if pod_axis is None:
+        return lax.psum(x, data_axis)
+    shard = lax.psum_scatter(x, data_axis, scatter_dimension=0, tiled=True)
+    shard = lax.psum(shard, pod_axis)
+    return lax.all_gather(shard, data_axis, axis=0, tiled=True)
+
+
+def hier_psum_tree(x: jax.Array, *, pod_axis: str | None = "pod",
+                   data_axis: str = "data") -> jax.Array:
+    """As :func:`hier_psum` but the inter-pod step uses the explicit
+    butterfly (ppermute) schedule — the paper-faithful slide-unit variant."""
+    if pod_axis is None:
+        return butterfly_allreduce(x, data_axis)
+    shard = lax.psum_scatter(x, data_axis, scatter_dimension=0, tiled=True)
+    shard = butterfly_allreduce(shard, pod_axis)
+    return lax.all_gather(shard, data_axis, axis=0, tiled=True)
+
+
+def lane_psum(x: jax.Array, axis_name: str = "model") -> jax.Array:
+    """Tensor-parallel partial-sum reduction over the lane axis."""
+    return lax.psum(x, axis_name)

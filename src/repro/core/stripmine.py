@@ -1,0 +1,95 @@
+"""Strip-mining scheduler (paper §IV intro, §VI.A.a) — C7.
+
+A vector machine processes a logical vector longer than VLMAX in VLEN-sized
+strips; Ara's design point (VLEN=4096) exists precisely to amortise the
+per-strip startup (~10 cycles) and dispatch costs.  At framework scale the
+same pattern is chunked processing of long axes with a carried state:
+
+  * blockwise attention over 32k-524k token sequences (carry = online-softmax
+    running max / denominator / accumulator),
+  * the Mamba2 SSD chunk scan (carry = SSM state),
+  * micro-batched gradient accumulation (carry = gradient accumulator).
+
+``stripmine`` lowers to a single ``lax.scan`` whose body is compiled once —
+the analogue of issuing one vector instruction per strip out of a pre-decoded
+loop, keeping "instruction fetch" (trace/compile) cost independent of the
+vector length.  Tails are handled by padding + predication (C3), i.e. the
+RVV ``vl < VLMAX`` final strip.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def num_strips(n: int, vlmax: int) -> int:
+    return -(-n // vlmax)
+
+
+def pad_to_strips(x: jax.Array, vlmax: int, axis: int = 0):
+    """Pad ``axis`` of ``x`` up to a multiple of ``vlmax``.
+
+    Returns (padded, lengths) where lengths[s] is the active ``vl`` of strip
+    ``s`` (== vlmax except possibly the last strip).
+    """
+    n = x.shape[axis]
+    strips = num_strips(n, vlmax)
+    pad = strips * vlmax - n
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    padded = jnp.pad(x, cfg)
+    lengths = jnp.minimum(
+        jnp.full((strips,), vlmax, jnp.int32),
+        n - jnp.arange(strips, dtype=jnp.int32) * vlmax)
+    return padded, lengths
+
+
+def stripmine(body: Callable[[Any, jax.Array, jax.Array], tuple[Any, Any]],
+              init_carry: Any, x: jax.Array, *, vlmax: int, axis: int = 0,
+              unroll: int = 1):
+    """Run ``body(carry, strip, vl) -> (carry, out)`` over VLEN-sized strips.
+
+    ``strip`` has ``vlmax`` elements along ``axis`` (tail zero-padded) and
+    ``vl`` is the active length (predication handle for the tail strip).
+    Returns (final_carry, stacked_outs).  ``unroll`` > 1 trades instruction
+    count for scheduling freedom — the dual of the paper's issue-rate limit.
+    """
+    padded, lengths = pad_to_strips(x, vlmax, axis)
+    strips = lengths.shape[0]
+    moved = jnp.moveaxis(padded, axis, 0)
+    strips_arr = moved.reshape(strips, vlmax, *moved.shape[1:])
+
+    def scan_body(carry, inp):
+        strip, vl = inp
+        return body(carry, jnp.moveaxis(strip, 0, axis if axis >= 0 else 0), vl)
+
+    return lax.scan(scan_body, init_carry, (strips_arr, lengths),
+                    unroll=unroll)
+
+
+def stripmined_map(fn: Callable[[jax.Array, jax.Array], jax.Array],
+                   x: jax.Array, *, vlmax: int, axis: int = 0,
+                   unroll: int = 1) -> jax.Array:
+    """Carry-less strip-mined elementwise/banded map; reassembles the axis.
+
+    ``fn(strip, vl)`` must be shape-preserving along ``axis``.
+    """
+    n = x.shape[axis]
+
+    def body(carry, strip, vl):
+        return carry, fn(strip, vl)
+
+    _, outs = stripmine(body, None, x, vlmax=vlmax, axis=axis, unroll=unroll)
+    # outs: (strips, ...) with the vlmax axis at position axis+1 — restitch.
+    outs = _restitch(outs, axis)
+    return lax.slice_in_dim(outs, 0, n, axis=axis)
+
+
+def _restitch(outs: jax.Array, axis: int) -> jax.Array:
+    """Merge leading strip axis back into ``axis`` without a python loop."""
+    moved = jnp.moveaxis(outs, axis + 1, 1)           # (strips, vlmax, ...)
+    flat = moved.reshape(-1, *moved.shape[2:])        # (strips*vlmax, ...)
+    return jnp.moveaxis(flat, 0, axis)

@@ -1,0 +1,200 @@
+"""Lane-split Vector Register File byte-layout model (paper §IV.A-D).
+
+Ara (VU1.0) splits the VRF across lanes: consecutive *elements* map to
+consecutive lanes (element ``i`` lives in lane ``i % lanes``), while RVV 1.0
+mandates SLEN == VLEN, i.e. the *memory image* of a register is the plain
+little-endian concatenation of its elements.  The byte<->lane mapping
+therefore depends on the effective element width (EEW) a register was written
+with.  Three circuits fall out of this (paper §IV.C-D):
+
+  * ``shuffle``    — memory byte image  -> lane-organised VRF bytes
+  * ``deshuffle``  — lane-organised VRF bytes -> memory byte image
+                     (requires the EEW the register was written with)
+  * ``reshuffle``  — deshuffle(old EEW) . shuffle(new EEW); injected by the
+                     front-end whenever an instruction writes a register with
+                     a different EEW without fully overwriting it
+                     (tail-undisturbed policy would otherwise corrupt tails).
+
+This module implements those semantics exactly, on JAX uint8 arrays, plus a
+``VectorRegisterFile`` bookkeeping model that reproduces the paper's
+reshuffle-injection logic (and counts injections — the IPC-loss mechanism of
+§IV.D.2).  It is hardware-independent logic and is property-tested in
+``tests/test_vrf.py``.
+
+At system scale the same concept — "the physical layout of a logical tensor
+depends on which unit wrote it, and re-layouts are explicit, costly ops" —
+shows up as dtype repacking / transposes between differently-sharded ops; the
+perf iteration hunts those in the HLO (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+VALID_EEW = (1, 2, 4, 8)  # element widths in *bytes* (SEW 8/16/32/64 bit)
+
+
+def _check(vlenb: int, eew: int, lanes: int) -> None:
+    if eew not in VALID_EEW:
+        raise ValueError(f"EEW must be one of {VALID_EEW} bytes, got {eew}")
+    if lanes < 1 or lanes & (lanes - 1):
+        raise ValueError(f"lane count must be a power of two, got {lanes}")
+    n_elems = vlenb // eew
+    if vlenb % eew:
+        raise ValueError(f"VLENB {vlenb} not a multiple of EEW {eew}")
+    if n_elems % lanes:
+        raise ValueError(
+            f"{n_elems} elements of width {eew}B do not divide over {lanes} lanes"
+        )
+
+
+@partial(jax.jit, static_argnames=("eew", "lanes"))
+def shuffle(mem_bytes: jax.Array, *, eew: int, lanes: int) -> jax.Array:
+    """Memory byte image ``(VLENB,)`` -> lane view ``(lanes, VLENB // lanes)``.
+
+    Element ``i`` (bytes ``[i*eew, (i+1)*eew)`` of the memory image) is placed
+    in lane ``i % lanes`` at slot ``i // lanes`` (paper §IV.B: consecutive
+    elements to consecutive lanes, mapping constant across EEW for *elements*
+    but not for *bytes*).
+    """
+    vlenb = mem_bytes.shape[-1]
+    _check(vlenb, eew, lanes)
+    slots = vlenb // eew // lanes
+    lead = mem_bytes.shape[:-1]
+    x = mem_bytes.reshape(*lead, slots, lanes, eew)       # [slot, lane, byte]
+    x = jnp.swapaxes(x, -3, -2)                           # [lane, slot, byte]
+    return x.reshape(*lead, lanes, slots * eew)
+
+
+@partial(jax.jit, static_argnames=("eew", "lanes"))
+def deshuffle(lane_bytes: jax.Array, *, eew: int, lanes: int) -> jax.Array:
+    """Lane view ``(lanes, VLENB // lanes)`` -> memory byte image ``(VLENB,)``.
+
+    ``eew`` must be the EEW the register was *written* with; using any other
+    value models exactly the corruption the paper describes (§IV.D.2).
+    """
+    lanes_in, per_lane = lane_bytes.shape[-2], lane_bytes.shape[-1]
+    vlenb = lanes_in * per_lane
+    if lanes_in != lanes:
+        raise ValueError(f"lane view has {lanes_in} lanes, expected {lanes}")
+    _check(vlenb, eew, lanes)
+    slots = vlenb // eew // lanes
+    lead = lane_bytes.shape[:-2]
+    x = lane_bytes.reshape(*lead, lanes, slots, eew)      # [lane, slot, byte]
+    x = jnp.swapaxes(x, -3, -2)                           # [slot, lane, byte]
+    return x.reshape(*lead, vlenb)
+
+
+@partial(jax.jit, static_argnames=("old_eew", "new_eew", "lanes"))
+def reshuffle(lane_bytes: jax.Array, *, old_eew: int, new_eew: int,
+              lanes: int) -> jax.Array:
+    """Re-encode a register's lane layout from ``old_eew`` to ``new_eew``.
+
+    This is the paper's *reshuffle*: a vslide with null stride and different
+    source/destination EEW, executed by the slide unit because it is the only
+    unit with all-lane access.  The memory image is invariant under it.
+    """
+    return shuffle(deshuffle(lane_bytes, eew=old_eew, lanes=lanes),
+                   eew=new_eew, lanes=lanes)
+
+
+@partial(jax.jit, static_argnames=("eew", "lanes", "tail_policy"))
+def write_register(old_lane_bytes: jax.Array, old_eew_is_new: bool,
+                   new_mem_bytes: jax.Array, vl: jax.Array, *, eew: int,
+                   lanes: int, tail_policy: str = "undisturbed") -> jax.Array:
+    """Write the first ``vl`` elements (EEW ``eew``) into a register.
+
+    ``old_lane_bytes`` must already be encoded with EEW ``eew`` (the caller —
+    ``VectorRegisterFile`` — injects a reshuffle first if it was not; passing
+    ``old_eew_is_new=False`` without reshuffling reproduces the corruption).
+
+    tail_policy:
+      * ``"undisturbed"`` — tail bytes keep their old value (RVV `tu`).
+      * ``"agnostic_ones"`` — tail bytes are overwritten with 0xFF (RVV `ta`,
+        the all-ones option; the paper notes the extra writes hurt IPC).
+    """
+    del old_eew_is_new  # bookkeeping lives in VectorRegisterFile
+    vlenb = new_mem_bytes.shape[-1]
+    _check(vlenb, eew, lanes)
+    byte_idx = jnp.arange(vlenb)
+    active = byte_idx < vl * eew                      # body bytes
+    new_lane = shuffle(new_mem_bytes, eew=eew, lanes=lanes)
+    active_lane = shuffle(active.astype(jnp.uint8), eew=eew, lanes=lanes) > 0
+    if tail_policy == "undisturbed":
+        tail_val = old_lane_bytes
+    elif tail_policy == "agnostic_ones":
+        tail_val = jnp.full_like(old_lane_bytes, 0xFF)
+    else:
+        raise ValueError(f"unknown tail policy {tail_policy!r}")
+    return jnp.where(active_lane, new_lane, tail_val)
+
+
+@dataclasses.dataclass
+class RegState:
+    eew: int          # EEW the register is currently encoded with (bytes)
+    known: bool = True
+
+
+class VectorRegisterFile:
+    """Bookkeeping model of the 32-register lane-split VRF (paper §IV.D.2).
+
+    Tracks the EEW each register was last written with and injects a
+    reshuffle before any partial write with a different EEW — exactly the
+    front-end logic the paper describes.  ``stats`` counts injected
+    reshuffles and moved bytes, the quantities that degrade IPC.
+    """
+
+    NUM_REGS = 32
+
+    def __init__(self, *, vlen_bits: int = 4096, lanes: int = 4,
+                 default_eew: int = 1):
+        if vlen_bits % 8:
+            raise ValueError("VLEN must be a multiple of 8 bits")
+        self.vlenb = vlen_bits // 8
+        self.lanes = lanes
+        self.regs = [
+            jnp.zeros((lanes, self.vlenb // lanes), jnp.uint8)
+            for _ in range(self.NUM_REGS)
+        ]
+        self.state = [RegState(default_eew) for _ in range(self.NUM_REGS)]
+        self.stats = {"reshuffles": 0, "reshuffled_bytes": 0, "writes": 0}
+
+    # -- architectural accessors ------------------------------------------
+    def read_mem_image(self, reg: int) -> jax.Array:
+        """Architectural (memory-layout) value of a register."""
+        st = self.state[reg]
+        return deshuffle(self.regs[reg], eew=st.eew, lanes=self.lanes)
+
+    def write(self, reg: int, mem_bytes: jax.Array, *, eew: int,
+              vl: int | None = None, tail_policy: str = "undisturbed") -> None:
+        """Architectural write of ``vl`` elements at ``eew`` (paper front-end).
+
+        Injects a reshuffle when (a) the register's current EEW differs and
+        (b) the write does not overwrite the full register (the paper skips
+        injection for full overwrites).
+        """
+        max_vl = self.vlenb // eew
+        vl = max_vl if vl is None else vl
+        full_overwrite = vl >= max_vl
+        st = self.state[reg]
+        if st.eew != eew and not full_overwrite:
+            # inject reshuffle (slide with null stride) before the write
+            self.regs[reg] = reshuffle(self.regs[reg], old_eew=st.eew,
+                                       new_eew=eew, lanes=self.lanes)
+            self.stats["reshuffles"] += 1
+            self.stats["reshuffled_bytes"] += self.vlenb
+        self.regs[reg] = write_register(
+            self.regs[reg], True, mem_bytes, jnp.asarray(vl), eew=eew,
+            lanes=self.lanes, tail_policy=tail_policy)
+        self.state[reg] = RegState(eew)
+        self.stats["writes"] += 1
+
+    # -- element views -----------------------------------------------------
+    def elements(self, reg: int, dtype=jnp.uint8) -> jax.Array:
+        """Architectural elements of ``reg`` viewed as ``dtype``."""
+        img = self.read_mem_image(reg)
+        return jax.lax.bitcast_convert_type(
+            img.reshape(-1, jnp.dtype(dtype).itemsize), dtype).reshape(-1)

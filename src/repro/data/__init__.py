@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLMDataset, Prefetcher, make_pipeline
+
+__all__ = ["SyntheticLMDataset", "Prefetcher", "make_pipeline"]

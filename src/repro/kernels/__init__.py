@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the perf-critical compute of the vector unit.
+
+Layout per kernel: ``<name>.py`` holds the pl.pallas_call + BlockSpec body,
+``ops.py`` the jit-able dispatching wrapper (pallas / interpret / scalable
+jnp), ``ref.py`` the naive pure-jnp oracle used by the allclose tests.
+"""
+from repro.kernels import ops, ref  # noqa: F401

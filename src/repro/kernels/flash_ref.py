@@ -1,0 +1,227 @@
+"""Flash-structured blockwise attention with a custom VJP (pure jnp).
+
+This is the §Perf workhorse (EXPERIMENTS.md, hillclimb iteration 1 on the
+train cells).  The naive blockwise ref (``ops._blockwise_attention_ref``)
+is differentiated by JAX's autodiff, which saves the per-KV-block f32
+probability/accumulator trajectory of the online-softmax scan — at 32k
+tokens that is the dominant HBM traffic of the whole training step (and
+pushes per-chip memory past HBM).  This implementation:
+
+  * **forward**: scans *(q-block, kv-block)* pairs with an online-softmax
+    carry per q-block.  For causal self-attention the pair list is
+    *triangular* (kv-block ≤ q-block) — ~2× fewer FLOPs than the
+    all-pairs schedule, which computes fully-masked blocks only to throw
+    them away.  With a sliding window the list is *banded* (the Hymba
+    SWA prefill does O(S·W) work, not O(S²)).
+  * **residuals**: only (q, k, v, O, LSE) — O(S·D), never O(S²) and never
+    the per-block scan trajectory.  This is exactly the paper's chaining
+    argument (C5): the multiply chains into the softmax-reduce without
+    round-tripping intermediates through the register file / HBM.
+  * **backward**: recomputes p per block pair from (q, k, LSE) — the flash
+    bwd recurrence — accumulating dq per q-block in the carry and dk/dv
+    via in-place read-modify-write block updates.
+
+Semantics (incl. right-aligned decode, windows, ragged tails) match
+``ref.attention``; the kernel tests sweep both against the oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def _pairs(nq: int, nk: int, *, causal: bool, aligned: bool,
+           wband: Optional[int]) -> tuple[np.ndarray, np.ndarray]:
+    """Static (q-block, kv-block) pair schedule."""
+    out = []
+    for qi in range(nq):
+        for kj in range(nk):
+            if causal and aligned and kj > qi:
+                continue            # fully masked: skip (triangular)
+            if wband is not None and aligned and kj < qi - wband:
+                continue            # outside the window band
+            out.append((qi, kj))
+    qi_arr = np.asarray([p[0] for p in out], np.int32)
+    kj_arr = np.asarray([p[1] for p in out], np.int32)
+    return qi_arr, kj_arr
+
+
+def _block_mask(qi, kj, blk, sq, sk, qoff, *, causal, window):
+    """(blk, blk) validity mask for one block pair (positions global)."""
+    qpos = qi * blk + jnp.arange(blk)[:, None] + qoff     # right-aligned
+    kpos = kj * blk + jnp.arange(blk)[None, :]
+    mask = (kpos < sk) & (qpos < sq + qoff)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    return mask
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention_ref(q, k, v, causal, window, scale, blk):
+    out, _ = _fwd(q, k, v, causal, window, scale, blk)
+    return out
+
+
+def _fwd(q, k, v, causal, window, scale, blk):
+    lead = q.shape[:-2]
+    sq, d = q.shape[-2:]
+    sk = k.shape[-2]
+    scale = scale if scale is not None else d ** -0.5
+    blk = min(blk, sq, sk)
+    pad_q = (-sq) % blk
+    pad_k = (-sk) % blk
+    qp = jnp.pad(q, [(0, 0)] * len(lead) + [(0, pad_q), (0, 0)]) \
+        .astype(jnp.float32) * scale
+    kp = jnp.pad(k, [(0, 0)] * len(lead) + [(0, pad_k), (0, 0)]) \
+        .astype(jnp.float32)
+    vp = jnp.pad(v, [(0, 0)] * len(lead) + [(0, pad_k), (0, 0)]) \
+        .astype(jnp.float32)
+    nq, nk = qp.shape[-2] // blk, kp.shape[-2] // blk
+    aligned = sq == sk
+    qoff = sk - sq                      # right alignment for decode chunks
+    wband = None
+    if window is not None and aligned:
+        wband = -(-window // blk)
+    qi_arr, kj_arr = _pairs(nq, nk, causal=causal, aligned=aligned,
+                            wband=wband)
+
+    O = jnp.zeros(qp.shape, jnp.float32)
+    LSE = jnp.full((*lead, nq * blk), NEG_INF, jnp.float32)
+
+    def body(carry, inp):
+        m, l, acc, O, LSE = carry
+        qi, kj = inp
+        reset = _is_first(kj, qi, causal, aligned, wband)
+        m = jnp.where(reset, jnp.full_like(m, NEG_INF), m)
+        l = jnp.where(reset, jnp.zeros_like(l), l)
+        acc = jnp.where(reset, jnp.zeros_like(acc), acc)
+        qb = lax.dynamic_slice_in_dim(qp, qi * blk, blk, -2)
+        kb = lax.dynamic_slice_in_dim(kp, kj * blk, blk, -2)
+        vb = lax.dynamic_slice_in_dim(vp, kj * blk, blk, -2)
+        s = jnp.einsum("...qd,...kd->...qk", qb, kb)
+        mask = _block_mask(qi, kj, blk, sq, sk, qoff, causal=causal,
+                           window=window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] \
+            + jnp.einsum("...qk,...kd->...qd", p, vb)
+        # write the running result every pair; the last pair of this
+        # q-block overwrites with the complete value (in-place DUS)
+        safe = jnp.where(l > 0, l, 1.0)
+        O = lax.dynamic_update_slice_in_dim(O, acc / safe[..., None],
+                                            qi * blk, -2)
+        LSE = lax.dynamic_update_slice_in_dim(
+            LSE, m_new + jnp.log(safe), qi * blk, -1)
+        return (m_new, l, acc, O, LSE), None
+
+    init = (jnp.full((*lead, blk), NEG_INF, jnp.float32),
+            jnp.zeros((*lead, blk), jnp.float32),
+            jnp.zeros((*lead, blk, d), jnp.float32), O, LSE)
+    (_, _, _, O, LSE), _ = lax.scan(
+        body, init, (jnp.asarray(qi_arr), jnp.asarray(kj_arr)))
+    out = O[..., :sq, :].astype(q.dtype)
+    return out, (q, k, v, out, LSE[..., :sq])
+
+
+def _is_first(kj, qi, causal, aligned, wband):
+    """Is (qi, kj) the first pair of q-block qi in the schedule?"""
+    if wband is not None:
+        return kj == jnp.maximum(qi - wband, 0)
+    return kj == 0
+
+
+def _fwd_vjp(q, k, v, causal, window, scale, blk):
+    out, res = _fwd(q, k, v, causal, window, scale, blk)
+    return out, res
+
+
+def _bwd_vjp(causal, window, scale, blk, res, dout):
+    q, k, v, out, lse = res
+    lead = q.shape[:-2]
+    sq, d = q.shape[-2:]
+    sk = k.shape[-2]
+    scale_v = scale if scale is not None else d ** -0.5
+    blk_ = min(blk, sq, sk)
+    pad_q = (-sq) % blk_
+    pad_k = (-sk) % blk_
+
+    def padq(t, fill=0.0):
+        return jnp.pad(t.astype(jnp.float32),
+                       [(0, 0)] * len(lead) + [(0, pad_q), (0, 0)])
+
+    qp = padq(q)
+    dop = padq(dout)
+    op = padq(out)
+    kp = jnp.pad(k.astype(jnp.float32),
+                 [(0, 0)] * len(lead) + [(0, pad_k), (0, 0)])
+    vp = jnp.pad(v.astype(jnp.float32),
+                 [(0, 0)] * len(lead) + [(0, pad_k), (0, 0)])
+    lsep = jnp.pad(lse.astype(jnp.float32),
+                   [(0, 0)] * len(lead) + [(0, pad_q)],
+                   constant_values=NEG_INF)
+    delta = (dop * op).sum(-1)                           # (..., Sq')
+    nq, nk = qp.shape[-2] // blk_, kp.shape[-2] // blk_
+    aligned = sq == sk
+    qoff = sk - sq
+    wband = None
+    if window is not None and aligned:
+        wband = -(-window // blk_)
+    qi_arr, kj_arr = _pairs(nq, nk, causal=causal, aligned=aligned,
+                            wband=wband)
+
+    dQ = jnp.zeros(qp.shape, jnp.float32)
+    dK = jnp.zeros(kp.shape, jnp.float32)
+    dV = jnp.zeros(vp.shape, jnp.float32)
+
+    def body(carry, inp):
+        dq_acc, dQ, dK, dV = carry
+        qi, kj = inp
+        reset = _is_first(kj, qi, causal, aligned, wband)
+        dq_acc = jnp.where(reset, jnp.zeros_like(dq_acc), dq_acc)
+        qb = lax.dynamic_slice_in_dim(qp, qi * blk_, blk_, -2)
+        kb = lax.dynamic_slice_in_dim(kp, kj * blk_, blk_, -2)
+        vb = lax.dynamic_slice_in_dim(vp, kj * blk_, blk_, -2)
+        dob = lax.dynamic_slice_in_dim(dop, qi * blk_, blk_, -2)
+        lse_b = lax.dynamic_slice_in_dim(lsep, qi * blk_, blk_, -1)
+        delta_b = lax.dynamic_slice_in_dim(delta, qi * blk_, blk_, -1)
+        s = jnp.einsum("...qd,...kd->...qk", qb, kb) * scale_v
+        mask = _block_mask(qi, kj, blk_, sq, sk, qoff, causal=causal,
+                           window=window)
+        p = jnp.where(mask, jnp.exp(s - lse_b[..., None]), 0.0)
+        dv_c = jnp.einsum("...qk,...qd->...kd", p, dob)
+        dp = jnp.einsum("...qd,...kd->...qk", dob, vb)
+        ds = p * (dp - delta_b[..., None]) * scale_v
+        dq_acc = dq_acc + jnp.einsum("...qk,...kd->...qd", ds, kb)
+        dk_c = jnp.einsum("...qk,...qd->...kd", ds, qb)
+        # dq: overwrite-style (complete at the last pair of the q-block)
+        dQ = lax.dynamic_update_slice_in_dim(dQ, dq_acc, qi * blk_, -2)
+        # dk/dv: read-modify-write accumulation at the kv block
+        dK = lax.dynamic_update_slice_in_dim(
+            dK, lax.dynamic_slice_in_dim(dK, kj * blk_, blk_, -2) + dk_c,
+            kj * blk_, -2)
+        dV = lax.dynamic_update_slice_in_dim(
+            dV, lax.dynamic_slice_in_dim(dV, kj * blk_, blk_, -2) + dv_c,
+            kj * blk_, -2)
+        return (dq_acc, dQ, dK, dV), None
+
+    init = (jnp.zeros((*lead, blk_, d), jnp.float32), dQ, dK, dV)
+    (_, dQ, dK, dV), _ = lax.scan(
+        body, init, (jnp.asarray(qi_arr), jnp.asarray(kj_arr)))
+    return (dQ[..., :sq, :].astype(q.dtype),
+            dK[..., :sk, :].astype(k.dtype),
+            dV[..., :sk, :].astype(v.dtype))
+
+
+flash_attention_ref.defvjp(_fwd_vjp, _bwd_vjp)

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+The ``model`` axis is the *lane* axis (paper C1): 16 lanes per pod, each
+lane = 16 chips of the ``data`` ring.  A production pod is a 16×16 slice of
+a TPU v5e torus (256 chips); the multi-pod mesh stacks 2 pods on the ``pod``
+axis (512 chips), which is the axis the inter-pod (DCN/ICI) hierarchical
+reduction (C4) crosses.
+
+Defined as functions, not module constants, so importing this module never
+touches jax device state (the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first init).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+SINGLE_POD_SHAPE = (16, 16)
+MULTI_POD_SHAPE = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = MULTI_POD_SHAPE if multi_pod else SINGLE_POD_SHAPE
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(shape))
+
+
+def make_test_mesh(shape=(1, 1), axes=("data", "model")) -> Mesh:
+    """Small mesh over however many (CPU) devices the test process has."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(shape))
+
+
+def chips(mesh: Mesh) -> int:
+    return mesh.devices.size

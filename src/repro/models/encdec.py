@@ -1,0 +1,254 @@
+"""Whisper-style encoder-decoder backbone (conv frontend stubbed).
+
+``input_specs`` supplies precomputed frame embeddings (B, enc_seq, d) — the
+two conv layers + GELU of the real frontend are out of backbone scope per
+the assignment.  Encoder: bidirectional self-attention + GELU MLP with
+LayerNorm (faithful to Whisper).  Decoder: causal self-attention +
+cross-attention against the encoder output; cross K/V are computed once at
+prefill and reused for every decode step (a chaining/caching win: the
+encoder is never re-run).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import lanes
+from repro.models import layers as L
+from repro.models import transformer as T
+
+RULES = L.RULES
+
+
+def enc_layer_init(key, cfg) -> dict:
+    ka, km = jax.random.split(key)
+    return {
+        "ln1": L.layernorm_init(cfg.d_model, cfg.pdtype),
+        "attn": L.attention_init(ka, cfg, cfg.pdtype),
+        "ln2": L.layernorm_init(cfg.d_model, cfg.pdtype),
+        "mlp": L.mlp_init(km, cfg.d_model, cfg.d_ff, "gelu", cfg.pdtype),
+    }
+
+
+def enc_layer_apply(p, cfg, x, extra=None, *, rules=RULES):
+    h = L.layernorm(p["ln1"], x, cfg.rms_eps)
+    x = x + L.attention(p["attn"], cfg, h, positions=None, causal=False,
+                        rules=rules)
+    h = L.layernorm(p["ln2"], x, cfg.rms_eps)
+    x = x + L.mlp(p["mlp"], cfg, h, act="gelu", rules=rules)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def dec_layer_init(key, cfg) -> dict:
+    ka, kc, km = jax.random.split(key, 3)
+    return {
+        "ln1": L.layernorm_init(cfg.d_model, cfg.pdtype),
+        "self_attn": L.attention_init(ka, cfg, cfg.pdtype),
+        "ln_x": L.layernorm_init(cfg.d_model, cfg.pdtype),
+        "cross_attn": L.attention_init(kc, cfg, cfg.pdtype),
+        "ln2": L.layernorm_init(cfg.d_model, cfg.pdtype),
+        "mlp": L.mlp_init(km, cfg.d_model, cfg.d_ff, "gelu", cfg.pdtype),
+    }
+
+
+def _cross_kv(p, cfg, enc_out):
+    """Per-layer cross-attention K/V from the encoder output."""
+    b, se, _ = enc_out.shape
+    adt = cfg.adtype
+    k = L._dot(enc_out, p["cross_attn"]["wk"], adt) \
+        .reshape(b, se, cfg.n_kv_heads, cfg.hd)
+    v = L._dot(enc_out, p["cross_attn"]["wv"], adt) \
+        .reshape(b, se, cfg.n_kv_heads, cfg.hd)
+    return k, v
+
+
+def dec_layer_apply(p, cfg, x, cross_kv, *, positions=None, rules=RULES):
+    # positions unused: Whisper relies on learned absolute embeddings, no RoPE
+    h = L.layernorm(p["ln1"], x, cfg.rms_eps)
+    x = x + L.attention(p["self_attn"], cfg, h, positions=None,
+                        causal=True, rules=rules)
+    h = L.layernorm(p["ln_x"], x, cfg.rms_eps)
+    x = x + L.attention(p["cross_attn"], cfg, h, positions=None,
+                        causal=False, kv=cross_kv, rules=rules)
+    h = L.layernorm(p["ln2"], x, cfg.rms_eps)
+    x = x + L.mlp(p["mlp"], cfg, h, act="gelu", rules=rules)
+    return x, jnp.zeros((), jnp.float32)
+
+
+class EncDecLM:
+    """Whisper-backbone driver matching the LM interface where possible."""
+
+    def __init__(self, cfg, rules=RULES):
+        self.cfg = cfg
+        self.rules = rules
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ke, kenc, kdec, kh, kp = jax.random.split(key, 5)
+        return {
+            "embed": L.embed_init(ke, cfg.vocab, cfg.d_model, cfg.pdtype),
+            "pos_embed": (jax.random.normal(kp, (cfg.max_seq, cfg.d_model))
+                          * 0.01).astype(cfg.pdtype),
+            "enc_layers": T.stack_init(
+                kenc, _with_layers(cfg, cfg.n_enc_layers), enc_layer_init),
+            "enc_norm": L.layernorm_init(cfg.d_model, cfg.pdtype),
+            "dec_layers": T.stack_init(kdec, cfg, dec_layer_init),
+            "dec_norm": L.layernorm_init(cfg.d_model, cfg.pdtype),
+            "lm_head": L.embed_init(kh, cfg.vocab, cfg.d_model,
+                                    cfg.pdtype).T,
+        }
+
+    def head(self, params):
+        return params["lm_head"]
+
+    def encode(self, params, frames, *, remat: str = "full"):
+        """frames: (B, enc_seq, d) precomputed frame embeddings (stub)."""
+        cfg = self.cfg
+        x = frames.astype(cfg.adtype) \
+            + L.sinusoidal_positions(frames.shape[1], cfg.d_model) \
+            .astype(cfg.adtype)
+        x = lanes.constrain(x, self.rules, "batch", None, "embed")
+        x, _ = T.stack_forward(
+            params["enc_layers"], cfg, x,
+            layer_apply=lambda p, c, xx, extra: enc_layer_apply(
+                p, c, xx, rules=self.rules),
+            remat=remat)
+        return L.layernorm(params["enc_norm"], x, cfg.rms_eps)
+
+    def decode_hidden(self, params, tokens, enc_out, *, remat: str = "full"):
+        cfg = self.cfg
+        b, s = tokens.shape
+        x = L.embed_lookup(params["embed"], tokens, self.rules)
+        x = x + params["pos_embed"][None, :s].astype(x.dtype)
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+        def apply(p, c, xx, extra):
+            ckv = _cross_kv(p, c, enc_out)
+            return dec_layer_apply(p, c, xx, ckv, positions=positions,
+                                   rules=self.rules)
+
+        x, _ = T.stack_forward(params["dec_layers"], cfg, x,
+                               layer_apply=apply, remat=remat)
+        return L.layernorm(params["dec_norm"], x, cfg.rms_eps)
+
+    def loss_fn(self, params, batch, *, remat: str = "full",
+                ce_block: int = 512):
+        enc_out = self.encode(params, batch["frames"], remat=remat)
+        h = self.decode_hidden(params, batch["tokens"], enc_out, remat=remat)
+        ce = L.blockwise_cross_entropy(self.head(params), h, batch["labels"],
+                                       batch.get("loss_mask"),
+                                       block=ce_block, rules=self.rules)
+        return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+    # -- serving -----------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        kv = L.init_kv_cache(cfg, batch, max_seq)
+        cross = {
+            "k": jnp.zeros((batch, cfg.enc_seq, cfg.n_kv_heads, cfg.hd),
+                           cfg.adtype),
+            "v": jnp.zeros((batch, cfg.enc_seq, cfg.n_kv_heads, cfg.hd),
+                           cfg.adtype),
+        }
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)),
+            {"self": kv, "cross": cross})
+
+    def prefill(self, params, tokens, cache, *, frames=None,
+                remat: str = "full"):
+        """Encoder pass + decoder prompt pass; fills self+cross caches."""
+        cfg = self.cfg
+        enc_out = self.encode(params, frames, remat=remat)
+        b, s = tokens.shape
+        x = L.embed_lookup(params["embed"], tokens, self.rules)
+        x = x + params["pos_embed"][None, :s].astype(x.dtype)
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+        def block(x, inp):
+            lp, cache_l = inp
+            h = L.layernorm(lp["ln1"], x, cfg.rms_eps)
+            # learned positions already added to x; no RoPE in Whisper
+            q, k, v = L._project_qkv(lp["self_attn"], cfg, h, None,
+                                     self.rules)
+            from repro.kernels import ops
+            nh, hd = cfg.n_heads, cfg.hd
+            group = nh // cfg.n_kv_heads
+            # 4-D (B, H, S, hd), heads separate — see layers.attention
+            qf = q.transpose(0, 2, 1, 3)
+            kf = jnp.repeat(k, group, 2).transpose(0, 2, 1, 3)
+            vf = jnp.repeat(v, group, 2).transpose(0, 2, 1, 3)
+            qf = lanes.constrain(qf, self.rules, "batch", "heads",
+                                 None, None)
+            kf = lanes.constrain(kf, self.rules, "batch", "heads",
+                                 None, None)
+            vf = lanes.constrain(vf, self.rules, "batch", "heads",
+                                 None, None)
+            of = ops.attention(qf, kf, vf, causal=True,
+                               impl="naive")   # prefill: no bwd
+            x = x + L._dot(of.transpose(0, 2, 1, 3).reshape(b, s, -1),
+                           lp["self_attn"]["wo"], cfg.adtype)
+            ck, cv = _cross_kv(lp, cfg, enc_out)
+            h2 = L.layernorm(lp["ln_x"], x, cfg.rms_eps)
+            x = x + L.attention(lp["cross_attn"], cfg, h2, positions=None,
+                                causal=False, kv=(ck, cv), rules=self.rules)
+            h3 = L.layernorm(lp["ln2"], x, cfg.rms_eps)
+            x = x + L.mlp(lp["mlp"], cfg, h3, act="gelu", rules=self.rules)
+            new_cache = {
+                "self": {
+                    "k": lax.dynamic_update_slice(
+                        cache_l["self"]["k"],
+                        k.astype(cache_l["self"]["k"].dtype), (0, 0, 0, 0)),
+                    "v": lax.dynamic_update_slice(
+                        cache_l["self"]["v"],
+                        v.astype(cache_l["self"]["v"].dtype), (0, 0, 0, 0)),
+                },
+                "cross": {"k": ck.astype(cfg.adtype),
+                          "v": cv.astype(cfg.adtype)},
+            }
+            return x, new_cache
+
+        x, new_cache = lax.scan(block, x, (params["dec_layers"], cache))
+        h = L.layernorm(params["dec_norm"], x, cfg.rms_eps)
+        logits = jnp.dot(h[:, -1], self.head(params),
+                         preferred_element_type=jnp.float32)
+        return logits, new_cache
+
+    def decode_step(self, params, token_t, cache, pos):
+        cfg = self.cfg
+        b = token_t.shape[0]
+        x_t = L.embed_lookup(params["embed"], token_t[:, None],
+                             self.rules)[:, 0]
+        x_t = x_t + params["pos_embed"][pos].astype(x_t.dtype)
+
+        def block(x_t, inp):
+            lp, cache_l = inp
+            h = L.layernorm(lp["ln1"], x_t, cfg.rms_eps)
+            a, kv = L.attention_decode(lp["self_attn"], cfg, h,
+                                       cache_l["self"], pos, use_rope=False,
+                                       rules=self.rules)
+            x_t = x_t + a
+            h2 = L.layernorm(lp["ln_x"], x_t, cfg.rms_eps)
+            c, _ = L.attention_decode(
+                lp["cross_attn"], cfg, h2, cache_l["cross"], pos,
+                layer_kv=(cache_l["cross"]["k"], cache_l["cross"]["v"]),
+                rules=self.rules)
+            x_t = x_t + c
+            h3 = L.layernorm(lp["ln2"], x_t, cfg.rms_eps)
+            x_t = x_t + L.mlp(lp["mlp"], cfg, h3, act="gelu",
+                              rules=self.rules)
+            return x_t, {"self": kv, "cross": cache_l["cross"]}
+
+        x_t, new_cache = lax.scan(block, x_t, (params["dec_layers"], cache))
+        h = L.layernorm(params["dec_norm"], x_t, cfg.rms_eps)
+        logits = jnp.dot(h, self.head(params),
+                         preferred_element_type=jnp.float32)
+        return logits, new_cache
+
+
+def _with_layers(cfg, n):
+    import dataclasses
+    return dataclasses.replace(cfg, n_layers=n)

@@ -1,0 +1,97 @@
+"""Hymba-style hybrid layer: parallel attention + SSM heads [arXiv:2411.13676].
+
+Each layer runs an attention branch and a Mamba2 (SSD) branch on the same
+input in parallel, normalises each branch output and averages them, then a
+gated MLP.  Per the Hymba recipe, most layers use sliding-window attention
+(cfg.attn_window) and ``n_global_layers`` layers (first / middle / last) use
+full attention — expressed as a per-layer window array threaded through the
+scanned stack (``layer_xs``), so the single compiled layer body serves both.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba2
+
+RULES = L.RULES
+
+
+def window_schedule(cfg) -> jax.Array:
+    """(L,) int32: per-layer attention window; >= max_seq means global."""
+    lcount = cfg.n_layers
+    glob = {0, lcount // 2, lcount - 1} if cfg.n_global_layers >= 3 \
+        else set(range(cfg.n_global_layers))
+    win = [cfg.max_seq + 1 if i in glob else cfg.attn_window
+           for i in range(lcount)]
+    return jnp.asarray(win, jnp.int32)
+
+
+def hybrid_layer_init(key, cfg) -> dict:
+    ka, km, kmlp = jax.random.split(key, 3)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model, cfg.pdtype),
+        "attn": L.attention_init(ka, cfg, cfg.pdtype),
+        "attn_norm": L.rmsnorm_init(cfg.d_model, cfg.pdtype),
+        "mamba": mamba2.mamba_params_init(km, cfg),
+        "mamba_norm": L.rmsnorm_init(cfg.d_model, cfg.pdtype),
+        "ln2": L.rmsnorm_init(cfg.d_model, cfg.pdtype),
+        "mlp": L.mlp_init(kmlp, cfg.d_model, cfg.d_ff, cfg.act, cfg.pdtype),
+    }
+
+
+def hybrid_layer_apply(p, cfg, x, extra, *, positions, rules=RULES):
+    """extra: per-layer window (traced int32 scalar from window_schedule)."""
+    h = L.rmsnorm(p["ln1"], x, cfg.rms_eps)
+    a = L.attention(p["attn"], cfg, h, positions=positions, causal=True,
+                    window=extra, rules=rules)
+    m = mamba2.mamba_apply(p["mamba"], cfg, h, rules=rules)
+    mix = 0.5 * (L.rmsnorm(p["attn_norm"], a, cfg.rms_eps)
+                 + L.rmsnorm(p["mamba_norm"], m, cfg.rms_eps))
+    x = x + mix
+    h2 = L.rmsnorm(p["ln2"], x, cfg.rms_eps)
+    x = x + L.mlp(p["mlp"], cfg, h2, rules=rules)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def hybrid_layer_decode(p, cfg, x_t, cache, pos, extra, *, rules=RULES):
+    h = L.rmsnorm(p["ln1"], x_t, cfg.rms_eps)
+    a, kv_cache = L.attention_decode(p["attn"], cfg, h, cache["kv"], pos,
+                                     window=extra, rules=rules)
+    m, m_cache = mamba2.mamba_decode_step(p["mamba"], cfg, h, cache["mamba"],
+                                          rules=rules)
+    mix = 0.5 * (L.rmsnorm(p["attn_norm"], a, cfg.rms_eps)
+                 + L.rmsnorm(p["mamba_norm"], m, cfg.rms_eps))
+    x_t = x_t + mix
+    h2 = L.rmsnorm(p["ln2"], x_t, cfg.rms_eps)
+    x_t = x_t + L.mlp(p["mlp"], cfg, h2, rules=rules)
+    return x_t, {"kv": kv_cache, "mamba": m_cache}
+
+
+def init_hybrid_cache(cfg, batch: int, max_seq: int) -> dict:
+    return {
+        "kv": L.init_kv_cache(cfg, batch, max_seq),
+        "mamba": mamba2.init_ssm_cache(cfg, batch, max_seq),
+    }
+
+
+def hybrid_prefill_layer(p, cfg, x, cache_l, positions, extra, *,
+                         rules=RULES):
+    """Prefill both branches: attention KV fill + SSD state carry-out."""
+    from repro.models import transformer as T
+    h = L.rmsnorm(p["ln1"], x, cfg.rms_eps)
+    a, kv_cache = T.attention_prefill(p["attn"], cfg, h, cache_l["kv"],
+                                      positions, window=extra, rules=rules)
+    m, (state, conv_tail) = mamba2.mamba_apply(p["mamba"], cfg, h,
+                                               rules=rules,
+                                               return_state=True)
+    mix = 0.5 * (L.rmsnorm(p["attn_norm"], a, cfg.rms_eps)
+                 + L.rmsnorm(p["mamba_norm"], m, cfg.rms_eps))
+    x = x + mix
+    h2 = L.rmsnorm(p["ln2"], x, cfg.rms_eps)
+    x = x + L.mlp(p["mlp"], cfg, h2, rules=rules)
+    new_cache = {"kv": kv_cache,
+                 "mamba": {"ssm": state,
+                           "conv": conv_tail.astype(cfg.adtype)}}
+    return x, new_cache

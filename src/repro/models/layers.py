@@ -1,0 +1,416 @@
+"""Shared transformer layers: norms, RoPE, GQA attention, MLPs.
+
+Pure-function style: parameters are nested dicts of jnp arrays, every layer
+is ``fn(params, cfg, x, ...) -> y``.  Matmuls accumulate in f32 and cast
+back to the activation dtype (cfg.act_dtype).  Sharding is expressed through
+``core.lanes`` logical-axis constraints so the same code runs on 1-device
+CPU tests and on the production mesh.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.core import lanes
+from repro.kernels import ops
+
+RULES = lanes.LogicalRules()
+
+
+def _dot(x, w, adtype):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(adtype)
+
+
+# TP-boundary reduction lowering (§Perf iterations 4-5):
+#   "auto"         — GSPMD decides; boundary dots keep f32 partials, so the
+#                    lane all-reduce moves f32 (baseline).
+#   "bf16_dot"     — boundary dots emit 16-bit partials (XLA still
+#                    accumulates the within-chip contraction in f32), so
+#                    GSPMD's all-reduce and every backward cotangent
+#                    collective at the boundary moves 16-bit — half the
+#                    wire, same schedule (it5, CONFIRMED).
+#   "bf16_scatter" — explicit nested shard_map: local partial matmul →
+#                    16-bit psum_scatter over the sequence dim.  On paper
+#                    4× less wire; in practice the shard_map boundary
+#                    blocks GSPMD propagation and the surrounding gathers
+#                    blow up (it4, REFUTED — kept for the record).
+TP_REDUCE: str = "auto"
+
+
+def set_tp_reduce(mode: str) -> None:
+    global TP_REDUCE
+    if mode not in ("auto", "bf16_dot", "bf16_scatter"):
+        raise ValueError(mode)
+    TP_REDUCE = mode
+
+
+def tp_boundary_dot(h, w, adtype, rules):
+    """Lane-contracted projection at a TP boundary: out = h @ w, with the
+    contraction dim lane-sharded.  Output is seq_tp-sharded (or replicated
+    when seq_tp is off / no lane axis is present)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    use_explicit = (
+        TP_REDUCE == "bf16_scatter" and h.ndim == 3
+        and mesh is not None and not mesh.empty
+        and lanes.LANE_AXIS in mesh.axis_names
+        and mesh.shape[lanes.LANE_AXIS] > 1
+        and h.shape[1] % mesh.shape[lanes.LANE_AXIS] == 0
+        and h.shape[-1] % mesh.shape[lanes.LANE_AXIS] == 0
+        and mesh.axis_types[mesh.axis_names.index(lanes.LANE_AXIS)]
+        != jax.sharding.AxisType.Manual)
+    if not use_explicit:
+        seq_ax = "seq_tp" if h.ndim == 3 else None
+        if TP_REDUCE == "bf16_dot":
+            # 16-bit partials: the lane psum and its bwd move 2 B/elem
+            out = jnp.dot(h, w, preferred_element_type=adtype)
+            return lanes.constrain(out, rules, "batch", seq_ax, "embed")
+        # constrain AFTER the cast: the sharding-change point (where GSPMD
+        # inserts bwd cotangent collectives) is then 16-bit, not f32 (it6)
+        out = jnp.dot(h, w,
+                      preferred_element_type=jnp.float32).astype(adtype)
+        return lanes.constrain(out, rules, "batch", seq_ax, "embed")
+
+    from jax.sharding import PartitionSpec as P
+
+    # 16-bit wire dtype.  On TPU this is bf16; the CPU XLA backend
+    # miscompiles bf16 tiled collectives ("invalid binary opcode copy"),
+    # so the CPU validation/dry-run path uses IEEE f16 — same wire bytes.
+    wire_dt = jnp.bfloat16 if jax.default_backend() == "tpu" else jnp.float16
+
+    def body(h_loc, w_loc):
+        part = jnp.dot(h_loc, w_loc,
+                       preferred_element_type=jnp.float32).astype(wire_dt)
+        out = jax.lax.psum_scatter(part, lanes.LANE_AXIS,
+                                   scatter_dimension=1, tiled=True)
+        return out.astype(adtype)
+
+    out = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, None, lanes.LANE_AXIS), P(lanes.LANE_AXIS, None)),
+        out_specs=P(None, lanes.LANE_AXIS, None),
+        axis_names={lanes.LANE_AXIS}, check_vma=False)(h, w)
+    return lanes.constrain(out, rules, "batch", "seq_tp", "embed")
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd), positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                         # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, optional qk_norm / sliding window)
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(kq, (d, cfg.n_heads * hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(kk, (d, cfg.n_kv_heads * hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(kv, (d, cfg.n_kv_heads * hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(ko, (cfg.n_heads * hd, d))
+               * (cfg.n_heads * hd) ** -0.5).astype(dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _project_qkv(p, cfg, x, positions, rules):
+    b, s, d = x.shape
+    hd, nh, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    adt = cfg.adtype
+    q = _dot(x, p["wq"], adt).reshape(b, s, nh, hd)
+    k = _dot(x, p["wk"], adt).reshape(b, s, nkv, hd)
+    v = _dot(x, p["wv"], adt).reshape(b, s, nkv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.rms_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.rms_eps)
+    if positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = lanes.constrain(q, rules, "batch", None, "heads", None)
+    # k/v deliberately unconstrained here: the training/prefill consumer is
+    # the GQA head-expansion (16-way "heads"); the decode cache write is
+    # "kv_heads"-sharded.  Constraining both directions here would force a
+    # reshard (see attention() below); GSPMD propagates from the consumer.
+    return q, k, v
+
+
+def attention(p: dict, cfg, x: jax.Array, *, positions: jax.Array,
+              causal: bool = True, window: Optional[int] = None,
+              rules=RULES, kv: Optional[tuple] = None) -> jax.Array:
+    """Full-sequence attention (train/prefill). x: (B, S, d).
+
+    ``kv``: optional externally-computed (k, v) with their own positions —
+    used for enc-dec cross-attention (then ``causal=False``).
+    """
+    b, s, d = x.shape
+    hd, nh, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q, k, v = (None, None, None)
+    if kv is None:
+        q, k, v = _project_qkv(p, cfg, x, positions, rules)
+    else:
+        adt = cfg.adtype
+        q = _dot(x, p["wq"], adt).reshape(b, s, nh, hd)
+        if cfg.qk_norm:
+            q = rmsnorm(p["q_norm"], q, cfg.rms_eps)
+        if positions is not None:
+            q = rope(q, positions, cfg.rope_theta)
+        k, v = kv
+    group = nh // nkv
+    sk = k.shape[1]
+    # Expand KV heads to query heads (GQA), then move heads to a *separate*
+    # leading axis, constrained to the lane axis.  Two GSPMD pitfalls are
+    # avoided here (both observed as ~lane-count× FLOP inflation in the
+    # dry-run HLO): (1) constraining the unexpanded KV (nkv < lanes) forces
+    # an 8→16-way reshard = involuntary full rematerialization; (2) folding
+    # (B·H) into one dim makes the data×model product sharding
+    # inexpressible, so the partitioner replicates attention over lanes.
+    k = jnp.repeat(k, group, axis=2)
+    v = jnp.repeat(v, group, axis=2)
+    qf = q.transpose(0, 2, 1, 3)                 # (B, H, Sq, hd)
+    kf = k.transpose(0, 2, 1, 3)
+    vf = v.transpose(0, 2, 1, 3)
+    qf = lanes.constrain(qf, rules, "batch", "heads", None, None)
+    kf = lanes.constrain(kf, rules, "batch", "heads", None, None)
+    vf = lanes.constrain(vf, rules, "batch", "heads", None, None)
+    of = ops.attention(qf, kf, vf, causal=causal, window=window)
+    of = lanes.constrain(of, rules, "batch", "heads", None, None)
+    o = of.transpose(0, 2, 1, 3)
+    out = tp_boundary_dot(o.reshape(b, s, nh * hd), p["wo"], cfg.adtype,
+                          rules)
+    # named so the "save_tp" remat policy can keep exactly the TP-boundary
+    # activations (post-reduce, bf16, seq-sharded under SP) and skip
+    # replaying the per-layer collectives during backward recompute
+    return checkpoint_name(out, "tp_boundary")
+
+
+def attention_decode(p: dict, cfg, x_t: jax.Array, cache: dict,
+                     pos: jax.Array, *, window: Optional[int] = None,
+                     layer_kv: Optional[tuple] = None, use_rope: bool = True,
+                     rules=RULES) -> tuple[jax.Array, dict]:
+    """One decode step. x_t: (B, d); pos: (B,) next position per sample.
+
+    ``cache``: {"k": (B, Smax, KVH, hd), "v": ...} — updated functionally.
+    ``layer_kv``: static cross-attention KV (enc-dec) — cache unused then.
+    """
+    b, d = x_t.shape
+    hd, nh, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    adt = cfg.adtype
+    q = _dot(x_t, p["wq"], adt).reshape(b, 1, nh, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.rms_eps)
+    if layer_kv is None:
+        k_t = _dot(x_t, p["wk"], adt).reshape(b, 1, nkv, hd)
+        v_t = _dot(x_t, p["wv"], adt).reshape(b, 1, nkv, hd)
+        if cfg.qk_norm:
+            k_t = rmsnorm(p["k_norm"], k_t, cfg.rms_eps)
+        if use_rope:
+            q = rope(q, pos[:, None], cfg.rope_theta)
+            k_t = rope(k_t, pos[:, None], cfg.rope_theta)
+        # scatter the new KV at per-sample positions
+        bidx = jnp.arange(b)
+        ck = cache["k"].at[bidx, pos].set(k_t[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[bidx, pos].set(v_t[:, 0].astype(cache["v"].dtype))
+        cache = {"k": ck, "v": cv}
+        k_all, v_all = ck, cv
+        kv_len_mask_pos = pos
+    else:
+        k_all, v_all = layer_kv
+        kv_len_mask_pos = None
+    skv = k_all.shape[1]
+    group = nh // nkv
+    # logits: (B, nh, Skv) via per-kv-head grouping
+    qh = q[:, 0].reshape(b, nkv, group, hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qh.astype(jnp.float32),
+                        k_all.astype(jnp.float32)) * (hd ** -0.5)
+    kpos = jnp.arange(skv)
+    if kv_len_mask_pos is not None:
+        mask = kpos[None] <= kv_len_mask_pos[:, None]          # causal
+        if window is not None:
+            mask &= kpos[None] > (kv_len_mask_pos[:, None] - window)
+        scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", probs,
+                   v_all.astype(jnp.float32)).astype(adt)
+    out = _dot(o.reshape(b, nh * hd), p["wo"], adt)
+    return out, cache
+
+
+def init_kv_cache(cfg, batch: int, max_seq: int, dtype=None) -> dict:
+    dtype = dtype or cfg.adtype
+    return {
+        "k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.hd), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int, act: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = d ** -0.5, d_ff ** -0.5
+    p = {
+        "w_up": (jax.random.normal(k1, (d, d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k2, (d_ff, d)) * s_out).astype(dtype),
+    }
+    if act == "silu_gated":
+        p["w_gate"] = (jax.random.normal(k3, (d, d_ff)) * s_in).astype(dtype)
+    return p
+
+
+def mlp(p: dict, cfg, x: jax.Array, *, act: Optional[str] = None,
+        rules=RULES) -> jax.Array:
+    act = act or cfg.act
+    adt = cfg.adtype
+    mid = (None,) * (x.ndim - 2)     # rank-agnostic: (B,S,d) or (B,d)
+    up = _dot(x, p["w_up"], adt)
+    up = lanes.constrain(up, rules, "batch", *mid, "ffn")
+    if act == "silu_gated":
+        gate = _dot(x, p["w_gate"], adt)
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(adt) * up
+    elif act == "relu2":
+        r = jax.nn.relu(up.astype(jnp.float32))
+        h = (r * r).astype(adt)
+    elif act == "gelu":
+        h = jax.nn.gelu(up.astype(jnp.float32)).astype(adt)
+    else:
+        raise ValueError(f"unknown act {act!r}")
+    if x.ndim == 3:
+        out = tp_boundary_dot(h, p["w_down"], adt, rules)
+        return checkpoint_name(out, "tp_boundary")
+    out32 = jnp.dot(h, p["w_down"], preferred_element_type=jnp.float32)
+    out32 = lanes.constrain(out32, rules, "batch", *mid, "embed")
+    return out32.astype(adt)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / LM head / losses
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d)) * d ** -0.5).astype(dtype)
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array, rules=RULES) -> jax.Array:
+    out = table[tokens]
+    ax = "seq_tp" if tokens.ndim >= 2 and tokens.shape[-1] > 1 else None
+    return lanes.constrain(out, rules, "batch", ax, "embed")
+
+
+def lm_head_logits(w: jax.Array, x: jax.Array, rules=RULES) -> jax.Array:
+    logits = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    return lanes.constrain(logits, rules, "batch", None, "vocab_tp")
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token CE. logits (B,S,V) f32, labels (B,S) int32."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()
+
+
+def blockwise_cross_entropy(w_head: jax.Array, x: jax.Array,
+                            labels: jax.Array,
+                            mask: Optional[jax.Array] = None, *,
+                            block: int = 512, rules=RULES) -> jax.Array:
+    """CE fused with the LM head, scanned over sequence blocks.
+
+    Never materialises the (B, S, V) logits tensor — the LM-head matmul of
+    each block chains directly into its logsumexp reduction (C5 chaining at
+    the loss level).  This is the default for large-vocab configs.
+    """
+    b, s, d = x.shape
+    pad = (-s) % block
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask_full = jnp.pad(
+            mask if mask is not None else jnp.ones((b, s), jnp.float32),
+            ((0, 0), (0, pad)))
+    else:
+        mask_full = mask if mask is not None else jnp.ones((b, s), jnp.float32)
+    sp = x.shape[1]
+    nb = sp // block
+    xb = jnp.moveaxis(x.reshape(b, nb, block, d), 1, 0)
+    lb = jnp.moveaxis(labels.reshape(b, nb, block), 1, 0)
+    mb = jnp.moveaxis(mask_full.reshape(b, nb, block), 1, 0)
+
+    def body(carry, inp):
+        nll_sum, cnt = carry
+        xc, lc, mc = inp
+        logits = jnp.dot(xc, w_head, preferred_element_type=jnp.float32)
+        logits = lanes.constrain(logits, rules, "batch", None, "vocab_tp")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return (nll_sum + nll.sum(), cnt + mc.sum()), None
+
+    (nll_sum, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xb, lb, mb))
+    return nll_sum / jnp.maximum(cnt, 1.0)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10_000.0, dim / d)
+    pe = jnp.zeros((n, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle[:, : (d + 1) // 2]))
+    return pe

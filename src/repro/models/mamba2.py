@@ -1,0 +1,213 @@
+"""Mamba2 (SSD) layer — attention-free state-space stack [arXiv:2405.21060].
+
+The chunked SSD computation maps 1:1 onto the paper's execution model (see
+kernels/ssd.py): strip-mined chunks, lane-local dense work, a small state
+carried across strips.  Serving keeps an O(N·P) recurrent state per head —
+no KV cache — which is why this arch runs the long_500k cell.
+
+Layer: in-proj -> depthwise causal conv(4) on (x, B, C) -> SSD -> gated
+RMSNorm -> out-proj, as in the reference Mamba2 block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import lanes
+from repro.kernels import ops
+from repro.models import layers as L
+
+RULES = L.RULES
+
+
+def mamba_params_init(key, cfg) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    gn = s.n_groups * s.d_state
+    kz, kx, kb, kc, kdt, ko, kconv = jax.random.split(key, 7)
+    sc = d ** -0.5
+    dt = jnp.exp(jax.random.uniform(kdt, (nh,), minval=jnp.log(1e-3),
+                                    maxval=jnp.log(1e-1)))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))   # inverse softplus
+    return {
+        "w_z": (jax.random.normal(kz, (d, di)) * sc).astype(cfg.pdtype),
+        "w_x": (jax.random.normal(kx, (d, di)) * sc).astype(cfg.pdtype),
+        "w_B": (jax.random.normal(kb, (d, gn)) * sc).astype(cfg.pdtype),
+        "w_C": (jax.random.normal(kc, (d, gn)) * sc).astype(cfg.pdtype),
+        "w_dt": (jax.random.normal(kdt, (d, nh)) * sc).astype(cfg.pdtype),
+        "conv": (jax.random.normal(kconv, (s.conv_width, di + 2 * gn))
+                 * 0.1).astype(cfg.pdtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),          # A = -exp(A_log)
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": L.rmsnorm_init(di, cfg.pdtype),
+        "w_out": (jax.random.normal(ko, (di, d)) * di ** -0.5)
+        .astype(cfg.pdtype),
+    }
+
+
+def _causal_depthwise_conv(x, w):
+    """x: (B, S, C), w: (W, C) — causal depthwise conv along S."""
+    wlen = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (wlen - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(wlen):
+        out = out + xp[:, i:i + x.shape[1]].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def mamba_apply(p, cfg, x, *, rules=RULES, initial_state=None,
+                return_state: bool = False):
+    """x: (B, S, d) -> y (B, S, d) [+ (ssm_state, conv_tail)]."""
+    s = cfg.ssm
+    b, seq, d = x.shape
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    hd = s.headdim
+    gn = s.n_groups * s.d_state
+    n = s.d_state
+    adt = cfg.adtype
+
+    z = L._dot(x, p["w_z"], adt)                          # (B,S,di)
+    xin = L._dot(x, p["w_x"], adt)
+    Bv = L._dot(x, p["w_B"], adt)
+    Cv = L._dot(x, p["w_C"], adt)
+    dt = jnp.dot(x.astype(jnp.float32), p["w_dt"].astype(jnp.float32))
+
+    xbc_raw = jnp.concatenate([xin, Bv, Cv], axis=-1)
+    xbc = jax.nn.silu(_causal_depthwise_conv(xbc_raw, p["conv"])
+                      .astype(jnp.float32)).astype(adt)
+    xin, Bv, Cv = jnp.split(xbc, [di, di + gn], axis=-1)
+    xin = lanes.constrain(xin, rules, "batch", None, "ffn")
+
+    dt = jax.nn.softplus(dt + p["dt_bias"])               # (B,S,nh) f32
+    A = -jnp.exp(p["A_log"])                              # (nh,)
+    log_a = dt * A                                        # (B,S,nh)
+
+    # head split; fold dt into x (x̄ = dt * x)
+    xh = xin.reshape(b, seq, nh, hd).astype(jnp.float32) * dt[..., None]
+    # group -> head broadcast (n_groups=1): B/C shared across heads
+    Bh = jnp.broadcast_to(Bv.reshape(b, seq, s.n_groups, n)[:, :, :1],
+                          (b, seq, nh, n)) if s.n_groups == 1 else \
+        Bv.reshape(b, seq, s.n_groups, n).repeat(nh // s.n_groups, 2)
+    Ch = jnp.broadcast_to(Cv.reshape(b, seq, s.n_groups, n)[:, :, :1],
+                          (b, seq, nh, n)) if s.n_groups == 1 else \
+        Cv.reshape(b, seq, s.n_groups, n).repeat(nh // s.n_groups, 2)
+
+    def bh(t):   # (B,S,H,*) -> (B*H, S, *)
+        return t.transpose(0, 2, 1, 3).reshape(b * nh, seq, t.shape[-1])
+
+    y, state = ops.ssd(
+        bh(xh).astype(adt),
+        log_a.transpose(0, 2, 1).reshape(b * nh, seq),
+        bh(Bh).astype(adt), bh(Ch).astype(adt),
+        chunk=s.chunk, initial_state=initial_state)
+    y = y.reshape(b, nh, seq, hd).transpose(0, 2, 1, 3).astype(jnp.float32)
+    y = y + p["D"][None, None, :, None] * xh              # skip connection
+    y = y.reshape(b, seq, di).astype(adt)
+
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32))
+                  .astype(adt), cfg.rms_eps)
+    out = L._dot(y, p["w_out"], adt)
+    out = lanes.constrain(out, rules, "batch", None, "embed")
+    if return_state:
+        # conv state = last W-1 *raw* (pre-conv) channel inputs
+        conv_tail = xbc_raw[:, -(s.conv_width - 1):]
+        return out, (state, conv_tail)
+    return out
+
+
+def mamba_decode_step(p, cfg, x_t, cache, *, rules=RULES):
+    """One-token recurrence. x_t: (B, d); cache: {"ssm": (B*nh, N, P),
+    "conv": (B, W-1, di+2gn)}."""
+    s = cfg.ssm
+    b, d = x_t.shape
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    hd = s.headdim
+    gn = s.n_groups * s.d_state
+    n = s.d_state
+    adt = cfg.adtype
+
+    z = L._dot(x_t, p["w_z"], adt)
+    xin = L._dot(x_t, p["w_x"], adt)
+    Bv = L._dot(x_t, p["w_B"], adt)
+    Cv = L._dot(x_t, p["w_C"], adt)
+    dt = jnp.dot(x_t.astype(jnp.float32), p["w_dt"].astype(jnp.float32))
+
+    xbc_t = jnp.concatenate([xin, Bv, Cv], axis=-1)       # (B, di+2gn)
+    hist = jnp.concatenate([cache["conv"], xbc_t[:, None]], axis=1)
+    w = p["conv"]
+    conv_out = (hist.astype(jnp.float32)
+                * w[None].astype(jnp.float32)).sum(axis=1)
+    xbc = jax.nn.silu(conv_out).astype(adt)
+    new_conv = hist[:, 1:]
+    xin, Bv, Cv = jnp.split(xbc, [di, di + gn], axis=-1)
+
+    dt = jax.nn.softplus(dt + p["dt_bias"])               # (B, nh)
+    A = -jnp.exp(p["A_log"])
+    log_a = (dt * A).reshape(b * nh)
+    xh = (xin.reshape(b, nh, hd).astype(jnp.float32)
+          * dt[..., None]).reshape(b * nh, hd)
+    Bh = jnp.broadcast_to(Bv.reshape(b, s.n_groups, n)[:, :1],
+                          (b, nh, n)).reshape(b * nh, n)
+    Ch = jnp.broadcast_to(Cv.reshape(b, s.n_groups, n)[:, :1],
+                          (b, nh, n)).reshape(b * nh, n)
+
+    y, new_state = ops.ssd_decode_step(xh.astype(adt), log_a,
+                                       Bh.astype(adt), Ch.astype(adt),
+                                       cache["ssm"])
+    y = y.reshape(b, nh, hd).astype(jnp.float32) \
+        + p["D"][None, :, None] * xh.reshape(b, nh, hd)
+    y = y.reshape(b, di).astype(adt)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32))
+                  .astype(adt), cfg.rms_eps)
+    out = L._dot(y, p["w_out"], adt)
+    return out, {"ssm": new_state, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# layer plumbing for the LM stack
+# ---------------------------------------------------------------------------
+
+def ssm_layer_init(key, cfg) -> dict:
+    return {
+        "ln": L.rmsnorm_init(cfg.d_model, cfg.pdtype),
+        "mamba": mamba_params_init(key, cfg),
+    }
+
+
+def ssm_layer_apply(p, cfg, x, extra=None, *, positions=None, rules=RULES):
+    h = L.rmsnorm(p["ln"], x, cfg.rms_eps)
+    return x + mamba_apply(p["mamba"], cfg, h, rules=rules), \
+        jnp.zeros((), jnp.float32)
+
+
+def ssm_layer_decode(p, cfg, x_t, cache, pos, extra=None, *, rules=RULES):
+    h = L.rmsnorm(p["ln"], x_t, cfg.rms_eps)
+    y, cache = mamba_decode_step(p["mamba"], cfg, h, cache, rules=rules)
+    return x_t + y, cache
+
+
+def init_ssm_cache(cfg, batch: int, max_seq: int) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    gn = s.n_groups * s.d_state
+    return {
+        "ssm": jnp.zeros((batch * nh, s.d_state, s.headdim), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, di + 2 * gn), cfg.adtype),
+    }
+
+
+def ssm_prefill_layer(p, cfg, x, cache_l, positions, extra=None, *,
+                      rules=RULES):
+    h = L.rmsnorm(p["ln"], x, cfg.rms_eps)
+    y, (state, conv_tail) = mamba_apply(p["mamba"], cfg, h, rules=rules,
+                                        return_state=True)
+    return x + y, {"ssm": state, "conv": conv_tail.astype(cfg.adtype)}

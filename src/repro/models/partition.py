@@ -1,0 +1,231 @@
+"""Parameter partitioning: pytree path -> logical axes -> PartitionSpec.
+
+The lane axis (C1) carries tensor parallelism: attention heads, MLP hidden,
+vocab, MoE experts and SSM heads are sharded over ``model``; everything else
+is replicated (activations carry DP over ("pod","data") via the batch axis).
+
+Rules are matched on the parameter's key path (joined with "/"), most
+specific first.  Stacked layer params have a leading n_layers axis, which is
+never sharded (the scan walks it), so layer-local rules are written for the
+*unstacked* shape and shifted right by one axis when the leaf lives under
+"layers/"/"enc_layers/"/"dec_layers/".
+
+ZeRO-1 (optimizer-state sharding over the data axis) is applied on top: the
+first *unsharded* dimension of every optimizer moment is additionally sharded
+over ("data",) when it is the largest dim — GSPMD pads non-divisible cases.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import lanes
+
+# (regex on "/".join(path), logical axes for the unstacked leaf)
+_RULES: list[tuple[str, tuple[Optional[str], ...]]] = [
+    # embeddings / head
+    (r"^embed$", ("vocab_tp", None)),
+    (r"^lm_head$", (None, "vocab_tp")),
+    (r"^pos_embed$", (None, None)),
+    # attention
+    (r"(attn|self_attn|cross_attn)/wq$", (None, "heads")),
+    (r"(attn|self_attn|cross_attn)/wk$", (None, "kv_heads")),
+    (r"(attn|self_attn|cross_attn)/wv$", (None, "kv_heads")),
+    (r"(attn|self_attn|cross_attn)/wo$", ("heads", None)),
+    (r"(q_norm|k_norm)/scale$", (None,)),
+    # dense / shared-expert MLPs
+    (r"(mlp|shared)/w_(up|gate)$", (None, "ffn")),
+    (r"(mlp|shared)/w_down$", ("ffn", None)),
+    (r"shared_gate$", (None,)),
+    # MoE: experts have a leading E axis sharded over lanes (EP)
+    (r"experts/w_(up|gate)$", ("expert", None, None)),
+    (r"experts/w_down$", ("expert", None, None)),
+    (r"router$", (None, None)),
+    # Mamba2 / SSD (heads over lanes where the axis is per-head)
+    (r"mamba/w_(z|x|B|C|dt)$", (None, "ffn")),  # (d, d_inner | gn | nh)
+    (r"mamba/w_out$", ("ffn", None)),
+    (r"mamba/conv$", (None, "ffn")),            # (width, d_inner + 2 gn)
+    (r"mamba/(A_log|dt_bias|D)$", ("ssm_heads",)),
+    (r"mamba/norm/scale$", ("ffn",)),
+    # norms & biases: replicated
+    (r"(ln\d?|ln_x|final_norm|enc_norm|dec_norm|attn_norm|mamba_norm)/"
+     r"(scale|bias)$", None),
+]
+
+_STACK_PREFIXES = ("layers", "enc_layers", "dec_layers")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(p.name)
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def logical_axes_for(path, leaf) -> tuple[Optional[str], ...]:
+    """Logical axis names for one parameter leaf (stacking-aware)."""
+    s = _path_str(path)
+    stacked = s.split("/", 1)[0] in _STACK_PREFIXES
+    body = s.split("/", 1)[1] if stacked else s
+    for pat, axes in _RULES:
+        if re.search(pat, body):
+            if axes is None:
+                axes = (None,) * (leaf.ndim - (1 if stacked else 0))
+            out = ((None,) + tuple(axes)) if stacked else tuple(axes)
+            # tolerate rank mismatch (e.g. scalars): pad/trim with None
+            out = (out + (None,) * leaf.ndim)[: leaf.ndim]
+            return out
+    return (None,) * leaf.ndim
+
+
+def fit_spec(spec: P, shape: tuple[int, ...], mesh: Optional[Mesh]) -> P:
+    """Drop mesh axes a dimension cannot be *evenly* divided by.
+
+    ``jit`` argument shardings (unlike ``with_sharding_constraint``) require
+    exact divisibility — a 50280-row embedding cannot enter sharded 16-way.
+    Axes are kept left-to-right while the running product still divides the
+    dimension; the remainder is replicated.
+    """
+    if mesh is None:
+        return spec
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, part in zip(shape, parts):
+        if part is None:
+            out.append(None)
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        kept, prod = [], 1
+        for a in axes:
+            if a not in mesh.shape:      # axis absent on this mesh: drop
+                continue
+            n = mesh.shape[a]
+            if dim % (prod * n) == 0:
+                kept.append(a)
+                prod *= n
+        out.append(tuple(kept) if len(kept) > 1
+                   else (kept[0] if kept else None))
+    return P(*out)
+
+
+def param_specs(params, rules: Optional[lanes.LogicalRules] = None,
+                mesh: Optional[Mesh] = None):
+    """Pytree of PartitionSpec matching ``params`` (mesh: fit divisibility)."""
+    rules = rules or lanes.LogicalRules()
+
+    def spec(path, leaf):
+        return fit_spec(rules.spec(*logical_axes_for(path, leaf)),
+                        leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def param_shardings(params, mesh: Mesh,
+                    rules: Optional[lanes.LogicalRules] = None):
+    rules = (rules or lanes.LogicalRules()).for_mesh(mesh)
+
+    def shard(path, leaf):
+        return NamedSharding(mesh, fit_spec(
+            rules.spec(*logical_axes_for(path, leaf)), leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(shard, params)
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1: optimizer-moment sharding = param sharding + data over the largest
+# free axis.
+# ---------------------------------------------------------------------------
+
+def zero1_spec(pspec: P, shape: tuple[int, ...], mesh: Optional[Mesh] = None,
+               *, data_axes=("data",), min_size: int = 1024) -> P:
+    """Add the data axis to the first unsharded, evenly-divisible dim of
+    size >= min_size (ZeRO-1 moment sharding on top of the TP layout)."""
+    parts = list(pspec) + [None] * (len(shape) - len(pspec))
+    used = set()
+    for p in parts:
+        if p is None:
+            continue
+        used.update(p if isinstance(p, tuple) else (p,))
+    if used & set(data_axes):
+        return P(*parts)
+    dsize = 1
+    if mesh is not None:
+        for a in data_axes:
+            dsize *= mesh.shape[a]
+    for i, (part, dim) in enumerate(zip(parts, shape)):
+        if part is None and dim >= min_size and dim % max(dsize, 1) == 0:
+            parts[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+            break
+    return P(*parts)
+
+
+# ---------------------------------------------------------------------------
+# KV / SSM cache sharding (serving path)
+# ---------------------------------------------------------------------------
+
+_CACHE_RULES: list[tuple[str, tuple[Optional[str], ...]]] = [
+    # (B, S, KVH, hd): batch over DP, KV *sequence* over lanes
+    # (flash-decode; see lanes.DEFAULT_RULES["kv_seq"])
+    (r"(^|/)(k|v)$", ("batch", "kv_seq", None, None)),
+    # mamba SSD state (B·NH, N, P): fused batch·head dim over all axes
+    (r"(^|/)ssm$", ("ssm_bh", None, None)),
+    # conv tail (B, W-1, conv_dim)
+    (r"(^|/)conv$", ("batch", None, "ffn")),
+]
+
+
+def cache_logical_axes(path, leaf) -> tuple[Optional[str], ...]:
+    """Cache leaves carry a leading stacked-layer axis (never sharded)."""
+    s = _path_str(path)
+    for pat, axes in _CACHE_RULES:
+        if re.search(pat, s):
+            out = (None,) + tuple(axes)
+            return (out + (None,) * leaf.ndim)[: leaf.ndim]
+    return (None,) * leaf.ndim
+
+
+def cache_specs(cache, rules: Optional[lanes.LogicalRules] = None,
+                mesh: Optional[Mesh] = None):
+    """KV-cache shardings.  Adaptive lane placement for (L,B,S,KV,hd)
+    leaves: KV heads over lanes when they divide evenly (MHA-style
+    configs, e.g. 16 kv heads on 16 lanes — cheapest decode), otherwise
+    the KV *sequence* over lanes (flash-decode; GQA kv<lanes would
+    replicate and all-gather the cache every step — §Perf cell 3)."""
+    rules = rules or lanes.LogicalRules()
+    lane_size = None
+    if mesh is not None and lanes.LANE_AXIS in getattr(mesh, "shape", {}):
+        lane_size = mesh.shape[lanes.LANE_AXIS]
+
+    def spec(path, leaf):
+        axes = cache_logical_axes(path, leaf)
+        if (lane_size and lane_size > 1 and leaf.ndim == 5
+                and "kv_seq" in axes
+                and leaf.shape[3] % lane_size == 0):
+            axes = (axes[0], axes[1], None, "kv_heads", None)
+        return fit_spec(rules.spec(*axes), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def opt_state_specs(params, rules: Optional[lanes.LogicalRules] = None,
+                    *, zero1: bool = True, mesh: Optional[Mesh] = None):
+    """PartitionSpecs for AdamW moments (same treedef as params)."""
+    rules = rules or lanes.LogicalRules()
+    data_axes = tuple(a for a in ("data",) if a in rules.mesh_axes) or None
+
+    def spec(path, leaf):
+        ps = fit_spec(rules.spec(*logical_axes_for(path, leaf)),
+                      leaf.shape, mesh)
+        if zero1 and data_axes:
+            return zero1_spec(ps, leaf.shape, mesh, data_axes=data_axes)
+        return ps
+
+    return jax.tree_util.tree_map_with_path(spec, params)

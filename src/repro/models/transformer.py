@@ -1,0 +1,310 @@
+"""Decoder-only LM: generic scanned layer stack + dense layer + drivers.
+
+The layer stack is a single ``lax.scan`` over stacked per-layer parameters
+(one compiled layer body regardless of depth — the strip-mining principle
+applied to the *layer* axis), with a configurable remat policy.  Families
+(dense/moe/ssm/hybrid) plug in their own ``layer_init`` / ``layer_apply`` /
+``layer_decode``; the drivers (``loss_fn``, ``prefill``, ``decode_step``)
+are shared by every LM-family architecture.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import lanes
+from repro.models import layers as L
+
+RULES = L.RULES
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": "nothing",
+    "dots": "dots_with_no_batch_dims_saveable",
+    "save_tp": "save_only_these_names(tp_boundary)",
+}
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "full":
+        return jax.checkpoint(fn)
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    if remat == "save_tp":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.save_only_these_names(
+                "tp_boundary"))
+    raise ValueError(f"unknown remat policy {remat!r}")
+
+
+# ---------------------------------------------------------------------------
+# dense layer
+# ---------------------------------------------------------------------------
+
+def dense_layer_init(key, cfg) -> dict:
+    ka, km, k1, k2 = jax.random.split(key, 4)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model, cfg.pdtype),
+        "attn": L.attention_init(ka, cfg, cfg.pdtype),
+        "ln2": L.rmsnorm_init(cfg.d_model, cfg.pdtype),
+        "mlp": L.mlp_init(km, cfg.d_model, cfg.d_ff, cfg.act, cfg.pdtype),
+    }
+
+
+def dense_layer_apply(p, cfg, x, *, positions, window=None, rules=RULES):
+    h = L.rmsnorm(p["ln1"], x, cfg.rms_eps)
+    x = x + L.attention(p["attn"], cfg, h, positions=positions,
+                        causal=True, window=window, rules=rules)
+    h = L.rmsnorm(p["ln2"], x, cfg.rms_eps)
+    x = x + L.mlp(p["mlp"], cfg, h, rules=rules)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def dense_layer_decode(p, cfg, x_t, cache, pos, *, window=None, rules=RULES):
+    h = L.rmsnorm(p["ln1"], x_t, cfg.rms_eps)
+    a, cache = L.attention_decode(p["attn"], cfg, h, cache, pos,
+                                  window=window, rules=rules)
+    x_t = x_t + a
+    h = L.rmsnorm(p["ln2"], x_t, cfg.rms_eps)
+    x_t = x_t + L.mlp(p["mlp"], cfg, h, rules=rules)
+    return x_t, cache
+
+
+def attention_prefill(p_attn, cfg, h, cache_kv, positions, *, window=None,
+                      rules=RULES):
+    """Causal full-sequence attention + KV-cache fill (shared by the dense/
+    moe/hybrid prefill layers).  h: (B, S, d); cache_kv: {"k","v"} of
+    (B, Smax, KVH, hd).  Returns (attn_out, new_cache_kv)."""
+    from repro.kernels import ops
+    q, k, v = L._project_qkv(p_attn, cfg, h, positions, rules)
+    b, s, nkv, hd = k.shape
+    group = cfg.n_heads // nkv
+    # 4-D (B, H, S, hd) with heads separate — see layers.attention
+    kf = jnp.repeat(k, group, axis=2).transpose(0, 2, 1, 3)
+    vf = jnp.repeat(v, group, axis=2).transpose(0, 2, 1, 3)
+    qf = q.transpose(0, 2, 1, 3)
+    qf = lanes.constrain(qf, rules, "batch", "heads", None, None)
+    kf = lanes.constrain(kf, rules, "batch", "heads", None, None)
+    vf = lanes.constrain(vf, rules, "batch", "heads", None, None)
+    of = ops.attention(qf, kf, vf, causal=True, window=window,
+                       impl="naive")   # no bwd in prefill: kv-outer wins
+    o = of.transpose(0, 2, 1, 3)
+    out = L._dot(o.reshape(b, s, -1), p_attn["wo"], cfg.adtype)
+    new_kv = {
+        "k": lax.dynamic_update_slice(
+            cache_kv["k"], k.astype(cache_kv["k"].dtype), (0, 0, 0, 0)),
+        "v": lax.dynamic_update_slice(
+            cache_kv["v"], v.astype(cache_kv["v"].dtype), (0, 0, 0, 0)),
+    }
+    return out, new_kv
+
+
+# ---------------------------------------------------------------------------
+# generic stack
+# ---------------------------------------------------------------------------
+
+def stack_init(key, cfg, layer_init: Callable) -> Any:
+    keys = jax.random.split(key, cfg.n_layers)
+    return jax.vmap(lambda k: layer_init(k, cfg))(keys)
+
+
+def stack_forward(stacked, cfg, x, *, layer_apply: Callable,
+                  remat: str = "full", layer_xs: Any = None):
+    """scan the layer body over stacked params; returns (x, aux_sum)."""
+
+    def block(carry, inp):
+        x, aux = carry
+        if layer_xs is None:
+            lp, extra = inp, None
+        else:
+            lp, extra = inp
+        x, a = layer_apply(lp, cfg, x, extra)
+        return (x, aux + a), None
+
+    body = _maybe_remat(block, remat)
+    xs = stacked if layer_xs is None else (stacked, layer_xs)
+    (x, aux), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, aux
+
+
+def stack_decode(stacked, cfg, x_t, caches, pos, *, layer_decode: Callable,
+                 layer_xs: Any = None):
+    """scan decode step over layers, threading per-layer caches."""
+
+    def block(x_t, inp):
+        if layer_xs is None:
+            (lp, cache), extra = inp, None
+        else:
+            lp, cache, extra = inp
+        x_t, cache = layer_decode(lp, cfg, x_t, cache, pos, extra)
+        return x_t, cache
+
+    xs = (stacked, caches) if layer_xs is None else (stacked, caches, layer_xs)
+    x_t, new_caches = lax.scan(block, x_t, xs)
+    return x_t, new_caches
+
+
+# ---------------------------------------------------------------------------
+# LM drivers (shared by dense / moe / hybrid; ssm & encdec override parts)
+# ---------------------------------------------------------------------------
+
+class LM:
+    """A decoder-only LM family: init/loss/prefill/decode built from a
+    layer implementation."""
+
+    def __init__(self, cfg, *, layer_init=dense_layer_init,
+                 layer_apply=None, layer_decode=None,
+                 init_layer_cache=None, layer_xs_fn=None, rules=RULES):
+        self.cfg = cfg
+        self.rules = rules
+        self._layer_init = layer_init
+        self._layer_apply = layer_apply or (
+            lambda p, c, x, extra, **kw: dense_layer_apply(
+                p, c, x, positions=kw["positions"], rules=self.rules))
+        self._layer_decode = layer_decode
+        self._init_layer_cache = init_layer_cache or (
+            lambda cfg, batch, max_seq: L.init_kv_cache(cfg, batch, max_seq))
+        # per-layer static side inputs (e.g. hymba window schedule): (L,) arrays
+        self._layer_xs_fn = layer_xs_fn
+
+    # -- params ------------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ke, kl, kh = jax.random.split(key, 3)
+        params = {
+            "embed": L.embed_init(ke, cfg.vocab, cfg.d_model, cfg.pdtype),
+            "layers": stack_init(kl, cfg, self._layer_init),
+            "final_norm": L.rmsnorm_init(cfg.d_model, cfg.pdtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.embed_init(
+                kh, cfg.vocab, cfg.d_model, cfg.pdtype).T
+        return params
+
+    def head(self, params) -> jax.Array:
+        return params["lm_head"] if not self.cfg.tie_embeddings \
+            else params["embed"].T
+
+    # -- forward -----------------------------------------------------------
+    def hidden_states(self, params, tokens, *, prefix_embeds=None,
+                      remat: str = "full"):
+        cfg = self.cfg
+        x = L.embed_lookup(params["embed"], tokens, self.rules)
+        if prefix_embeds is not None:
+            x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        layer_apply = functools.partial(self._apply_with_pos,
+                                        positions=positions)
+        layer_xs = self._layer_xs_fn(cfg) if self._layer_xs_fn else None
+        x, aux = stack_forward(params["layers"], cfg, x,
+                               layer_apply=layer_apply, remat=remat,
+                               layer_xs=layer_xs)
+        return L.rmsnorm(params["final_norm"], x, cfg.rms_eps), aux
+
+    def _apply_with_pos(self, p, cfg, x, extra, *, positions):
+        return self._layer_apply(p, cfg, x, extra, positions=positions)
+
+    # -- training loss -------------------------------------------------------
+    def loss_fn(self, params, batch, *, remat: str = "full",
+                ce_block: int = 512):
+        """batch: {"tokens": (B,S), "labels": (B,S), "loss_mask": opt}."""
+        prefix = batch.get("prefix_embeds")
+        h, aux = self.hidden_states(params, batch["tokens"],
+                                    prefix_embeds=prefix, remat=remat)
+        if prefix is not None:
+            h = h[:, prefix.shape[1]:]
+        mask = batch.get("loss_mask")
+        ce = L.blockwise_cross_entropy(self.head(params), h, batch["labels"],
+                                       mask, block=ce_block, rules=self.rules)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    # -- serving -------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int):
+        """Stacked per-layer caches (leading axis = layer)."""
+        cfg = self.cfg
+        one = self._init_layer_cache(cfg, batch, max_seq)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)), one)
+
+    def prefill(self, params, tokens, cache, *, remat: str = "full"):
+        """Run the prompt, fill the cache, return last-position logits.
+
+        Implemented as hidden-state forward + a full-sequence KV write (the
+        jnp path reuses blockwise attention; the cache write is a single
+        dynamic_update_slice per layer).
+        """
+        cfg = self.cfg
+        b, s = tokens.shape
+        x = L.embed_lookup(params["embed"], tokens, self.rules)
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        layer_xs = self._layer_xs_fn(cfg) if self._layer_xs_fn else None
+
+        def block(carry, inp):
+            x = carry
+            if layer_xs is None:
+                lp, cache_l = inp
+                extra = None
+            else:
+                lp, cache_l, extra = inp
+            x, cache_l = self._prefill_layer(lp, cfg, x, cache_l, positions,
+                                             extra)
+            return x, cache_l
+
+        xs = (params["layers"], cache) if layer_xs is None \
+            else (params["layers"], cache, layer_xs)
+        x, new_cache = lax.scan(block, x, xs)
+        h = L.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+        last = h[:, -1]
+        logits = jnp.dot(last, self.head(params),
+                         preferred_element_type=jnp.float32)
+        logits = lanes.constrain(logits, self.rules, "batch", "vocab_tp")
+        return logits, new_cache
+
+    def _prefill_layer(self, lp, cfg, x, cache_l, positions, extra):
+        """Default dense prefill: run layer, stash K/V into the cache."""
+        h = L.rmsnorm(lp["ln1"], x, cfg.rms_eps)
+        a, cache_l = attention_prefill(
+            lp["attn"], cfg, h, cache_l, positions,
+            window=self._extra_window(extra), rules=self.rules)
+        x = x + a
+        h2 = L.rmsnorm(lp["ln2"], x, cfg.rms_eps)
+        x = x + L.mlp(lp["mlp"], cfg, h2, rules=self.rules)
+        return x, cache_l
+
+    @staticmethod
+    def _extra_window(extra):
+        return None if extra is None else extra
+
+    def decode_step(self, params, token_t, cache, pos):
+        """token_t: (B,) int32; pos: (B,) position to write. Returns
+        (logits (B,V), new_cache)."""
+        cfg = self.cfg
+        x_t = L.embed_lookup(params["embed"], token_t[:, None],
+                             self.rules)[:, 0]
+        layer_xs = self._layer_xs_fn(cfg) if self._layer_xs_fn else None
+        decode = self._layer_decode or (
+            lambda p, c, x, cache_l, pos_, extra: dense_layer_decode(
+                p, c, x, cache_l, pos_, window=self._extra_window(extra),
+                rules=self.rules))
+
+        def ld(p, c, x, cache_l, pos_, extra=None):
+            return decode(p, c, x, cache_l, pos_, extra)
+
+        x_t, new_cache = stack_decode(
+            params["layers"], cfg, x_t, cache, pos,
+            layer_decode=lambda lp, c, x, cache_l, pos_, extra=None:
+                ld(lp, c, x, cache_l, pos_, extra),
+            layer_xs=layer_xs)
+        h = L.rmsnorm(params["final_norm"], x_t, cfg.rms_eps)
+        logits = jnp.dot(h, self.head(params),
+                         preferred_element_type=jnp.float32)
+        logits = lanes.constrain(logits, self.rules, "batch", "vocab_tp")
+        return logits, new_cache

@@ -1,0 +1,53 @@
+"""LLaVA-NeXT backbone: a dense LM consuming stubbed patch embeddings.
+
+Per the assignment, the anyres vision frontend is a STUB — ``input_specs()``
+provides precomputed patch embeddings (576 tokens per tile, one tile) that
+the backbone treats as a prefix of the text sequence.  Training masks the
+prefix positions out of the loss; prefill writes prefix KV into the cache
+exactly like prompt tokens (so decode is identical to the dense LM).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+class VLM(T.LM):
+    """Dense LM + patch-prefix handling (prefill path)."""
+
+    def prefill(self, params, tokens, cache, *, patch_embeds=None,
+                remat: str = "full"):
+        """Prompt = [patch_embeds ; tokens].  Fills the cache for both."""
+        if patch_embeds is None:
+            return super().prefill(params, tokens, cache, remat=remat)
+        cfg = self.cfg
+        b, s_txt = tokens.shape
+        x_txt = L.embed_lookup(params["embed"], tokens, self.rules)
+        x = jnp.concatenate([patch_embeds.astype(x_txt.dtype), x_txt], axis=1)
+        s = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+        def block(carry, inp):
+            x = carry
+            lp, cache_l = inp
+            x, cache_l = self._prefill_layer(lp, cfg, x, cache_l, positions,
+                                             None)
+            return x, cache_l
+
+        x, new_cache = lax.scan(block, x, (params["layers"], cache))
+        h = L.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+        logits = jnp.dot(h[:, -1], self.head(params),
+                         preferred_element_type=jnp.float32)
+        return logits, new_cache
+
+
+def patch_embed_stub(cfg, batch: int, *, n_tiles: int = 1,
+                     dtype=None) -> jax.ShapeDtypeStruct:
+    """Abstract stand-in for the anyres frontend output (576 tok/tile)."""
+    return jax.ShapeDtypeStruct(
+        (batch, n_tiles * cfg.n_patch_tokens, cfg.d_model),
+        dtype or cfg.adtype)

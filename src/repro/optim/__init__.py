@@ -1,0 +1,12 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               global_norm, clip_by_global_norm)
+from repro.optim.schedule import cosine_schedule, linear_warmup
+from repro.optim.compress import (ef_int8_init, ef_int8_compress_psum,
+                                  quantize_int8, dequantize_int8)
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "global_norm",
+    "clip_by_global_norm", "cosine_schedule", "linear_warmup",
+    "ef_int8_init", "ef_int8_compress_psum", "quantize_int8",
+    "dequantize_int8",
+]

@@ -1,0 +1,86 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+Moments are kept in f32 regardless of parameter dtype (bf16 master-less
+training with f32 state — the standard large-model recipe).  ZeRO-1 is not
+implemented here but via *shardings*: ``models.partition.opt_state_specs``
+shards ``m``/``v`` over the data axis and GSPMD turns the update into
+compute-on-shard + all-gather of the updated params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    # decay applies only to matrices (ndim >= 2) — norms/biases exempt
+    decay_min_ndim: int = 2
+
+
+def adamw_init(params: Any) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def adamw_update(params: Any, grads: Any, state: dict, lr,
+                 cfg: AdamWConfig = AdamWConfig()):
+    """Returns (new_params, new_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state["step"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= cfg.decay_min_ndim and cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_state = {
+        "m": treedef.unflatten([o[1] for o in out]),
+        "v": treedef.unflatten([o[2] for o in out]),
+        "step": step,
+    }
+    return new_params, new_state, {"grad_norm": gnorm}

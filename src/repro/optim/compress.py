@@ -1,0 +1,54 @@
+"""Error-feedback int8 gradient compression for the inter-pod reduction.
+
+The paper's split-VRF argument (§IV.A) is a *bytes-crossing-the-boundary*
+argument; at cluster scale the expensive boundary is the inter-pod link.
+``ef_int8_compress_psum`` compresses exactly and only the traffic crossing
+it:
+
+  1. residual-corrected gradient  g' = g + e   (error feedback state e),
+  2. global scale over the pod axis (one scalar psum of max|g'|),
+  3. quantize to int8, all-reduce in int16 over ``pod`` (wire: 2 B/elem vs
+     4 B f32 — int16 because a P-pod sum of int8 needs log2(P)+8 bits),
+  4. dequantize; the local quantization error becomes the new residual.
+
+Error feedback keeps the *sequence* of updates unbiased, which is what makes
+1-bit/8-bit SGD-style schemes converge (Seide et al., 2014).  Used inside
+``shard_map`` by the trainer's ``reduction="hier_ef8"`` mode.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ef_int8_init(params: Any) -> Any:
+    """Zero residuals with the shape of the (per-shard) gradients."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def quantize_int8(x: jax.Array, scale: jax.Array):
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_int8_compress_psum(g: jax.Array, residual: jax.Array,
+                          axis_name: str = "pod"):
+    """Compressed all-reduce of one gradient leaf over ``axis_name``.
+
+    Returns (reduced_g, new_residual).  The int16 cast bounds the wire
+    format; for pod counts > 256 use int32 (still 2x less than f32 pairs).
+    """
+    x = g.astype(jnp.float32) + residual
+    amax = lax.pmax(jnp.max(jnp.abs(x)), axis_name)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = quantize_int8(x, scale)
+    new_residual = x - dequantize_int8(q, scale)
+    summed = lax.psum(q.astype(jnp.int16), axis_name)
+    return summed.astype(jnp.float32) * scale, new_residual

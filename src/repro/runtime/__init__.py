@@ -1,0 +1,6 @@
+from repro.runtime.trainer import (Trainer, TrainConfig, make_train_step,
+                                   StragglerMonitor)
+from repro.runtime.elastic import elastic_remesh
+
+__all__ = ["Trainer", "TrainConfig", "make_train_step", "StragglerMonitor",
+           "elastic_remesh"]

@@ -1,0 +1,41 @@
+"""Elastic re-meshing: move a training state onto a different mesh.
+
+Checkpoints store full logical arrays (see ``checkpoint.store``), so
+*restart-time* elasticity is free.  This module provides *in-flight*
+elasticity: when the data-parallel world changes (node loss / scale-up),
+``elastic_remesh`` re-places every leaf of the state onto the new mesh with
+the shardings recomputed for that mesh.  Leaves whose logical spec is
+unshardable on the new mesh degrade to replicated (GSPMD pads otherwise).
+
+The global batch is owned by the data pipeline: it is a pure function of the
+step index, so a re-meshed run keeps consuming the same batch sequence —
+only the per-device slice changes.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+
+def elastic_remesh(state: Any, new_mesh: Mesh,
+                   shardings_fn: Callable[[Any, Mesh], Any]) -> Any:
+    """Re-place ``state`` on ``new_mesh``.
+
+    ``shardings_fn(state, mesh)`` returns the sharding pytree for the new
+    mesh (e.g. partial(opt+param shardings from models.partition)).  Works
+    across meshes with different axis sizes and device sets; data transfers
+    go device→host→device where ICI resharding is impossible.
+    """
+    shardings = shardings_fn(state, new_mesh)
+
+    def place(x, s):
+        try:
+            return jax.device_put(x, s)
+        except ValueError:
+            # fall back through host memory (topology change)
+            import numpy as np
+            return jax.device_put(np.asarray(x), s)
+
+    return jax.tree.map(place, state, shardings)

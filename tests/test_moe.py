@@ -1,0 +1,94 @@
+"""MoE routing invariants (C3: capacity dropping == tail-undisturbed
+predication) + shared-expert path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.models import moe as M
+
+
+def _cfg(e=4, k=2, cap=1.25, shared=0):
+    return ArchConfig(
+        name="t", family="moe", n_layers=1, d_model=32, n_heads=4,
+        n_kv_heads=2, d_ff=0, vocab=64, head_dim=8,
+        moe=MoEConfig(n_experts=e, top_k=k, d_ff_expert=16,
+                      capacity_factor=cap, n_shared_experts=shared,
+                      d_ff_shared=32 if shared else 0),
+        param_dtype="float32", act_dtype="float32")
+
+
+def test_moe_output_finite_and_shaped():
+    cfg = _cfg()
+    p = M.moe_mlp_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32))
+    y, aux = M.moe_mlp_apply(p, cfg, x)
+    assert y.shape == x.shape
+    assert jnp.all(jnp.isfinite(y))
+    assert float(aux) > 0          # LB loss + z-loss strictly positive
+
+
+def test_moe_huge_capacity_equals_dense_mixture():
+    """With capacity >> tokens nothing is dropped: the layer must equal the
+    explicit gate-weighted mixture of per-expert MLPs."""
+    cfg = _cfg(e=4, k=2, cap=100.0)
+    p = M.moe_mlp_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 6, 32))
+    y, _ = M.moe_mlp_apply(p, cfg, x)
+
+    xf = x.reshape(-1, 32)
+    logits = xf @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gates, idx = jax.lax.top_k(probs, 2)
+    gates = gates / gates.sum(-1, keepdims=True)
+
+    def expert(i, t):
+        w = jax.tree.map(lambda a: a[i], p["experts"])
+        h = jax.nn.silu(t @ w["w_gate"]) * (t @ w["w_up"])
+        return h @ w["w_down"]
+
+    want = jnp.zeros_like(xf)
+    for t in range(xf.shape[0]):
+        for j in range(2):
+            want = want.at[t].add(
+                gates[t, j] * expert(idx[t, j], xf[t][None])[0])
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, 32)),
+                               np.asarray(want), rtol=2e-2, atol=2e-3)
+
+
+def test_moe_capacity_drop_keeps_residual_zero():
+    """Dropped tokens contribute exactly zero (the residual stream keeps its
+    value — RVV tail-undisturbed at system scale)."""
+    cfg = _cfg(e=2, k=1, cap=0.01)   # cap == 1 slot per expert
+    p = M.moe_mlp_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 32))
+    y, _ = M.moe_mlp_apply(p, cfg, x)
+    # at most 2 tokens (1/expert) can be non-zero
+    nonzero = jnp.sum(jnp.any(jnp.abs(y[0]) > 1e-7, axis=-1))
+    assert int(nonzero) <= 2
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_moe_gates_normalized(seed):
+    cfg = _cfg(e=8, k=4)
+    p = M.moe_mlp_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 4, 32))
+    # gates re-normalized over top-k inside; total contribution per kept
+    # token == mixture with weights summing to 1. Verify via cap=huge path:
+    y, _ = M.moe_mlp_apply(p, dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=100.0)), x)
+    assert jnp.all(jnp.isfinite(y))
+
+
+def test_shared_expert_path():
+    cfg = _cfg(e=4, k=2, shared=2)
+    p = M.moe_mlp_init(jax.random.PRNGKey(0), cfg)
+    assert "shared" in p and "shared_gate" in p
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 32))
+    y, _ = M.moe_mlp_apply(p, cfg, x)
+    assert y.shape == x.shape and bool(jnp.all(jnp.isfinite(y)))

@@ -1,0 +1,182 @@
+"""3-step reduction (C4) + strip-mining (C7) + chaining (C5) semantics."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import chaining, reduction, stripmine
+
+
+# ---------------------------------------------------------------------------
+# lane_tree_reduce (array-level 3-step algorithm, Table II semantics)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(lanes=st.sampled_from([1, 2, 4, 8, 16]),
+       eew=st.sampled_from([1, 2, 4, 8]),
+       cycles=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_lane_tree_reduce_int_exact(lanes, eew, cycles, seed):
+    """Integer add-reduce is exact regardless of the 3-step order."""
+    k = 8 // eew
+    n = lanes * k * cycles
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-1000, 1000, n, dtype=np.int64))
+    out = reduction.lane_tree_reduce(x, lanes=lanes, eew_bytes=eew)
+    assert int(out) == int(x.sum())
+
+
+@settings(max_examples=30, deadline=None)
+@given(lanes=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**31 - 1))
+def test_lane_tree_reduce_float_close(lanes, seed):
+    n = lanes * 8
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    out = reduction.lane_tree_reduce(x, lanes=lanes, eew_bytes=8)
+    np.testing.assert_allclose(float(out), float(x.sum()), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("op,npop", [("max", np.max), ("min", np.min)])
+def test_lane_tree_reduce_minmax(op, npop):
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(64), jnp.float32)
+    out = reduction.lane_tree_reduce(x, lanes=4, eew_bytes=8, op=op)
+    assert float(out) == pytest.approx(float(npop(np.asarray(x))))
+
+
+def test_ideal_cycles_matches_paper_formula():
+    """Paper Table II ideal: VL_B/(8·l) + 1 + log2(l)."""
+    assert reduction.ideal_cycles(4096, 16) == 4096 / 128 + 1 + 4
+    assert reduction.ideal_cycles(64, 2) == 64 / 16 + 1 + 1
+
+
+# ---------------------------------------------------------------------------
+# strip-mining
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 300), vlmax=st.sampled_from([16, 64, 128]))
+def test_stripmined_map_identity(n, vlmax):
+    x = jnp.arange(float(n))
+    out = stripmine.stripmined_map(lambda s, vl: s * 2.0, x, vlmax=vlmax)
+    np.testing.assert_allclose(out, x * 2.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 500), vlmax=st.sampled_from([32, 100]))
+def test_stripmine_reduction_matches(n, vlmax):
+    """Strip-mined sum (carry across strips, C7) == flat sum; tail strip is
+    predicated (C3)."""
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+
+    def body(carry, strip, vl):
+        mask = stripmine.tail_mask_for(strip, vl) if hasattr(
+            stripmine, "tail_mask_for") else jnp.arange(strip.shape[0]) < vl
+        return carry + jnp.where(mask, strip, 0.0).sum(), None
+
+    carry, _ = stripmine.stripmine(body, jnp.zeros((), jnp.float32), x, vlmax=vlmax)
+    np.testing.assert_allclose(float(carry), float(x.sum()), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_num_strips():
+    assert stripmine.num_strips(1, 128) == 1
+    assert stripmine.num_strips(128, 128) == 1
+    assert stripmine.num_strips(129, 128) == 2
+
+
+# ---------------------------------------------------------------------------
+# chaining (C5)
+# ---------------------------------------------------------------------------
+
+def test_chained_mulreduce_is_dot():
+    a = jnp.asarray(np.random.default_rng(0).standard_normal(256), jnp.float32)
+    b = jnp.asarray(np.random.default_rng(1).standard_normal(256), jnp.float32)
+    np.testing.assert_allclose(float(chaining.chained_mulreduce(a, b)),
+                               float(jnp.dot(a, b)), rtol=1e-5)
+
+
+@pytest.mark.parametrize("num_mb", [1, 2, 4])
+def test_grad_accum_matches_full_batch(num_mb):
+    """Microbatched grads (C5 at step scale) == full-batch grads."""
+    k = jax.random.PRNGKey(0)
+    w = {"w": jax.random.normal(k, (8, 4))}
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+    y = jax.random.normal(jax.random.PRNGKey(2), (16, 4))
+
+    def loss(params, batch):
+        pred = batch["x"] @ params["w"]
+        return jnp.mean((pred - batch["y"]) ** 2)
+
+    batch = {"x": x, "y": y}
+    l_full, g_full = jax.value_and_grad(loss)(w, batch)
+    l_mb, g_mb = chaining.grad_accum_chained(loss, w, batch,
+                                             num_microbatches=num_mb)
+    np.testing.assert_allclose(l_mb, l_full, rtol=1e-5)
+    np.testing.assert_allclose(g_mb["w"], g_full["w"], rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# mesh collectives (subprocess: 8 fake devices)
+# ---------------------------------------------------------------------------
+
+def test_hier_psum_equals_psum(run8):
+    run8("""
+import jax, jax.numpy as jnp, numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P, AxisType
+from repro.core import reduction
+
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                     axis_types=(AxisType.Auto,)*3)
+x = jnp.arange(32.0).reshape(8, 4)
+
+def f(x):
+    return reduction.hier_psum(x, pod_axis="pod", data_axis="data")
+def g(x):
+    return reduction.hier_psum_tree(x, pod_axis="pod", data_axis="data")
+def h(x):
+    return lax.psum(x, ("pod", "data"))
+
+for fn in (f, g, h):
+    out = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P(("pod","data")),
+                                out_specs=P(("pod","data")),
+                                axis_names={"pod","data"},
+                                check_vma=False))(x)
+    if fn is h:
+        want = out
+np.testing.assert_allclose(
+    jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P(("pod","data")),
+                          out_specs=P(("pod","data")),
+                          axis_names={"pod","data"}, check_vma=False))(x),
+    want, rtol=1e-6)
+np.testing.assert_allclose(
+    jax.jit(jax.shard_map(g, mesh=mesh, in_specs=P(("pod","data")),
+                          out_specs=P(("pod","data")),
+                          axis_names={"pod","data"}, check_vma=False))(x),
+    want, rtol=1e-6)
+print("OK")
+""")
+
+
+def test_butterfly_allreduce_equals_psum(run8):
+    run8("""
+import jax, jax.numpy as jnp, numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P, AxisType
+from repro.core import reduction
+
+mesh = jax.make_mesh((8,), ("x",), axis_types=(AxisType.Auto,))
+v = jnp.arange(16.0)
+bf = jax.jit(jax.shard_map(lambda t: reduction.butterfly_allreduce(t, "x"),
+                           mesh=mesh, in_specs=P("x"), out_specs=P("x"),
+                           axis_names={"x"}, check_vma=False))(v)
+ps = jax.jit(jax.shard_map(lambda t: lax.psum(t, "x"),
+                           mesh=mesh, in_specs=P("x"), out_specs=P("x"),
+                           axis_names={"x"}, check_vma=False))(v)
+np.testing.assert_allclose(bf, ps, rtol=1e-6)
+print("OK")
+""")

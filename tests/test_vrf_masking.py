@@ -1,0 +1,170 @@
+"""Property tests for the RVV 1.0 byte-layout + mask-unit semantics (paper
+§IV) — the hardware-independent heart of the paper, tested exactly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import masking, vrf
+
+EEWS = [1, 2, 4, 8]
+LANES = [1, 2, 4, 8, 16]
+
+
+def _mem(vlenb, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 256, vlenb, dtype=np.uint8))
+
+
+# ---------------------------------------------------------------------------
+# shuffle / deshuffle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(eew=st.sampled_from(EEWS), lanes=st.sampled_from(LANES),
+       slots=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_shuffle_roundtrip(eew, lanes, slots, seed):
+    """deshuffle(shuffle(x)) == x for every (EEW, lanes, VLEN)."""
+    vlenb = eew * lanes * slots
+    mem = _mem(vlenb, seed)
+    lane_view = vrf.shuffle(mem, eew=eew, lanes=lanes)
+    assert lane_view.shape == (lanes, vlenb // lanes)
+    back = vrf.deshuffle(lane_view, eew=eew, lanes=lanes)
+    np.testing.assert_array_equal(back, mem)
+
+
+@settings(max_examples=40, deadline=None)
+@given(eew=st.sampled_from(EEWS), lanes=st.sampled_from(LANES[1:]),
+       seed=st.integers(0, 2**31 - 1))
+def test_element_to_lane_mapping(eew, lanes, seed):
+    """Element i lands in lane i % lanes at slot i // lanes (paper §IV.B)."""
+    slots = 4
+    vlenb = eew * lanes * slots
+    mem = _mem(vlenb, seed)
+    lane_view = vrf.shuffle(mem, eew=eew, lanes=lanes)
+    n = vlenb // eew
+    for i in [0, 1, lanes - 1, lanes, n - 1]:
+        elem = mem[i * eew:(i + 1) * eew]
+        lane, slot = i % lanes, i // lanes
+        got = lane_view[lane, slot * eew:(slot + 1) * eew]
+        np.testing.assert_array_equal(got, elem)
+
+
+@settings(max_examples=40, deadline=None)
+@given(old=st.sampled_from(EEWS), new=st.sampled_from(EEWS),
+       lanes=st.sampled_from(LANES), seed=st.integers(0, 2**31 - 1))
+def test_reshuffle_memory_invariant(old, new, lanes, seed):
+    """The memory image is invariant under reshuffle (paper §IV.D.2)."""
+    vlenb = 8 * lanes * 4   # multiple of every EEW × lanes
+    mem = _mem(vlenb, seed)
+    lv = vrf.shuffle(mem, eew=old, lanes=lanes)
+    rv = vrf.reshuffle(lv, old_eew=old, new_eew=new, lanes=lanes)
+    np.testing.assert_array_equal(
+        vrf.deshuffle(rv, eew=new, lanes=lanes), mem)
+
+
+def test_wrong_eew_deshuffle_corrupts():
+    """Reading with the wrong EEW corrupts the image — exactly the failure
+    mode the reshuffle injection exists to prevent."""
+    mem = _mem(64)
+    lv = vrf.shuffle(mem, eew=8, lanes=4)
+    wrong = vrf.deshuffle(lv, eew=1, lanes=4)
+    assert not np.array_equal(np.asarray(wrong), np.asarray(mem))
+
+
+# ---------------------------------------------------------------------------
+# tail policies + VRF bookkeeping (reshuffle injection)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(eew=st.sampled_from(EEWS), vl_frac=st.floats(0.1, 0.9),
+       seed=st.integers(0, 2**31 - 1))
+def test_tail_undisturbed(eew, vl_frac, seed):
+    lanes_ = 4
+    vlenb = eew * lanes_ * 8
+    n = vlenb // eew
+    vl = max(1, int(n * vl_frac))
+    old_mem = _mem(vlenb, seed)
+    new_mem = _mem(vlenb, seed + 1)
+    old_lane = vrf.shuffle(old_mem, eew=eew, lanes=lanes_)
+    out = vrf.write_register(old_lane, True, new_mem, jnp.asarray(vl),
+                             eew=eew, lanes=lanes_)
+    got = vrf.deshuffle(out, eew=eew, lanes=lanes_)
+    np.testing.assert_array_equal(got[:vl * eew], new_mem[:vl * eew])
+    np.testing.assert_array_equal(got[vl * eew:], old_mem[vl * eew:])
+
+
+def test_vrf_reshuffle_injection_counts():
+    """Front-end injects a reshuffle iff EEW changes AND the write is
+    partial (paper skips injection on full overwrite)."""
+    f = vrf.VectorRegisterFile(vlen_bits=512, lanes=4, default_eew=1)
+    vlenb = f.vlenb
+    f.write(3, _mem(vlenb, 0), eew=8)                 # full: no inject
+    assert f.stats["reshuffles"] == 0
+    f.write(3, _mem(vlenb, 1), eew=4, vl=vlenb // 4)  # full @4: no inject
+    assert f.stats["reshuffles"] == 0
+    f.write(3, _mem(vlenb, 2), eew=8, vl=2)           # partial, 4->8: inject
+    assert f.stats["reshuffles"] == 1
+    f.write(3, _mem(vlenb, 3), eew=8, vl=2)           # same EEW: no inject
+    assert f.stats["reshuffles"] == 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(old=st.sampled_from(EEWS), new=st.sampled_from(EEWS),
+       seed=st.integers(0, 2**31 - 1))
+def test_vrf_partial_write_preserves_tail_across_eew_change(old, new, seed):
+    """End-to-end §IV.D.2: partial write with new EEW must not corrupt the
+    tail elements written with the old EEW."""
+    f = vrf.VectorRegisterFile(vlen_bits=512, lanes=4, default_eew=old)
+    vlenb = f.vlenb
+    base = _mem(vlenb, seed)
+    f.write(7, base, eew=old)
+    upd = _mem(vlenb, seed + 1)
+    vl = (vlenb // new) // 2                          # half-register write
+    f.write(7, upd, eew=new, vl=vl)
+    img = np.asarray(f.read_mem_image(7))
+    np.testing.assert_array_equal(img[:vl * new], np.asarray(upd[:vl * new]))
+    np.testing.assert_array_equal(img[vl * new:], np.asarray(base[vl * new:]))
+
+
+# ---------------------------------------------------------------------------
+# mask unit
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(num_bits=st.integers(1, 200))
+def test_pack_unpack_roundtrip(num_bits):
+    rng = np.random.default_rng(num_bits)
+    bits = jnp.asarray(rng.integers(0, 2, num_bits).astype(bool))
+    packed = masking.pack_bits(bits, num_bits)
+    np.testing.assert_array_equal(masking.unpack_bits(packed, num_bits), bits)
+
+
+@settings(max_examples=30, deadline=None)
+@given(stored_eew=st.sampled_from(EEWS), lanes=st.sampled_from([2, 4, 8]),
+       seed=st.integers(0, 2**31 - 1))
+def test_mask_unit_distribution(stored_eew, lanes, seed):
+    """mask_unit delivers bit i to (lane i%lanes, slot i//lanes) no matter
+    which EEW the mask register was shuffled with (paper §IV.D.1)."""
+    vlenb = 8 * lanes * 2
+    num_elems = lanes * 16
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, num_elems).astype(bool)
+    mem_img = np.zeros(vlenb, np.uint8)
+    packed = np.asarray(masking.pack_bits(jnp.asarray(bits), num_elems))
+    mem_img[:packed.size] = packed
+    lane_bytes = vrf.shuffle(jnp.asarray(mem_img), eew=stored_eew,
+                             lanes=lanes)
+    out = masking.mask_unit(lane_bytes, stored_eew=stored_eew, lanes=lanes,
+                            num_elems=num_elems)
+    for i in range(num_elems):
+        assert bool(out[i % lanes, i // lanes]) == bool(bits[i])
+
+
+def test_predicated_write_keeps_old():
+    dest = jnp.arange(8.0)
+    out = masking.predicated(lambda x: x * 10)(
+        dest, jnp.arange(8.0), mask=jnp.arange(8) % 2 == 0)
+    np.testing.assert_array_equal(
+        out, jnp.where(jnp.arange(8) % 2 == 0, jnp.arange(8.0) * 10, dest))
