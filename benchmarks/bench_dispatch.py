@@ -66,14 +66,20 @@ def run(report):
     fresh = lambda: jnp.ones((64, 64), jnp.float32)
     ideal_run(fresh()).block_until_ready()   # compile
 
-    results = {
-        "blocking(depth=0)": timed(blocking),
-        "queued(depth=1)": timed(queued(1)),
-        "queued(depth=2)": timed(queued(2)),
-        "queued(depth=4)": timed(queued(4)),
-        "ideal(scan)": timed(
-            lambda: jax.block_until_ready(ideal_run(fresh()))),
+    fns = {
+        "blocking(depth=0)": blocking,
+        "queued(depth=1)": queued(1),
+        "queued(depth=2)": queued(2),
+        "queued(depth=4)": queued(4),
+        "ideal(scan)": lambda: jax.block_until_ready(ideal_run(fresh())),
     }
+    # interleaved best-of rounds: load noise on a time-shared container is
+    # one-sided (slowdowns) and drifts over seconds — alternating the modes
+    # decorrelates it from the mode axis, max-aggregation discards bursts
+    results = {k: 0.0 for k in fns}
+    for _ in range(3):
+        for k, fn in fns.items():
+            results[k] = max(results[k], timed(fn))
     ideal = results["ideal(scan)"]
     rows = [{"mode": k, "steps_per_s": round(v, 1),
              "ideality": round(v / ideal, 3)} for k, v in results.items()]

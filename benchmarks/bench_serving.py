@@ -1,0 +1,155 @@
+"""Fig. 2/3 dispatcher sweep reproduced at the *serving* layer.
+
+The paper measures fmatmul throughput against dispatcher capability
+(starved scalar issue path → d-deep accelerator-port queue → ideal
+pre-filled queue).  Here the workload is a mixed prefill/decode serving
+trace through the continuous-batching engine, and the dispatcher knob is
+the engine's DispatchQueue depth:
+
+  * ``blocking``   — depth 0, host sync every decode step,
+  * ``queued(d)``  — d steps in flight (the accelerator-port queue),
+  * ``ideal``      — the decode loop as one ``lax.scan`` over a static
+                     batch: no admission/retirement, the pre-filled queue.
+
+Reported per mode: tokens/s and estimated device-idle fraction (1 − pure
+device time ÷ wall).  The paper-claim checks are the serving analogue of
+Fig. 3's monotone ideality curve.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import registry
+from repro.runtime.serving import Request, ServingEngine
+
+CFG = ArchConfig(name="bench-serve-tiny", family="dense", n_layers=2,
+                 d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
+                 head_dim=16, param_dtype="float32", act_dtype="float32",
+                 max_seq=128)
+
+
+def _workload(rng, n_requests, gen):
+    lens = [8, 12, 16]
+    return [(rng.integers(0, CFG.vocab, lens[i % len(lens)]).astype(np.int32),
+             gen) for i in range(n_requests)]
+
+
+def _run_engine(model, params, reqs, *, slots, max_seq, depth):
+    eng = ServingEngine(model, CFG, params, max_slots=slots,
+                        max_seq=max_seq, depth=depth)
+    for i, (prompt, gen) in enumerate(reqs):
+        eng.submit(Request(uid=i, prompt=prompt, max_new_tokens=gen))
+    t0 = time.perf_counter()
+    out = eng.run()
+    dt = time.perf_counter() - t0
+    tokens = sum(o.size for o in out.values())
+    return tokens, dt, eng
+
+
+def run(report, smoke: bool = False):
+    n_requests = 6 if smoke else 12
+    gen = 12 if smoke else 32
+    slots = 3 if smoke else 4
+    repeats = 2
+    max_seq = 16 + gen + 1
+    model = registry.build_model(CFG)
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs = _workload(rng, n_requests, gen)
+
+    # pure device time of one decode step (for the idle-fraction estimate)
+    cache = model.init_cache(slots, max_seq)
+    tok = jnp.zeros((slots,), jnp.int32)
+    pos = jnp.full((slots,), 16, jnp.int32)
+    step = jax.jit(lambda t, c, p: model.decode_step(params, t, c, p))
+    logits, cache2 = step(tok, cache, pos)
+    jax.block_until_ready(logits)
+    t0 = time.perf_counter()
+    n_probe = 30
+    for _ in range(n_probe):
+        logits, _ = step(tok, cache, pos)
+    jax.block_until_ready(logits)
+    t_step_dev = (time.perf_counter() - t0) / n_probe
+
+    modes = [("blocking(depth=0)", 0), ("queued(depth=2)", 2),
+             ("queued(depth=4)", 4)]
+    # warm the jit caches once, then measure in *interleaved* rounds with
+    # best-of aggregation: load noise on a time-shared container is
+    # one-sided (slowdowns) and drifts over seconds, so alternating modes
+    # decorrelates it from the mode axis
+    best = {}
+    for label, depth in modes:
+        best[label] = (0.0, _run_engine(model, params, reqs, slots=slots,
+                                        max_seq=max_seq, depth=depth))
+    for _ in range(repeats + 1):
+        for label, depth in modes:
+            tokens, dt, eng = _run_engine(model, params, reqs, slots=slots,
+                                          max_seq=max_seq, depth=depth)
+            if tokens / dt > best[label][0]:
+                best[label] = (tokens / dt, (tokens, dt, eng))
+
+    rows = []
+    results = {}
+    outputs = {}
+    for label, _depth in modes:
+        best_tps, (tokens, dt, eng) = best[label]
+        idle = max(0.0, 1.0 - eng.stats["decode_steps"] * t_step_dev / dt)
+        results[label] = best_tps
+        outputs[label] = {i: eng._results[i].output().tolist()
+                          for i in range(n_requests)}
+        rows.append({"mode": label, "tokens_per_s": round(best_tps, 1),
+                     "device_idle_frac": round(idle, 3),
+                     "decode_steps": eng.stats["decode_steps"],
+                     "preempted": eng.scheduler.stats["preempted"]})
+
+    # ideal: static batch, whole decode loop compiled as one scan
+    prompts = np.stack([np.resize(p, 16) for p, _ in reqs[:slots]])
+    cache = model.init_cache(slots, max_seq)
+    logits, cache = jax.jit(model.prefill)(params, jnp.asarray(prompts),
+                                           cache)
+    state0 = (jnp.argmax(logits, -1).astype(jnp.int32), cache,
+              jnp.full((slots,), 16, jnp.int32))
+
+    def body(s, _):
+        t, c, p = s
+        logits, c = model.decode_step(params, t, c, p)
+        t = jnp.argmax(logits, -1).astype(jnp.int32)
+        return (t, c, p + 1), t
+
+    scan_fn = jax.jit(lambda s: lax.scan(body, s, None, length=gen - 1))
+    jax.block_until_ready(scan_fn(state0))       # compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(scan_fn(state0))
+    dt = time.perf_counter() - t0
+    # gen-1 tokens per slot inside the timed region (the first token came
+    # from the untimed prefill)
+    ideal_tps = slots * (gen - 1) / dt
+    idle = max(0.0, 1.0 - (gen - 1) * t_step_dev / dt)
+    results["ideal(scan)"] = ideal_tps
+    rows.append({"mode": "ideal(scan)", "tokens_per_s": round(ideal_tps, 1),
+                 "device_idle_frac": round(idle, 3),
+                 "decode_steps": gen - 1, "preempted": 0})
+    report.table("serving_dispatch_sweep", rows)
+
+    same_tokens = outputs["blocking(depth=0)"] == outputs["queued(depth=2)"]
+    q2, q4 = results["queued(depth=2)"], results["queued(depth=4)"]
+    blocking = results["blocking(depth=0)"]
+    report.claims("serving", {
+        "queued(d>=2) tokens/s >= blocking": (
+            max(q2, q4) >= blocking,
+            f"queued={max(q2, q4):.1f} vs blocking={blocking:.1f}"),
+        "dispatch modes produce identical tokens": (
+            same_tokens, "greedy decode is dispatch-depth invariant"),
+        "ideal(scan) is the upper bound (>= 0.85x slack)": (
+            ideal_tps >= max(q2, q4) * 0.85,
+            f"ideal={ideal_tps:.1f} vs best queued={max(q2, q4):.1f}"),
+    })
+    report.note("serving",
+                f"pure device step {t_step_dev * 1e3:.2f} ms; swing "
+                f"ideal/blocking = {ideal_tps / blocking:.2f}x")

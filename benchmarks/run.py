@@ -1,14 +1,24 @@
-"""Benchmark harness: ``PYTHONPATH=src python -m benchmarks.run``.
+"""Benchmark harness: ``PYTHONPATH=src python -m benchmarks.run``
+(or ``python benchmarks/run.py`` — the paths self-bootstrap).
 
 One module per paper artifact (Fig. 2, Fig. 3, Table II, Table III,
-fconv2d).  Each emits tables + pass/fail claims; the run exits non-zero if
-any paper-claim check fails.
+fconv2d) plus the serving-layer dispatcher sweep.  Each emits tables +
+pass/fail claims; the run exits non-zero if any paper-claim check fails.
+``--smoke`` runs the fast claim-check subset (CI gate): the dispatch
+ideality curve and the serving sweep at reduced sizes.
 """
 from __future__ import annotations
 
-import json
+import argparse
+import inspect
+import os
 import sys
 import time
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_REPO, os.path.join(_REPO, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 
 class Report:
@@ -45,19 +55,31 @@ class Report:
         print(f"  note[{name}]: {text}")
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast claim-check subset (CI gate)")
+    args = ap.parse_args(argv)
     from benchmarks import (bench_conv2d, bench_dispatch, bench_matmul,
-                            bench_reduction, bench_roofline)
+                            bench_reduction, bench_roofline, bench_serving)
+    benches = [("fig2/matmul", bench_matmul),
+               ("tableII/reduction", bench_reduction),
+               ("fig3/dispatch", bench_dispatch),
+               ("conv2d", bench_conv2d),
+               ("tableIII/roofline", bench_roofline),
+               ("serving/dispatch-sweep", bench_serving)]
+    if args.smoke:
+        benches = [("fig3/dispatch", bench_dispatch),
+                   ("serving/dispatch-sweep", bench_serving)]
     report = Report()
     t0 = time.time()
-    for name, mod in [("fig2/matmul", bench_matmul),
-                      ("tableII/reduction", bench_reduction),
-                      ("fig3/dispatch", bench_dispatch),
-                      ("conv2d", bench_conv2d),
-                      ("tableIII/roofline", bench_roofline)]:
+    for name, mod in benches:
         print(f"\n################ {name} ################")
         try:
-            mod.run(report)
+            if "smoke" in inspect.signature(mod.run).parameters:
+                mod.run(report, smoke=args.smoke)
+            else:
+                mod.run(report)
         except Exception as e:
             report.failed.append(f"{name}: crashed: {e!r}")
             print(f"  CRASH {name}: {e!r}")

@@ -18,7 +18,6 @@ Model elements (all in cycles, per the paper):
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 
 from repro.configs.ara_vu import CONFIG as VU

@@ -8,7 +8,6 @@ Run:  PYTHONPATH=src python examples/serve_lm.py
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.launch.serve import generate

@@ -18,8 +18,12 @@ Fault-tolerance contract:
   * **Retention** — ``keep`` most recent checkpoints are retained; older
     ones are deleted after a successful save (never before).
 
-Format: one zstd-compressed msgpack file per checkpoint holding flattened
-``path -> (dtype, shape, raw bytes)`` plus a JSON-able metadata dict.
+Format: one compressed msgpack file per checkpoint holding flattened
+``path -> (dtype, shape, raw bytes)`` plus a JSON-able metadata dict.  Files
+start with a 5-byte header ``RPK1`` + codec tag (``z`` = zstd, ``d`` =
+zlib/deflate); ``zstandard`` is optional — without it saves fall back to
+``zlib`` and restores of zlib-tagged (or headerless-zlib) files still work,
+so a bare interpreter can run the full checkpoint path.
 """
 from __future__ import annotations
 
@@ -29,16 +33,55 @@ import queue
 import re
 import shutil
 import threading
+import zlib
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as zstd
+except ImportError:          # optional dep: fall back to stdlib zlib
+    zstd = None
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
 _COMPLETE = "_COMPLETE"
+
+_MAGIC = b"RPK1"
+_CODEC_ZSTD = b"z"
+_CODEC_ZLIB = b"d"
+# legacy (pre-header) files were always zstd; its frame magic for detection
+_ZSTD_FRAME_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(raw: bytes, level: int) -> bytes:
+    if zstd is not None:
+        return _MAGIC + _CODEC_ZSTD \
+            + zstd.ZstdCompressor(level=level).compress(raw)
+    return _MAGIC + _CODEC_ZLIB + zlib.compress(raw, level)
+
+
+def _decompress(buf: bytes) -> bytes:
+    if buf[:4] == _MAGIC:
+        codec, body = buf[4:5], buf[5:]
+        if codec == _CODEC_ZSTD:
+            if zstd is None:
+                raise RuntimeError(
+                    "checkpoint is zstd-compressed but zstandard is not "
+                    "installed; `pip install zstandard` to restore it")
+            return zstd.ZstdDecompressor().decompress(body)
+        if codec == _CODEC_ZLIB:
+            return zlib.decompress(body)
+        raise ValueError(f"unknown checkpoint codec tag {codec!r}")
+    # legacy headerless file: always zstd
+    if buf[:4] == _ZSTD_FRAME_MAGIC:
+        if zstd is None:
+            raise RuntimeError(
+                "legacy zstd checkpoint needs the zstandard package")
+        return zstd.ZstdDecompressor().decompress(buf)
+    return zlib.decompress(buf)
 
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
@@ -84,7 +127,7 @@ def save_pytree(path: str, tree: Any, *, meta: Optional[dict] = None,
         },
     }
     raw = msgpack.packb(payload, use_bin_type=True)
-    comp = zstd.ZstdCompressor(level=level).compress(raw)
+    comp = _compress(raw, level)
     tmp = f"{path}.tmp.{os.getpid()}"
     with open(tmp, "wb") as f:
         f.write(comp)
@@ -101,7 +144,7 @@ def restore_pytree(path: str, template: Any,
     with (resharding happens here — the stored value is the full array).
     """
     with open(path, "rb") as f:
-        raw = zstd.ZstdDecompressor().decompress(f.read())
+        raw = _decompress(f.read())
     payload = msgpack.unpackb(raw, raw=False)
     flat = {
         k: np.frombuffer(v["data"], dtype=np.dtype(v["dtype"]))

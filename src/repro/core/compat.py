@@ -1,0 +1,133 @@
+"""jax version-compatibility shims (green-CI baseline).
+
+The codebase is written against the jax ≥ 0.5 explicit-sharding surface
+(``jax.sharding.AxisType``, ``jax.sharding.get_abstract_mesh``,
+``jax.shard_map``, ``jax.set_mesh``); CI and this container pin jax 0.4.37,
+where those names either don't exist or live elsewhere.  Every use funnels
+through this module so the rest of the tree reads as if the new API existed,
+and upgrading jax later means deleting shims here — nothing else moves.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+
+import jax
+from jax.sharding import Mesh
+
+try:
+    from jax.sharding import AxisType
+except ImportError:
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+# Partial-auto shard_map (manual over some mesh axes, GSPMD over the rest)
+# hard-crashes the XLA partitioner bundled with pre-0.5 jax
+# (Check failed: IsManualSubgroup).  The explicit-collective perf paths
+# (hier* gradient reduction, MoE local dispatch, bf16_scatter TP boundary)
+# gate on this and fall back to their GSPMD-equivalent formulations.
+PARTIAL_AUTO_SHARD_MAP = jax.__version_info__ >= (0, 5, 0)
+
+
+def mesh_axis_types(mesh) -> tuple:
+    """``mesh.axis_types`` on new jax; all-Auto on meshes without the attr
+    (pre-0.5 meshes have no Manual/Explicit axes to report)."""
+    tys = getattr(mesh, "axis_types", None)
+    if tys is None:
+        return (AxisType.Auto,) * len(mesh.axis_names)
+    return tuple(tys)
+
+
+if hasattr(jax.sharding, "get_abstract_mesh"):
+    get_abstract_mesh = jax.sharding.get_abstract_mesh
+else:
+    def get_abstract_mesh():
+        """The mesh of the current trace: pre-0.5 jax keeps the active
+        ``with mesh:`` context in the thread-resource env (an empty Mesh
+        when no context is active — same contract as the new API)."""
+        from jax._src.mesh import thread_resources
+        return thread_resources.env.physical_mesh
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None) -> Mesh:
+    try:
+        return jax.make_mesh(axis_shapes, axis_names, axis_types=axis_types)
+    except TypeError:        # 0.4.x make_mesh has no axis_types
+        return jax.make_mesh(axis_shapes, axis_names)
+
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=None):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=None):
+        # new jax: axis_names = the *manual* axes (rest stay auto/GSPMD);
+        # 0.4.x spells the complement as auto=<axes left to GSPMD>.
+        # check_vma was called check_rep before 0.6.
+        kw = {} if check_vma is None else {"check_rep": check_vma}
+        if axis_names is not None:
+            auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+            if auto:
+                kw["auto"] = auto
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)
+
+
+if hasattr(jax, "set_mesh"):
+    set_mesh = jax.set_mesh
+else:
+    @contextlib.contextmanager
+    def set_mesh(mesh: Mesh):
+        with mesh:
+            yield mesh
+
+
+def trace_manual_axes() -> frozenset:
+    """Mesh axes that are *manual* in the current trace.
+
+    New jax reports them through ``mesh.axis_types`` on the abstract mesh;
+    pre-0.5 jax only knows them as the named axes bound by an enclosing
+    ``shard_map``/``pmap``, recorded in the trace's axis env."""
+    try:
+        from jax._src import core as jcore
+        return frozenset(n for n in jcore.get_axis_env().axis_names()
+                         if isinstance(n, str))
+    except Exception:
+        return frozenset()
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict.  Pre-0.5 jax returned a
+    one-element list of per-program dicts; new jax returns the dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+def abstract_mesh(axis_sizes, axis_names):
+    """``jax.sharding.AbstractMesh(sizes, names)``; the pre-0.5 constructor
+    took a single ``((name, size), ...)`` tuple instead."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
+def pallas_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` (spelled TPUCompilerParams before jax 0.6)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)

@@ -32,7 +32,6 @@ hardware constants stay in ``roofline``.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Optional
 

@@ -16,10 +16,12 @@ degrades to replicated, which is how smoke tests run.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Optional
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import compat
 
 # Canonical mesh axis names (see launch/mesh.py).
 POD_AXIS = "pod"
@@ -111,12 +113,18 @@ def constrain(x: jax.Array, rules: LogicalRules, *logical_axes) -> jax.Array:
     are dropped from the spec — the constraint then only refers to the
     still-auto (GSPMD) axes, e.g. the lane axis.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or mesh.empty:
         return x
+    manual = compat.trace_manual_axes()
+    if manual and not hasattr(jax.sharding, "get_abstract_mesh"):
+        # pre-0.5 jax: mixing wsc with partial-manual shard_map trips a hard
+        # XLA partitioner check (IsManualSubgroup) — skip the hint; GSPMD
+        # still places the auto axes, just without our nudge.
+        return x
     auto_axes = tuple(
-        name for name, ty in zip(mesh.axis_names, mesh.axis_types)
-        if ty != jax.sharding.AxisType.Manual)
+        name for name, ty in zip(mesh.axis_names, compat.mesh_axis_types(mesh))
+        if ty != compat.AxisType.Manual and name not in manual)
     if not auto_axes:
         return x
     rules = dataclasses.replace(rules, mesh_axes=auto_axes)

@@ -16,17 +16,17 @@ so the kernels stay branch-free.
 """
 from __future__ import annotations
 
-import functools
 from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import stripmine
+from repro.core import masking, stripmine
 from repro.kernels import conv2d as _conv2d
 from repro.kernels import dotp as _dotp
 from repro.kernels import flash_attention as _fa
+from repro.kernels import flash_decode as _fd
 from repro.kernels import matmul as _matmul
 from repro.kernels import ref
 from repro.kernels import ssd as _ssd
@@ -246,6 +246,99 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                               scale=scale, bq=bq_, bk=bk_,
                               interpret=(mode == "interpret"))
     return out[:, :sq]
+
+
+# ---------------------------------------------------------------------------
+# flash-decode (serving decode step; per-slot length masking)
+# ---------------------------------------------------------------------------
+
+def _flash_decode_ref(q, k, v, *, lengths, window, scale, bk):
+    """Blockwise one-token decode attention in pure jnp.
+
+    q: (B, KVH, G, hd); k/v: (B, S, KVH, hd); lengths: (B,).  Strip-mines
+    the KV axis with an online-softmax carry; the per-slot live length is
+    applied as tail predication (core.masking.tail_mask) per KV strip —
+    the per-row ``vl`` of the serving engine's slot batch.
+    """
+    b, s, kvh, hd = k.shape
+    g = q.shape[2]
+    scale = scale if scale is not None else hd ** -0.5
+    bk = min(bk, s)
+    kp = _pad_to(k, bk, 1)
+    vp = _pad_to(v, bk, 1)
+    nkb = kp.shape[1] // bk
+    q32 = q.astype(jnp.float32) * scale
+
+    ks = jnp.moveaxis(kp.reshape(b, nkb, bk, kvh, hd), 1, 0)
+    vs = jnp.moveaxis(vp.reshape(b, nkb, bk, kvh, hd), 1, 0)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, jb = inp
+        # live tail of this strip: elements with kpos < lengths  (and inside
+        # the sliding window when one is set)
+        mask = masking.tail_mask(bk, (lengths - jb * bk)[:, None])  # (B, bk)
+        if window is not None:
+            kpos = jb * bk + jnp.arange(bk)[None, :]
+            mask &= kpos >= (lengths - window)[:, None]
+        sc = jnp.einsum("bkgh,bskh->bkgs", q32, kb.astype(jnp.float32))
+        sc = jnp.where(mask[:, None, None, :], sc, _fd.NEG_INF)
+        m_new = jnp.maximum(m, sc.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.where(mask[:, None, None, :],
+                      jnp.exp(sc - m_new[..., None]), 0.0)
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgs,bskh->bkgh", p, vb.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    init = (jnp.full((b, kvh, g), _fd.NEG_INF, jnp.float32),
+            jnp.zeros((b, kvh, g), jnp.float32),
+            jnp.zeros((b, kvh, g, hd), jnp.float32))
+    (m, l, acc), _ = lax.scan(body, init, (ks, vs, jnp.arange(nkb)))
+    safe = jnp.where(l > 0, l, 1.0)
+    return (acc / safe[..., None]).astype(q.dtype)
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                 lengths: Optional[jax.Array] = None,
+                 window: Optional[int] = None,
+                 scale: Optional[float] = None, bk: int = 512,
+                 mode: Optional[Mode] = None) -> jax.Array:
+    """One-token decode attention with per-sequence length masking.
+
+    q: (B, H, hd) — the current token's queries; k/v: (B, S, KVH, hd) — the
+    (padded) KV cache; lengths: (B,) int32 count of live KV entries per
+    sequence (``None`` = all S live, e.g. enc-dec cross-attention).
+    Returns (B, H, hd).  GQA is handled here: H is grouped onto KVH so each
+    KV head is read once for its H/KVH query heads.
+    """
+    b, h, hd = q.shape
+    _, s, kvh, _ = k.shape
+    if h % kvh:
+        raise ValueError(f"n_heads={h} not divisible by kv_heads={kvh}")
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, hd)
+    if lengths is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+    mode = mode or _resolved()
+    if mode == "ref":
+        out = _flash_decode_ref(qg, k, v, lengths=lengths, window=window,
+                                scale=scale, bk=bk)
+        return out.reshape(b, h, hd)
+    bk_ = min(bk, s)
+    kp = _pad_to(k, bk_, 1)
+    vp = _pad_to(v, bk_, 1)
+    # fold (B, KVH) into the kernel grid axis; padded keys sit at positions
+    # >= every length, so the kernel's tail mask drops them
+    kf = jnp.moveaxis(kp, 2, 1).reshape(b * kvh, kp.shape[1], hd)
+    vf = jnp.moveaxis(vp, 2, 1).reshape(b * kvh, vp.shape[1], hd)
+    qf = qg.reshape(b * kvh, g, hd)
+    lf = jnp.repeat(lengths, kvh)
+    out = _fd.flash_decode(qf, kf, vf, lf, window=window, scale=scale,
+                           bk=bk_, interpret=(mode == "interpret"))
+    return out.reshape(b, h, hd)
 
 
 # ---------------------------------------------------------------------------

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import compat
+
 NEG_INF = -1e30
 
 
@@ -100,7 +102,7 @@ def ssd(x: jax.Array, log_a: jax.Array, B: jax.Array, C: jax.Array, *,
             jax.ShapeDtypeStruct((bh, n, p), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.pallas_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, log_a, B, C)

@@ -13,7 +13,9 @@ touches jax device state (the dry-run must set
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.core.compat import AxisType, make_mesh
 
 SINGLE_POD_SHAPE = (16, 16)
 MULTI_POD_SHAPE = (2, 16, 16)
@@ -22,14 +24,14 @@ MULTI_POD_SHAPE = (2, 16, 16)
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = MULTI_POD_SHAPE if multi_pod else SINGLE_POD_SHAPE
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return make_mesh(shape, axes,
+                     axis_types=(AxisType.Auto,) * len(shape))
 
 
 def make_test_mesh(shape=(1, 1), axes=("data", "model")) -> Mesh:
     """Small mesh over however many (CPU) devices the test process has."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return make_mesh(shape, axes,
+                     axis_types=(AxisType.Auto,) * len(shape))
 
 
 def chips(mesh: Mesh) -> int:

@@ -1,12 +1,14 @@
-"""Serving launcher: batched prefill + decode with a dispatch queue.
+"""Serving launcher: continuous batching over the dispatcher model (C6).
 
 ``python -m repro.launch.serve --arch <id> --requests 8 --gen 32``
 
-The serving loop mirrors the paper's scalar/vector split: the host
-(CVA6-analogue) assembles request batches and enqueues device steps; the
-device (vector-unit-analogue) never waits on the host because the dispatch
-queue keeps ``depth`` decode steps in flight (C6).  Prefill chains into
-decode by reusing the prompt-filled cache (C5).
+Built on :mod:`repro.runtime.serving`: a request queue + scheduler admits
+and retires decode sequences every step, a slot-based paged KV cache holds
+the batch, and decode steps flow through a ``DispatchQueue`` so the host
+(the CVA6-analogue) stays out of the device's critical path.  ``--depth 0``
+reproduces the paper's starved-dispatcher worst case; ``--slots`` smaller
+than ``--requests`` exercises slot reuse; ``--pages`` under-provisions the
+cache pool to exercise preemption + recompute.
 """
 from __future__ import annotations
 
@@ -14,44 +16,40 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dispatch import DispatchQueue
-from repro.launch.mesh import make_test_mesh
 from repro.models import registry
+from repro.runtime.serving import Request, ServingEngine
+
+
+def make_engine(bundle, params, *, max_slots, max_seq, depth=2,
+                page_size=16, num_pages=None) -> ServingEngine:
+    return ServingEngine(bundle.model, bundle.cfg, params,
+                         max_slots=max_slots, max_seq=max_seq, depth=depth,
+                         page_size=page_size, num_pages=num_pages)
 
 
 def generate(bundle, params, prompts: np.ndarray, *, gen_tokens: int,
-             depth: int = 2, greedy: bool = True, extras=None):
-    """prompts: (B, S) int32. Returns (B, gen_tokens) int32."""
-    model = bundle.model
+             depth: int = 2, extras=None, max_slots=None,
+             page_size: int = 16, num_pages=None) -> np.ndarray:
+    """prompts: (B, S) int32.  Returns (B, gen_tokens) int32.
+
+    Batch-of-equal-length convenience wrapper over the engine (the
+    examples' surface).  ``extras`` are batched (B, ...) prefill side
+    inputs, sliced per request.
+    """
     b, s = prompts.shape
-    max_seq = s + gen_tokens + 1
-    cache = model.init_cache(b, max_seq)
-    logits, cache = jax.jit(
-        lambda p, t, c: model.prefill(p, t, c, **(extras or {})))(
-            params, jnp.asarray(prompts), cache)
-
-    def sample(logits):
-        return jnp.argmax(logits, -1).astype(jnp.int32)
-
-    def decode(carry, _):
-        token, cache, pos = carry
-        logits, cache = model.decode_step(params, token, cache, pos)
-        return (sample(logits), cache, pos + 1), None
-
-    step = jax.jit(lambda c: decode(c, None)[0])
-    token = sample(logits)
-    pos = jnp.full((b,), s, jnp.int32)
-    q = DispatchQueue(lambda st: step(st), depth=depth)
-    out = [np.asarray(token)]
-    state = (token, cache, pos)
-    for _ in range(gen_tokens - 1):
-        state = q.submit(state)
-        out.append(np.asarray(state[0]))
-    q.drain()
-    return np.stack(out, axis=1)
+    prefix = (bundle.cfg.n_patch_tokens
+              if bundle.cfg.family == "vlm" else 0)
+    eng = make_engine(bundle, params, max_slots=max_slots or b,
+                      max_seq=s + prefix + gen_tokens + 1, depth=depth,
+                      page_size=page_size, num_pages=num_pages)
+    for i in range(b):
+        eng.submit(Request(
+            uid=i, prompt=prompts[i], max_new_tokens=gen_tokens,
+            extras={k: np.asarray(v)[i] for k, v in (extras or {}).items()}))
+    out = eng.run()
+    return np.stack([out[i] for i in range(b)], axis=0)
 
 
 def main(argv=None):
@@ -61,32 +59,53 @@ def main(argv=None):
     p.add_argument("--prompt-len", type=int, default=32)
     p.add_argument("--gen", type=int, default=32)
     p.add_argument("--depth", type=int, default=2)
+    p.add_argument("--slots", type=int, default=None,
+                   help="decode slots (default: --requests)")
+    p.add_argument("--page-size", type=int, default=16)
+    p.add_argument("--pages", type=int, default=None,
+                   help="cache pool pages (default: full arena)")
     p.add_argument("--reduced", action="store_true", default=True)
     args = p.parse_args(argv)
 
-    mesh = make_test_mesh((jax.device_count(), 1), ("data", "model"))
     bundle = registry.build(args.arch, reduced=args.reduced)
     cfg = bundle.cfg
     params = jax.jit(bundle.model.init)(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    prompts = rng.integers(
-        0, cfg.vocab, (args.requests, args.prompt_len)).astype(np.int32)
+    # mixed lengths: odd requests get a 25%-shorter prompt, so admission /
+    # retirement actually interleave
+    lens = [args.prompt_len if i % 2 == 0 else max(1, args.prompt_len * 3 // 4)
+            for i in range(args.requests)]
     extras = {}
     if cfg.family == "encdec":
-        extras["frames"] = jnp.asarray(rng.standard_normal(
-            (args.requests, cfg.enc_seq, cfg.d_model), dtype=np.float32))
+        extras["frames"] = rng.standard_normal(
+            (args.requests, cfg.enc_seq, cfg.d_model)).astype(np.float32)
     if cfg.family == "vlm":
-        extras["patch_embeds"] = jnp.asarray(rng.standard_normal(
-            (args.requests, cfg.n_patch_tokens, cfg.d_model),
-            dtype=np.float32))
+        extras["patch_embeds"] = rng.standard_normal(
+            (args.requests, cfg.n_patch_tokens, cfg.d_model)
+        ).astype(np.float32)
+    prefix = cfg.n_patch_tokens if cfg.family == "vlm" else 0
+
+    eng = make_engine(bundle, params,
+                      max_slots=args.slots or args.requests,
+                      max_seq=args.prompt_len + prefix + args.gen + 1,
+                      depth=args.depth, page_size=args.page_size,
+                      num_pages=args.pages)
+    for i in range(args.requests):
+        eng.submit(Request(
+            uid=i, prompt=rng.integers(0, cfg.vocab, lens[i]),
+            max_new_tokens=args.gen,
+            extras={k: v[i] for k, v in extras.items()}))
 
     t0 = time.perf_counter()
-    tokens = generate(bundle, params, prompts, gen_tokens=args.gen,
-                      depth=args.depth, extras=extras)
+    out = eng.run()
     dt = time.perf_counter() - t0
-    tps = args.requests * args.gen / dt
-    print(f"generated {tokens.shape} in {dt:.2f}s = {tps:.1f} tok/s")
-    print("first request:", tokens[0][:16], "...")
+    total = sum(o.size for o in out.values())
+    print(f"{args.arch}: {args.requests} requests, {total} tokens in "
+          f"{dt:.2f}s = {total / dt:.1f} tok/s "
+          f"(depth={args.depth}, slots={args.slots or args.requests})")
+    print("engine:", eng.stats)
+    print("scheduler:", eng.scheduler.stats)
+    print("first request:", out[0][:16], "...")
     return 0
 
 

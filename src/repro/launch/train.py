@@ -14,9 +14,8 @@ from __future__ import annotations
 import argparse
 
 import jax
-import numpy as np
 
-from repro.configs.base import SHAPES, ShapeConfig
+from repro.configs.base import ShapeConfig
 from repro.data import make_pipeline
 from repro.data.pipeline import family_extras_fn
 from repro.launch.mesh import make_test_mesh

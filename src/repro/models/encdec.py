@@ -10,8 +10,6 @@ encoder is never re-run).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

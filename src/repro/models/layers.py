@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from jax.ad_checkpoint import checkpoint_name
 
-from repro.core import lanes
+from repro.core import compat, lanes
 from repro.kernels import ops
 
 RULES = lanes.LogicalRules()
@@ -52,16 +52,18 @@ def tp_boundary_dot(h, w, adtype, rules):
     """Lane-contracted projection at a TP boundary: out = h @ w, with the
     contraction dim lane-sharded.  Output is seq_tp-sharded (or replicated
     when seq_tp is off / no lane axis is present)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     use_explicit = (
-        TP_REDUCE == "bf16_scatter" and h.ndim == 3
+        TP_REDUCE == "bf16_scatter" and compat.PARTIAL_AUTO_SHARD_MAP
+        and h.ndim == 3
         and mesh is not None and not mesh.empty
         and lanes.LANE_AXIS in mesh.axis_names
         and mesh.shape[lanes.LANE_AXIS] > 1
         and h.shape[1] % mesh.shape[lanes.LANE_AXIS] == 0
         and h.shape[-1] % mesh.shape[lanes.LANE_AXIS] == 0
-        and mesh.axis_types[mesh.axis_names.index(lanes.LANE_AXIS)]
-        != jax.sharding.AxisType.Manual)
+        and compat.mesh_axis_types(mesh)[
+            mesh.axis_names.index(lanes.LANE_AXIS)]
+        != compat.AxisType.Manual)
     if not use_explicit:
         seq_ax = "seq_tp" if h.ndim == 3 else None
         if TP_REDUCE == "bf16_dot":
@@ -88,7 +90,7 @@ def tp_boundary_dot(h, w, adtype, rules):
                                    scatter_dimension=1, tiled=True)
         return out.astype(adtype)
 
-    out = jax.shard_map(
+    out = compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(None, None, lanes.LANE_AXIS), P(lanes.LANE_AXIS, None)),
         out_specs=P(None, lanes.LANE_AXIS, None),
@@ -265,21 +267,17 @@ def attention_decode(p: dict, cfg, x_t: jax.Array, cache: dict,
     else:
         k_all, v_all = layer_kv
         kv_len_mask_pos = None
-    skv = k_all.shape[1]
-    group = nh // nkv
-    # logits: (B, nh, Skv) via per-kv-head grouping
-    qh = q[:, 0].reshape(b, nkv, group, hd)
-    scores = jnp.einsum("bkgh,bskh->bkgs", qh.astype(jnp.float32),
-                        k_all.astype(jnp.float32)) * (hd ** -0.5)
-    kpos = jnp.arange(skv)
-    if kv_len_mask_pos is not None:
-        mask = kpos[None] <= kv_len_mask_pos[:, None]          # causal
-        if window is not None:
-            mask &= kpos[None] > (kv_len_mask_pos[:, None] - window)
-        scores = jnp.where(mask[:, None, None, :], scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1)
-    o = jnp.einsum("bkgs,bskh->bkgh", probs,
-                   v_all.astype(jnp.float32)).astype(adt)
+    # flash-decode over the (kv_seq lane-sharded) cache: each lane attends
+    # its KV slice, the online-softmax combine is the tiny cross-lane
+    # reduction (C4 applied to attention — see core/lanes.py "kv_seq")
+    k_all = lanes.constrain(k_all, rules, "batch", "kv_seq", None, None)
+    v_all = lanes.constrain(v_all, rules, "batch", "kv_seq", None, None)
+    # live cache length per sample = pos+1 (the slot's vl); None for static
+    # cross-attention KV, which attends everything
+    lengths = None if kv_len_mask_pos is None else kv_len_mask_pos + 1
+    o = ops.flash_decode(
+        q[:, 0], k_all, v_all, lengths=lengths,
+        window=window if kv_len_mask_pos is not None else None)
     out = _dot(o.reshape(b, nh * hd), p["wo"], adt)
     return out, cache
 

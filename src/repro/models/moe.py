@@ -22,7 +22,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import lanes
+from repro.core import compat, lanes
 from repro.models import layers as L
 
 RULES = L.RULES
@@ -75,13 +75,14 @@ def set_moe_dispatch(mode: str) -> None:
 
 def moe_mlp_apply(p, cfg, x, *, rules=RULES):
     """x: (B, S, d) -> (y, aux_loss).  Dispatch per MOE_DISPATCH."""
-    if MOE_DISPATCH == "local":
-        mesh = jax.sharding.get_abstract_mesh()
+    if MOE_DISPATCH == "local" and compat.PARTIAL_AUTO_SHARD_MAP:
+        mesh = compat.get_abstract_mesh()
         if mesh is not None and not mesh.empty:
             dp = tuple(a for a in (lanes.POD_AXIS, lanes.DATA_AXIS)
                        if a in mesh.axis_names
-                       and mesh.axis_types[mesh.axis_names.index(a)]
-                       != jax.sharding.AxisType.Manual
+                       and compat.mesh_axis_types(mesh)[
+                           mesh.axis_names.index(a)]
+                       != compat.AxisType.Manual
                        and mesh.shape[a] > 1)
             dp_size = 1
             for a in dp:
@@ -105,7 +106,7 @@ def moe_mlp_apply(p, cfg, x, *, rules=RULES):
                     y, aux = _moe_mlp_global(p_, cfg, x_loc, rules=rules)
                     return y.astype(x.dtype), jax.lax.pmean(aux, dp)
 
-                return jax.shard_map(
+                return compat.shard_map(
                     body, mesh=mesh,
                     in_specs=(P(), P(dp if len(dp) > 1 else dp[0])),
                     out_specs=(P(dp if len(dp) > 1 else dp[0]), P()),

@@ -12,15 +12,12 @@ against these without ever allocating device memory.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs import (ara_vu, base, deepseek_coder_33b, hymba_1_5b,
-                           llama3_2_3b, llava_next_34b, mamba2_2_7b,
-                           nemotron_4_15b, qwen2_moe_a2_7b, qwen3_14b,
-                           qwen3_moe_30b_a3b, whisper_large_v3)
+from repro.configs import (ara_vu, deepseek_coder_33b, hymba_1_5b, llama3_2_3b, llava_next_34b, mamba2_2_7b, nemotron_4_15b, qwen2_moe_a2_7b, qwen3_14b, qwen3_moe_30b_a3b, whisper_large_v3)
 from repro.configs.base import ArchConfig, ShapeConfig, SHAPES
 from repro.models import hybrid as H
 from repro.models import mamba2 as S

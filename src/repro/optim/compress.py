@@ -17,7 +17,7 @@ Error feedback keeps the *sequence* of updates unbiased, which is what makes
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -4,3 +4,6 @@ from repro.runtime.elastic import elastic_remesh
 
 __all__ = ["Trainer", "TrainConfig", "make_train_step", "StragglerMonitor",
            "elastic_remesh"]
+
+# repro.runtime.serving (continuous-batching engine) is imported on demand —
+# not re-exported here, to keep trainer-only imports light.

@@ -13,10 +13,10 @@ only the per-device slice changes.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import jax
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 
 
 def elastic_remesh(state: Any, new_mesh: Mesh,

@@ -1,0 +1,7 @@
+from repro.runtime.serving.cache import PagedKVCacheManager, cache_insert
+from repro.runtime.serving.engine import ServingEngine
+from repro.runtime.serving.request import Request, RequestState, Status
+from repro.runtime.serving.scheduler import Scheduler
+
+__all__ = ["PagedKVCacheManager", "cache_insert", "ServingEngine",
+           "Request", "RequestState", "Status", "Scheduler"]

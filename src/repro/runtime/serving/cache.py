@@ -1,0 +1,114 @@
+"""Slot-based paged KV-cache management.
+
+Device memory for the decode batch is one preallocated slot-major cache
+(``model.init_cache(max_slots, max_seq)`` — jax needs static shapes), so
+"paging" here is the *admission-control* model over that arena: the cache
+manager tracks which fixed-size pages of the arena each slot currently owns
+and refuses admissions/growth that would oversubscribe it.  That is exactly
+the role the scoreboard plays for Ara's VRF: the storage is physically
+there, the manager decides who may occupy it.  Per-slot *logical* length
+(the live prefix of the slot's rows) is enforced on device by flash-decode
+tail predication, not here.
+
+``cache_insert`` is the device-side half: splice one prefilled request
+(batch=1 cache) into a slot of the big arena.  It is shape-generic over the
+family cache pytrees — KV leaves are (L, B, S, KVH, hd), SSD state leaves
+fuse batch with heads as (L, B·nh, N, P) — by treating leaf dim 1 as
+``B · per_slot_factor`` and using the batch=1 leaf to infer the factor.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax import lax
+
+
+class PagedKVCacheManager:
+    """Host-side page accounting for the slot arena.
+
+    ``num_pages`` pages of ``page_size`` tokens each, shared by all slots.
+    Pages are handed out from a free list (LIFO, so tests can observe
+    reuse) and returned on :meth:`free`.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 1 or page_size < 1:
+            raise ValueError((num_pages, page_size))
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free: list[int] = list(range(num_pages - 1, -1, -1))
+        self._table: dict[int, list[int]] = {}     # slot -> owned page ids
+        self._length: dict[int, int] = {}          # slot -> token count
+
+    # -- queries -------------------------------------------------------------
+    def pages_for(self, length: int) -> int:
+        return max(1, math.ceil(length / self.page_size))
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def can_allocate(self, length: int) -> bool:
+        return self.pages_for(length) <= self.free_pages
+
+    def page_table(self, slot: int) -> tuple[int, ...]:
+        return tuple(self._table.get(slot, ()))
+
+    def length(self, slot: int) -> int:
+        return self._length.get(slot, 0)
+
+    def utilization(self) -> float:
+        return 1.0 - self.free_pages / self.num_pages
+
+    # -- allocation ----------------------------------------------------------
+    def allocate(self, slot: int, length: int) -> bool:
+        """Give ``slot`` pages for ``length`` tokens.  False if it wouldn't
+        fit (nothing is taken then) or the slot already holds pages."""
+        if slot in self._table:
+            raise ValueError(f"slot {slot} already allocated")
+        need = self.pages_for(length)
+        if need > self.free_pages:
+            return False
+        self._table[slot] = [self._free.pop() for _ in range(need)]
+        self._length[slot] = length
+        return True
+
+    def extend(self, slot: int, new_length: int) -> bool:
+        """Grow ``slot`` to ``new_length`` tokens, taking pages as the
+        length crosses page boundaries.  False ⟹ out of pages (the caller
+        preempts); the slot keeps what it had."""
+        if slot not in self._table:
+            raise ValueError(f"slot {slot} not allocated")
+        need = self.pages_for(new_length) - len(self._table[slot])
+        if need > self.free_pages:
+            return False
+        for _ in range(max(0, need)):
+            self._table[slot].append(self._free.pop())
+        self._length[slot] = new_length
+        return True
+
+    def free(self, slot: int) -> None:
+        for page in reversed(self._table.pop(slot, [])):
+            self._free.append(page)
+        self._length.pop(slot, None)
+
+
+# ---------------------------------------------------------------------------
+# device-side slot splice
+# ---------------------------------------------------------------------------
+
+def cache_insert(big_cache, one_cache, slot):
+    """Write a batch=1 cache pytree into slot ``slot`` of the slot arena.
+
+    ``slot`` may be traced (the engine jits this once; the slot index is a
+    runtime argument, so admissions don't recompile).  Leaf dim 0 is the
+    layer axis, dim 1 is batch×factor — the factor (e.g. SSD's fused head
+    dim) is read off the batch=1 leaf.
+    """
+    def ins(big, one):
+        factor = one.shape[1]
+        start = (0, slot * factor) + (0,) * (big.ndim - 2)
+        return lax.dynamic_update_slice(big, one.astype(big.dtype), start)
+
+    return jax.tree.map(ins, big_cache, one_cache)

@@ -1,0 +1,231 @@
+"""Continuous-batching serving engine: dispatcher model C6 at the serving
+layer.
+
+The host (the paper's scalar core) runs scheduling, sampling bookkeeping
+and admission; the device (the vector unit) runs one compiled decode step
+over the whole slot batch.  Three design rules keep the device out of the
+host's shadow:
+
+  1. **One compiled step, always the same shape.**  The decode step covers
+     all ``max_slots`` slots every time; dead slots are masked (RVV
+     tail-undisturbed via core.masking.apply_mask), never re-shaped out —
+     reshaping would recompile, the serving analogue of an issue stall.
+  2. **Steps flow through a DispatchQueue.**  ``depth`` decode steps stay
+     in flight; the host reads the sampled tokens of step *i−depth* while
+     the device runs step *i* (the accelerator-port queue).  Retirement and
+     admission therefore act on ``depth``-step-old information — the same
+     lag a hardware dispatcher has, and harmless: a finished slot decodes a
+     few extra masked tokens that the host drops.
+  3. **Admission splices, never rebuilds.**  A new request is prefilled as
+     batch=1 (compile-cached per prompt length) and spliced into its slot
+     of the cache arena with ``cache_insert`` — an async device op on the
+     *latest* in-flight state, so steady-state decode never synchronises.
+
+Dead slots keep decoding garbage into their own rows; correctness holds
+because (a) flash-decode tail predication hides rows ≥ the slot's live
+length, (b) admission overwrites rows [0, prefill_len), and (c) a frozen
+slot's position pointer stops advancing (pos += active).
+"""
+from __future__ import annotations
+
+import collections
+import functools
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import masking
+from repro.core.dispatch import DispatchQueue
+from repro.runtime.serving.cache import PagedKVCacheManager, cache_insert
+from repro.runtime.serving.request import Request, RequestState, Status
+from repro.runtime.serving.scheduler import Scheduler
+
+
+# Compiled step functions are cached per *model object*, not per engine —
+# spinning up a fresh engine for the same model (benchmarks sweep dispatch
+# depths, tests sweep pool sizes) must hit the jit cache, not recompile.
+@functools.lru_cache(maxsize=None)
+def _compiled_decode(model):
+    def step(params, tokens, cache, pos, active):
+        logits, cache = model.decode_step(params, tokens, cache, pos)
+        sampled = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        # dead slots: keep the old token (tail-undisturbed) & freeze pos
+        tokens = masking.apply_mask(tokens, sampled, active == 1)
+        pos = pos + active
+        return tokens, cache, pos, active
+    return jax.jit(step)
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_prefill(model):
+    return jax.jit(lambda p, t, c, e: model.prefill(p, t, c, **e))
+
+
+@jax.jit
+def _insert_jit(big_cache, one_cache, slot):
+    return cache_insert(big_cache, one_cache, slot)
+
+
+@jax.jit
+def _set_slot_jit(tokens, pos, active, slot, token0, pos0):
+    return (tokens.at[slot].set(token0),
+            pos.at[slot].set(pos0),
+            active.at[slot].set(1))
+
+
+class ServingEngine:
+    """Continuous-batching generation over any registry model family.
+
+    ``model`` must expose the driver surface (init_cache / prefill /
+    decode_step); ``cfg`` its ArchConfig.  depth=0 degrades to blocking
+    dispatch (the paper's worst case) — the mode sweep in
+    benchmarks/bench_serving.py measures exactly that gap.
+    """
+
+    def __init__(self, model, cfg, params, *, max_slots: int = 8,
+                 max_seq: int = 256, depth: int = 2, page_size: int = 16,
+                 num_pages: Optional[int] = None):
+        self.model = model
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.depth = depth
+        self.prefix_extra = (cfg.n_patch_tokens
+                             if cfg.family == "vlm" else 0)
+        if num_pages is None:       # default: pool sized to the full arena
+            num_pages = max_slots * -(-max_seq // page_size)
+        self.cache_mgr = PagedKVCacheManager(num_pages, page_size)
+        self.scheduler = Scheduler(max_slots, self.cache_mgr,
+                                   prefix_extra=self.prefix_extra,
+                                   max_len=max_seq)
+
+        # device state: the slot batch
+        self._tokens = jnp.zeros((max_slots,), jnp.int32)
+        self._pos = jnp.zeros((max_slots,), jnp.int32)
+        self._active = jnp.zeros((max_slots,), jnp.int32)
+        self._cache = model.init_cache(max_slots, max_seq)
+
+        self._decode = _compiled_decode(model)
+        self._insert = _insert_jit
+        self._set_slot = _set_slot_jit
+        # one prefill wrapper per model, compile-cached per prompt length
+        self._prefill_fn = _compiled_prefill(model)
+        # batch=1 zero cache reused by every admission (purely functional —
+        # prefill returns a new cache, this one is never written)
+        self._one_cache = model.init_cache(1, max_seq)
+        self._queue = DispatchQueue(self._submit_decode, depth=depth)
+        # tokens of in-flight steps, with the slot→state map seen at submit;
+        # per-slot admission generation guards against crediting a stale
+        # in-flight token to a slot that was recycled meanwhile
+        self._pending: collections.deque = collections.deque()
+        self._slot_gen = [0] * max_slots
+        self._results: dict[Any, RequestState] = {}
+        self.stats = {"decode_steps": 0, "prefills": 0, "tokens_out": 0,
+                      "host_blocked_s": 0.0}
+
+    def _submit_decode(self, state):
+        return self._decode(self.params, *state)
+
+    # -- intake --------------------------------------------------------------
+    def submit(self, request: Request) -> RequestState:
+        st = self.scheduler.submit(request)
+        self._results[request.uid] = st
+        return st
+
+    # -- admission (prefill + splice) ----------------------------------------
+    def _admit(self) -> None:
+        for st in self.scheduler.schedule():
+            if st.status != Status.RUNNING or st.slot is None:
+                # evicted again by an earlier admission's row reservation
+                # before we got to prefill it — it's back in the wait queue
+                continue
+            self._slot_gen[st.slot] += 1
+            req = st.request
+            extras = {k: jnp.asarray(v)[None] for k, v in
+                      (req.extras or {}).items()}
+            prompt = jnp.asarray(req.prompt)[None, :]
+            logits, one_cache = self._prefill(prompt, self._one_cache,
+                                              extras)
+            self.stats["prefills"] += 1
+            slot = jnp.int32(st.slot)
+            self._cache = self._insert(self._cache, one_cache, slot)
+            token0 = jnp.argmax(logits[0], -1).astype(jnp.int32)
+            pos0 = st.prompt_len + self.prefix_extra
+            # reading token0 syncs the host on this prefill only; in-flight
+            # decode steps keep running on the device
+            t0 = time.perf_counter()
+            tok = int(token0)
+            self.stats["host_blocked_s"] += time.perf_counter() - t0
+            self._tokens, self._pos, self._active = self._set_slot(
+                self._tokens, self._pos, self._active, slot,
+                jnp.int32(tok), jnp.int32(pos0))
+            self.stats["tokens_out"] += 1
+            # first token may finish the request immediately, or its row
+            # reservation may evict a younger running sequence — deactivate
+            # every departed slot in the decode batch
+            for dslot, _ in self.scheduler.on_token(st.slot, tok):
+                self._active = self._active.at[dslot].set(0)
+
+    def _prefill(self, prompt, one_cache, extras):
+        # compile-cached per prompt length (bucket prompts upstream if
+        # compile churn matters)
+        return self._prefill_fn(self.params, prompt, one_cache, extras)
+
+    # -- the continuous-batching loop ----------------------------------------
+    def step(self) -> None:
+        """One engine iteration: retire lagged outputs, admit, decode."""
+        self._drain_pending(limit=self.depth)
+        self._admit()
+        if not self.scheduler.running:
+            return
+        state = (self._tokens, self._cache, self._pos, self._active)
+        state = self._queue.submit(state)
+        self._tokens, self._cache, self._pos, self._active = state
+        self.stats["decode_steps"] += 1
+        snapshot = {slot: (st, self._slot_gen[slot])
+                    for slot, st in self.scheduler.running.items()}
+        self._pending.append((self._tokens, snapshot))
+
+    def _drain_pending(self, *, limit: int) -> None:
+        """Process token outputs older than ``limit`` steps (blocking only
+        on steps the queue has already forced to completion)."""
+        while len(self._pending) > limit:
+            tokens, snapshot = self._pending.popleft()
+            t0 = time.perf_counter()
+            host_tokens = np.asarray(tokens)
+            self.stats["host_blocked_s"] += time.perf_counter() - t0
+            for slot, (st, gen) in snapshot.items():
+                # stale entries: the request left this slot (finished or
+                # preempted) after the step was submitted, or the slot was
+                # recycled to a newer admission
+                if (st.status != Status.RUNNING or st.slot != slot
+                        or gen != self._slot_gen[slot]):
+                    continue
+                self.stats["tokens_out"] += 1
+                deps = self.scheduler.on_token(slot, int(host_tokens[slot]))
+                for dslot, _ in deps:
+                    self._active = self._active.at[dslot].set(0)
+
+    def run(self, *, max_steps: Optional[int] = None) -> dict:
+        """Drive until every submitted request finishes.  Returns
+        {uid: (gen_tokens,) np.int32}."""
+        steps = 0
+        while not self.scheduler.all_done:
+            self.step()
+            steps += 1
+            if max_steps is not None and steps > max_steps:
+                raise RuntimeError(
+                    f"engine did not converge in {max_steps} steps "
+                    f"(waiting={len(self.scheduler.waiting)}, "
+                    f"running={len(self.scheduler.running)})")
+            # nothing in flight and nothing running: force lagged retire
+            if not self.scheduler.running and self._pending:
+                self._queue.drain()
+                self._drain_pending(limit=0)
+        self._queue.drain()
+        self._drain_pending(limit=0)
+        return {uid: st.output() for uid, st in self._results.items()}

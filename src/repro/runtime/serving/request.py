@@ -1,0 +1,64 @@
+"""Serving request objects: what enters the queue and what the engine tracks.
+
+A :class:`Request` is immutable user input; :class:`RequestState` is the
+scheduler's mutable bookkeeping for it (status, slot, generated tokens,
+recompute count).  States are host-only — device state lives in the engine's
+slot batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Optional
+
+import numpy as np
+
+
+class Status(enum.Enum):
+    WAITING = "waiting"        # queued, not yet admitted to a slot
+    RUNNING = "running"        # owns a slot; in the decode batch
+    FINISHED = "finished"      # hit EOS or max_new_tokens; slot released
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request.
+
+    ``extras`` are per-request prefill side inputs (e.g. whisper ``frames``,
+    llava ``patch_embeds``), *unbatched* — the engine adds the batch dim.
+    """
+    uid: Any
+    prompt: np.ndarray                    # (S,) int32 token ids
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    extras: Optional[dict] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "prompt",
+                           np.asarray(self.prompt, np.int32).reshape(-1))
+        if self.prompt.size == 0:
+            raise ValueError(f"request {self.uid!r}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"request {self.uid!r}: max_new_tokens < 1")
+
+
+@dataclasses.dataclass
+class RequestState:
+    request: Request
+    status: Status = Status.WAITING
+    slot: Optional[int] = None
+    generated: list = dataclasses.field(default_factory=list)
+    prefills: int = 0                     # >1 ⟹ recomputed after preemption
+    finish_reason: Optional[str] = None   # "eos" | "max_new_tokens"
+    seq: int = 0                          # arrival order (scheduler-assigned)
+
+    @property
+    def done(self) -> bool:
+        return self.status == Status.FINISHED
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.request.prompt.shape[0])
+
+    def output(self) -> np.ndarray:
+        return np.asarray(self.generated, np.int32)

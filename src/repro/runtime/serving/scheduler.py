@@ -1,0 +1,164 @@
+"""Continuous-batching scheduler: the dispatcher queue made dynamic.
+
+The paper's ideal dispatcher is a *pre-filled* instruction queue — great for
+a fixed workload, useless for serving where requests arrive and finish on
+their own clock.  The scheduler keeps the decode batch (the vector unit's
+issue window) full **every step**: finished sequences retire and release
+their slot + cache pages, waiting requests are admitted into free slots as
+soon as pages exist for their prompt, and when cache growth runs out of
+pages the **youngest** running sequence is preempted (pages freed, request
+requeued in arrival order, deterministic greedy recompute on re-admission).
+Victim-is-youngest is the progress guarantee: the oldest running sequence
+is never evicted, so it always completes and drains the pool — admission
+thrash cannot livelock.
+
+All host-side and device-free: the engine asks ``schedule()`` what to
+prefill, reports sampled tokens via ``on_token``, and reads retirement /
+preemption decisions back.  Pure logic ⟹ unit-testable without a model.
+"""
+from __future__ import annotations
+
+import collections
+import heapq
+
+from repro.runtime.serving.cache import PagedKVCacheManager
+from repro.runtime.serving.request import Request, RequestState, Status
+
+
+class Scheduler:
+    def __init__(self, max_slots: int, cache: PagedKVCacheManager, *,
+                 prefix_extra: int = 0, max_len: int | None = None):
+        """``prefix_extra``: cache rows a request occupies beyond its prompt
+        before decoding starts (e.g. VLM patch tokens).  ``max_len``: the
+        per-slot arena depth (engine's max_seq); requests that couldn't fit
+        a slot even alone are rejected at submit."""
+        if max_slots < 1:
+            raise ValueError(max_slots)
+        self.max_slots = max_slots
+        self.cache = cache
+        self.prefix_extra = prefix_extra
+        self.max_len = max_len
+        self.waiting: collections.deque[RequestState] = collections.deque()
+        self.running: dict[int, RequestState] = {}
+        self._free_slots: list[int] = list(range(max_slots))
+        heapq.heapify(self._free_slots)
+        self._next_seq = 0
+        self.stats = {"admitted": 0, "finished": 0, "preempted": 0}
+
+    # -- intake --------------------------------------------------------------
+    def submit(self, request: Request) -> RequestState:
+        # progress guarantee: a request that can't fit the pool even alone
+        # would preempt itself forever — reject it up front
+        worst = (request.prompt.shape[0] + self.prefix_extra
+                 + request.max_new_tokens)
+        if self.cache.pages_for(worst) > self.cache.num_pages:
+            raise ValueError(
+                f"request {request.uid!r} needs {worst} cache rows but the "
+                f"pool holds {self.cache.num_pages * self.cache.page_size}")
+        # the page pool can be wider than one slot's arena depth — a too-long
+        # sequence would silently scatter past max_seq (dropped writes)
+        if self.max_len is not None and worst > self.max_len:
+            raise ValueError(
+                f"request {request.uid!r} needs {worst} cache rows but a "
+                f"slot holds max_seq={self.max_len}")
+        st = RequestState(request, seq=self._next_seq)
+        self._next_seq += 1
+        self.waiting.append(st)
+        return st
+
+    @property
+    def all_done(self) -> bool:
+        return not self.waiting and not self.running
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free_slots)
+
+    # -- admission -----------------------------------------------------------
+    def schedule(self) -> list[RequestState]:
+        """Admit FIFO-head requests into free slots while cache pages last.
+
+        Returns the newly-admitted states (slot assigned, status RUNNING);
+        the engine prefills each and splices it into the slot batch.
+        Admission reserves pages for prompt + prefix_extra + the first
+        generated token; decode growth is paged in per step.
+        """
+        admitted = []
+        while self.waiting and self._free_slots:
+            st = self.waiting[0]
+            need = st.prompt_len + self.prefix_extra + 1
+            slot = self._free_slots[0]     # smallest free slot: deterministic
+            if not self.cache.allocate(slot, need):
+                break                      # head-of-line blocks: no pages yet
+            heapq.heappop(self._free_slots)
+            self.waiting.popleft()
+            st.slot = slot
+            st.status = Status.RUNNING
+            st.prefills += 1
+            self.running[slot] = st
+            self.stats["admitted"] += 1
+            admitted.append(st)
+        return admitted
+
+    # -- per-step outcome ----------------------------------------------------
+    def on_token(self, slot: int, token: int) -> list[tuple[int,
+                                                            RequestState]]:
+        """Record one sampled token for ``slot``.
+
+        Handles retirement (EOS / max_new_tokens) and cache growth for the
+        next position.  Growth failure preempts the *youngest* running
+        sequence (possibly this one) until the row fits.  Returns the
+        departures — ``(slot, state)`` for every request that left RUNNING —
+        so the engine can deactivate those slots in the decode batch.
+        """
+        st = self.running.get(slot)
+        if st is None:
+            return []
+        st.generated.append(int(token))
+        req = st.request
+        if req.eos_id is not None and int(token) == req.eos_id:
+            return [self._finish(st, "eos")]
+        if len(st.generated) >= req.max_new_tokens:
+            return [self._finish(st, "max_new_tokens")]
+        # reserve the next token's cache row; evict youngest until it fits
+        departures = []
+        new_len = st.prompt_len + self.prefix_extra + len(st.generated) + 1
+        while not self.cache.extend(slot, new_len):
+            victim = max(self.running.values(), key=lambda s: s.seq)
+            departures.append(self._preempt(victim))
+            if victim is st:
+                break
+        return departures
+
+    def _finish(self, st: RequestState,
+                reason: str) -> tuple[int, RequestState]:
+        slot = st.slot
+        st.status = Status.FINISHED
+        st.finish_reason = reason
+        self._release(st)
+        self.stats["finished"] += 1
+        return slot, st
+
+    def _preempt(self, st: RequestState) -> tuple[int, RequestState]:
+        """Out of pages: drop the slot, requeue in arrival order.  Greedy
+        decode is deterministic, so the recompute replays the same tokens —
+        generated-so-far is discarded and regenerated from the prompt."""
+        slot = st.slot
+        self._release(st)
+        st.status = Status.WAITING
+        st.generated.clear()
+        idx = 0
+        for w in self.waiting:
+            if w.seq > st.seq:
+                break
+            idx += 1
+        self.waiting.insert(idx, st)
+        self.stats["preempted"] += 1
+        return slot, st
+
+    def _release(self, st: RequestState) -> None:
+        slot = st.slot
+        self.running.pop(slot, None)
+        self.cache.free(slot)
+        heapq.heappush(self._free_slots, slot)
+        st.slot = None

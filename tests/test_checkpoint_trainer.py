@@ -1,8 +1,6 @@
 """Fault tolerance: checkpoint atomicity/retention/resharding, trainer
 restart-equivalence, straggler detection, elastic re-mesh."""
-import json
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp
@@ -154,17 +152,19 @@ def test_elastic_remesh_roundtrip():
 # distributed trainer (subprocess, 8 devices): all reduction modes agree
 # ---------------------------------------------------------------------------
 
+@pytest.mark.skipif(jax.__version_info__ < (0, 5, 0),
+                    reason="partial-auto shard_map crashes the XLA bundled with jax<0.5")
 def test_reduction_modes_agree(run8):
     run8("""
 import jax, numpy as np
-from jax.sharding import AxisType
+from repro.core.compat import AxisType, make_mesh
 from repro.models import registry
 from repro.runtime import Trainer, TrainConfig
 from repro.data import make_pipeline
 from repro.configs.base import ShapeConfig
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(AxisType.Auto,)*3)
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"),
+                 axis_types=(AxisType.Auto,)*3)
 b = registry.build("llama3.2-3b", reduced=True)
 shape = ShapeConfig("tiny", 32, 8, "train")
 losses = {}

@@ -3,9 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis",
+                    reason="property tests need the hypothesis dev dep")
 from hypothesis import given, settings, strategies as st
 
-from repro.data.pipeline import Prefetcher, SyntheticLMDataset, make_pipeline
+from repro.data.pipeline import Prefetcher, SyntheticLMDataset
 from repro.optim import (AdamWConfig, adamw_init, adamw_update,
                          clip_by_global_norm, cosine_schedule,
                          dequantize_int8, global_norm, quantize_int8)

@@ -1,10 +1,11 @@
 """3-step reduction (C4) + strip-mining (C7) + chaining (C5) semantics."""
-import math
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis",
+                    reason="property tests need the hypothesis dev dep")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import chaining, reduction, stripmine

@@ -1,9 +1,10 @@
 """Property tests for the RVV 1.0 byte-layout + mask-unit semantics (paper
 §IV) — the hardware-independent heart of the paper, tested exactly."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis",
+                    reason="property tests need the hypothesis dev dep")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import masking, vrf
