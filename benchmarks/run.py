@@ -5,12 +5,15 @@ One module per paper artifact (Fig. 2, Fig. 3, Table II, Table III,
 fconv2d) plus the serving-layer dispatcher sweep.  Each emits tables +
 pass/fail claims; the run exits non-zero if any paper-claim check fails.
 ``--smoke`` runs the fast claim-check subset (CI gate): the dispatch
-ideality curve and the serving sweep at reduced sizes.
+ideality curve and the serving sweeps at reduced sizes.  ``--json PATH``
+additionally dumps every table/claim/note as JSON — CI uploads it as a
+``BENCH_*.json`` artifact so the perf trajectory accumulates across PRs.
 """
 from __future__ import annotations
 
 import argparse
 import inspect
+import json
 import os
 import sys
 import time
@@ -54,11 +57,27 @@ class Report:
         self.notes.append((name, text))
         print(f"  note[{name}]: {text}")
 
+    def dump_json(self, path, *, meta=None):
+        doc = {
+            "meta": meta or {},
+            "tables": self.tables,
+            "claims": {name: {desc: {"pass": bool(ok), "detail": detail}
+                              for desc, (ok, detail) in checks.items()}
+                       for name, checks in self.claim_results.items()},
+            "notes": [{"name": n, "text": t} for n, t in self.notes],
+            "failed": self.failed,
+        }
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=2, default=str)
+        print(f"\nwrote {path}")
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="fast claim-check subset (CI gate)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="dump tables/claims/notes as JSON (CI artifact)")
     args = ap.parse_args(argv)
     from benchmarks import (bench_conv2d, bench_dispatch, bench_matmul,
                             bench_reduction, bench_roofline, bench_serving)
@@ -84,6 +103,10 @@ def main(argv=None):
             report.failed.append(f"{name}: crashed: {e!r}")
             print(f"  CRASH {name}: {e!r}")
     dt = time.time() - t0
+    if args.json:
+        report.dump_json(args.json, meta={
+            "smoke": args.smoke, "wall_s": round(dt, 1),
+            "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())})
     print(f"\n================ summary ({dt:.1f}s) ================")
     if report.failed:
         print(f"{len(report.failed)} FAILED checks:")

@@ -27,6 +27,7 @@ from repro.kernels import conv2d as _conv2d
 from repro.kernels import dotp as _dotp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import flash_decode as _fd
+from repro.kernels import flash_prefill_chunk as _fpc
 from repro.kernels import matmul as _matmul
 from repro.kernels import ref
 from repro.kernels import ssd as _ssd
@@ -339,6 +340,101 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
     out = _fd.flash_decode(qf, kf, vf, lf, window=window, scale=scale,
                            bk=bk_, interpret=(mode == "interpret"))
     return out.reshape(b, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# flash-prefill-chunk (chunked prompt ingestion; dynamic causal boundary)
+# ---------------------------------------------------------------------------
+
+def _flash_prefill_chunk_ref(q, k, v, *, prefix, window, scale, bk):
+    """Blockwise chunk-append attention in pure jnp.
+
+    q: (B, KVH, G, C, hd); k/v: (B, S, KVH, hd); prefix: (B,) rows live
+    before the chunk (the chunk's own K/V sit at rows [prefix, prefix+C)).
+    Strip-mines the KV axis with an online-softmax carry; each chunk query
+    at position prefix + i attends kpos <= prefix + i — causal within the
+    chunk, full over the already-written prefix.
+    """
+    b, s, kvh, hd = k.shape
+    g, c = q.shape[2], q.shape[3]
+    scale = scale if scale is not None else hd ** -0.5
+    bk = min(bk, s)
+    kp = _pad_to(k, bk, 1)
+    vp = _pad_to(v, bk, 1)
+    nkb = kp.shape[1] // bk
+    q32 = q.astype(jnp.float32) * scale
+    qpos = prefix[:, None] + jnp.arange(c)[None, :]        # (B, C)
+
+    ks = jnp.moveaxis(kp.reshape(b, nkb, bk, kvh, hd), 1, 0)
+    vs = jnp.moveaxis(vp.reshape(b, nkb, bk, kvh, hd), 1, 0)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, jb = inp
+        kpos = jb * bk + jnp.arange(bk)[None, :]           # (1, bk)
+        mask = kpos[:, None, :] <= qpos[..., None]         # (B, C, bk)
+        if window is not None:
+            mask &= kpos[:, None, :] > (qpos[..., None] - window)
+        sc = jnp.einsum("bkgch,bskh->bkgcs", q32, kb.astype(jnp.float32))
+        sc = jnp.where(mask[:, None, None], sc, _fpc.NEG_INF)
+        m_new = jnp.maximum(m, sc.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.where(mask[:, None, None],
+                      jnp.exp(sc - m_new[..., None]), 0.0)
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgcs,bskh->bkgch", p, vb.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    init = (jnp.full((b, kvh, g, c), _fpc.NEG_INF, jnp.float32),
+            jnp.zeros((b, kvh, g, c), jnp.float32),
+            jnp.zeros((b, kvh, g, c, hd), jnp.float32))
+    (m, l, acc), _ = lax.scan(body, init, (ks, vs, jnp.arange(nkb)))
+    safe = jnp.where(l > 0, l, 1.0)
+    return (acc / safe[..., None]).astype(q.dtype)
+
+
+def flash_prefill_chunk(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        prefix: jax.Array, window: Optional[int] = None,
+                        scale: Optional[float] = None, bk: int = 512,
+                        mode: Optional[Mode] = None) -> jax.Array:
+    """Chunk-append prefill attention with a dynamic causal boundary.
+
+    q: (B, C, H, hd) — one prompt chunk's queries; k/v: (B, S, KVH, hd) —
+    the cache arena, with the chunk's K/V already written at rows
+    [prefix, prefix + C); prefix: (B,) int32 rows live *before* the chunk.
+    Returns (B, C, H, hd).  ``prefix`` is runtime data (SMEM scalar in the
+    kernel), so every chunk of every prompt position reuses one compiled
+    shape — the whole point of stripmined prefill.  GQA is handled here:
+    H is grouped onto KVH so each KV head is read once per chunk.
+    """
+    b, c, h, hd = q.shape
+    _, s, kvh, _ = k.shape
+    if h % kvh:
+        raise ValueError(f"n_heads={h} not divisible by kv_heads={kvh}")
+    g = h // kvh
+    # (B, C, H, hd) -> (B, KVH, G, C, hd): consecutive G heads share a KV head
+    qg = q.transpose(0, 2, 1, 3).reshape(b, kvh, g, c, hd)
+    prefix = prefix.astype(jnp.int32)
+    mode = mode or _resolved()
+    if mode == "ref":
+        out = _flash_prefill_chunk_ref(qg, k, v, prefix=prefix,
+                                       window=window, scale=scale, bk=bk)
+        return out.reshape(b, h, c, hd).transpose(0, 2, 1, 3)
+    bk_ = min(bk, s)
+    kp = _pad_to(k, bk_, 1)
+    vp = _pad_to(v, bk_, 1)
+    # fold (B, KVH) into the kernel grid axis; padded rows sit beyond every
+    # live length, so the causal/tail mask drops them
+    kf = jnp.moveaxis(kp, 2, 1).reshape(b * kvh, kp.shape[1], hd)
+    vf = jnp.moveaxis(vp, 2, 1).reshape(b * kvh, vp.shape[1], hd)
+    qf = qg.reshape(b * kvh, g, c, hd)
+    pf = jnp.repeat(prefix, kvh)
+    out = _fpc.flash_prefill_chunk(qf, kf, vf, pf, window=window,
+                                   scale=scale, bk=bk_,
+                                   interpret=(mode == "interpret"))
+    out = out.reshape(b, kvh, g, c, hd).reshape(b, h, c, hd)
+    return out.transpose(0, 2, 1, 3)
 
 
 # ---------------------------------------------------------------------------

@@ -9,6 +9,17 @@ the batch, and decode steps flow through a ``DispatchQueue`` so the host
 reproduces the paper's starved-dispatcher worst case; ``--slots`` smaller
 than ``--requests`` exercises slot reuse; ``--pages`` under-provisions the
 cache pool to exercise preemption + recompute.
+
+Prefill knobs (the stripmined prompt-ingestion path):
+
+  * ``--prefill-mode chunked`` cuts prompts into bucket-sized chunks
+    (``--chunk-buckets``, default 32,64,128,256,512) interleaved with
+    decode under a per-step token budget (``--prefill-budget``) — bounded
+    compile churn, bounded long-prompt stalls (dense-family archs).
+  * ``--prompt-mix 64,128,512,2048`` serves a mixed-length workload
+    (lengths cycle over the requests) — the traffic shape where chunked
+    prefill pays: run it in both modes and compare the printed TTFT
+    percentiles and ``prefill_compiles``.
 """
 from __future__ import annotations
 
@@ -19,14 +30,35 @@ import jax
 import numpy as np
 
 from repro.models import registry
-from repro.runtime.serving import Request, ServingEngine
+from repro.runtime.serving import DEFAULT_BUCKETS, Request, ServingEngine
 
 
 def make_engine(bundle, params, *, max_slots, max_seq, depth=2,
-                page_size=16, num_pages=None) -> ServingEngine:
+                page_size=16, num_pages=None, prefill_chunks=None,
+                prefill_budget=None) -> ServingEngine:
     return ServingEngine(bundle.model, bundle.cfg, params,
                          max_slots=max_slots, max_seq=max_seq, depth=depth,
-                         page_size=page_size, num_pages=num_pages)
+                         page_size=page_size, num_pages=num_pages,
+                         prefill_chunks=prefill_chunks,
+                         prefill_budget=prefill_budget)
+
+
+def _percentile(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+
+
+def report_stats(eng: ServingEngine) -> None:
+    """Print the engine + scheduler counters and the TTFT distribution
+    (the bench/serve reporting surface for ``engine.stats``)."""
+    stats = dict(eng.stats)
+    ttft = sorted(stats.pop("ttft_s", {}).values())
+    print("engine:", stats)
+    print("scheduler:", eng.scheduler.stats)
+    if ttft:
+        print(f"ttft_s: mean={np.mean(ttft):.4f} "
+              f"p50={_percentile(ttft, 50):.4f} "
+              f"p90={_percentile(ttft, 90):.4f} "
+              f"max={max(ttft):.4f} (n={len(ttft)})")
 
 
 def generate(bundle, params, prompts: np.ndarray, *, gen_tokens: int,
@@ -64,6 +96,20 @@ def main(argv=None):
     p.add_argument("--page-size", type=int, default=16)
     p.add_argument("--pages", type=int, default=None,
                    help="cache pool pages (default: full arena)")
+    p.add_argument("--prefill-mode", choices=["monolithic", "chunked"],
+                   default="monolithic",
+                   help="chunked = stripmined bucket-size prompt ingestion "
+                        "interleaved with decode (dense archs)")
+    p.add_argument("--chunk-buckets", default=None,
+                   help="comma-separated chunk bucket sizes "
+                        "(default 32,64,128,256,512)")
+    p.add_argument("--prefill-budget", type=int, default=None,
+                   help="max prompt tokens ingested per engine step "
+                        "(default: largest bucket)")
+    p.add_argument("--prompt-mix", default=None,
+                   help="comma-separated prompt lengths cycled over the "
+                        "requests (a mixed-length prefill-heavy workload); "
+                        "overrides --prompt-len")
     p.add_argument("--reduced", action="store_true", default=True)
     args = p.parse_args(argv)
 
@@ -71,10 +117,19 @@ def main(argv=None):
     cfg = bundle.cfg
     params = jax.jit(bundle.model.init)(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    # mixed lengths: odd requests get a 25%-shorter prompt, so admission /
-    # retirement actually interleave
-    lens = [args.prompt_len if i % 2 == 0 else max(1, args.prompt_len * 3 // 4)
-            for i in range(args.requests)]
+    if args.prompt_mix:
+        mix = [int(x) for x in args.prompt_mix.split(",")]
+        lens = [mix[i % len(mix)] for i in range(args.requests)]
+    else:
+        # mixed lengths: odd requests get a 25%-shorter prompt, so
+        # admission / retirement actually interleave
+        lens = [args.prompt_len if i % 2 == 0
+                else max(1, args.prompt_len * 3 // 4)
+                for i in range(args.requests)]
+    chunks = None
+    if args.prefill_mode == "chunked":
+        chunks = (tuple(int(x) for x in args.chunk_buckets.split(","))
+                  if args.chunk_buckets else DEFAULT_BUCKETS)
     extras = {}
     if cfg.family == "encdec":
         extras["frames"] = rng.standard_normal(
@@ -85,11 +140,16 @@ def main(argv=None):
         ).astype(np.float32)
     prefix = cfg.n_patch_tokens if cfg.family == "vlm" else 0
 
+    # arena sized to the longest prompt in the workload (+ chunk padding,
+    # which stays under the smallest bucket)
+    max_prompt = max(lens)
+    pad_slack = min(chunks) if chunks else 0
     eng = make_engine(bundle, params,
                       max_slots=args.slots or args.requests,
-                      max_seq=args.prompt_len + prefix + args.gen + 1,
+                      max_seq=max_prompt + prefix + args.gen + pad_slack + 1,
                       depth=args.depth, page_size=args.page_size,
-                      num_pages=args.pages)
+                      num_pages=args.pages, prefill_chunks=chunks,
+                      prefill_budget=args.prefill_budget)
     for i in range(args.requests):
         eng.submit(Request(
             uid=i, prompt=rng.integers(0, cfg.vocab, lens[i]),
@@ -102,9 +162,9 @@ def main(argv=None):
     total = sum(o.size for o in out.values())
     print(f"{args.arch}: {args.requests} requests, {total} tokens in "
           f"{dt:.2f}s = {total / dt:.1f} tok/s "
-          f"(depth={args.depth}, slots={args.slots or args.requests})")
-    print("engine:", eng.stats)
-    print("scheduler:", eng.scheduler.stats)
+          f"(depth={args.depth}, slots={args.slots or args.requests}, "
+          f"prefill={args.prefill_mode})")
+    report_stats(eng)
     print("first request:", out[0][:16], "...")
     return 0
 

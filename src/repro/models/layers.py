@@ -282,6 +282,32 @@ def attention_decode(p: dict, cfg, x_t: jax.Array, cache: dict,
     return out, cache
 
 
+def attention_chunk(p: dict, cfg, x: jax.Array, cache: dict,
+                    positions: jax.Array, start: jax.Array, *,
+                    window: Optional[int] = None,
+                    rules=RULES) -> tuple[jax.Array, dict]:
+    """One prompt chunk: append K/V to the cache, attend prefix + chunk.
+
+    x: (B, C, d) chunk hidden states; ``start``: scalar int32 row offset —
+    rows [0, start) of the cache are already live, the chunk's K/V are
+    written at rows [start, start + C) before attending.  ``positions`` are
+    absolute (start + arange(C)), so RoPE matches the monolithic prefill.
+    ``start`` is traced: every chunk position reuses one compiled shape.
+    """
+    b, c, d = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions, rules)
+    # append this chunk's K/V rows in place (dynamic row offset, no recompile)
+    ck = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, start, 0, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, start, 0, 0))
+    cache = {"k": ck, "v": cv}
+    prefix = jnp.full((b,), start, jnp.int32)
+    o = ops.flash_prefill_chunk(q, ck, cv, prefix=prefix, window=window)
+    out = _dot(o.reshape(b, c, -1), p["wo"], cfg.adtype)
+    return out, cache
+
+
 def init_kv_cache(cfg, batch: int, max_seq: int, dtype=None) -> dict:
     dtype = dtype or cfg.adtype
     return {

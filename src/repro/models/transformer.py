@@ -67,6 +67,20 @@ def dense_layer_apply(p, cfg, x, *, positions, window=None, rules=RULES):
     return x, jnp.zeros((), jnp.float32)
 
 
+def dense_layer_chunk(p, cfg, x, cache, positions, start, *, window=None,
+                      rules=RULES):
+    """One prompt chunk through a dense layer: chunk-append attention over
+    the cache prefix + MLP.  The stripmined counterpart of
+    :func:`_prefill_layer` (same math restricted to the chunk's rows)."""
+    h = L.rmsnorm(p["ln1"], x, cfg.rms_eps)
+    a, cache = L.attention_chunk(p["attn"], cfg, h, cache, positions, start,
+                                 window=window, rules=rules)
+    x = x + a
+    h = L.rmsnorm(p["ln2"], x, cfg.rms_eps)
+    x = x + L.mlp(p["mlp"], cfg, h, rules=rules)
+    return x, cache
+
+
 def dense_layer_decode(p, cfg, x_t, cache, pos, *, window=None, rules=RULES):
     h = L.rmsnorm(p["ln1"], x_t, cfg.rms_eps)
     a, cache = L.attention_decode(p["attn"], cfg, h, cache, pos,
@@ -173,6 +187,10 @@ class LM:
             lambda cfg, batch, max_seq: L.init_kv_cache(cfg, batch, max_seq))
         # per-layer static side inputs (e.g. hymba window schedule): (L,) arrays
         self._layer_xs_fn = layer_xs_fn
+        # chunked prefill needs a pure-KV cache + the dense chunk layer;
+        # custom-layer families (moe/ssm/hybrid) fall back to monolithic
+        # prefill until they grow their own chunk path
+        self.supports_chunked_prefill = layer_init is dense_layer_init
 
     # -- params ------------------------------------------------------------
     def init(self, key) -> dict:
@@ -263,6 +281,52 @@ class LM:
         x, new_cache = lax.scan(block, x, xs)
         h = L.rmsnorm(params["final_norm"], x, cfg.rms_eps)
         last = h[:, -1]
+        logits = jnp.dot(last, self.head(params),
+                         preferred_element_type=jnp.float32)
+        logits = lanes.constrain(logits, self.rules, "batch", "vocab_tp")
+        return logits, new_cache
+
+    def prefill_chunk(self, params, tokens, cache, start, last_idx):
+        """Stripmined prefill: ingest one prompt chunk into the cache.
+
+        tokens: (B, C) — one bucket-sized chunk (the final chunk may carry
+        right-padding; pad rows land beyond the prompt and are overwritten
+        by decode before ever being attended).  ``start``: scalar int32 —
+        cache rows [0, start) are already live; this chunk occupies rows
+        [start, start + C).  ``last_idx``: scalar int32 index of the
+        prompt's final token *within this chunk* (only meaningful on the
+        last chunk; earlier chunks' logits are discarded by the caller).
+        Returns (logits (B, V), new_cache).  Both ``start`` and
+        ``last_idx`` are traced, so one compiled entry serves every chunk
+        of every prompt — compile count is bounded by the bucket set.
+        """
+        if not self.supports_chunked_prefill:
+            raise NotImplementedError(
+                f"chunked prefill not supported for family "
+                f"{self.cfg.family!r}")
+        cfg = self.cfg
+        b, c = tokens.shape
+        x = L.embed_lookup(params["embed"], tokens, self.rules)
+        positions = jnp.broadcast_to(start + jnp.arange(c), (b, c))
+        layer_xs = self._layer_xs_fn(cfg) if self._layer_xs_fn else None
+
+        def block(carry, inp):
+            x = carry
+            if layer_xs is None:
+                lp, cache_l = inp
+                extra = None
+            else:
+                lp, cache_l, extra = inp
+            x, cache_l = dense_layer_chunk(
+                lp, cfg, x, cache_l, positions, start,
+                window=self._extra_window(extra), rules=self.rules)
+            return x, cache_l
+
+        xs = (params["layers"], cache) if layer_xs is None \
+            else (params["layers"], cache, layer_xs)
+        x, new_cache = lax.scan(block, x, xs)
+        h = L.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+        last = lax.dynamic_slice_in_dim(h, last_idx, 1, axis=1)[:, 0]
         logits = jnp.dot(last, self.head(params),
                          preferred_element_type=jnp.float32)
         logits = lanes.constrain(logits, self.rules, "batch", "vocab_tp")

@@ -112,3 +112,22 @@ def cache_insert(big_cache, one_cache, slot):
         return lax.dynamic_update_slice(big, one.astype(big.dtype), start)
 
     return jax.tree.map(ins, big_cache, one_cache)
+
+
+def cache_extract(big_cache, slot, *, factors):
+    """Read slot ``slot`` of the arena back out as a batch=1 cache pytree —
+    the inverse of :func:`cache_insert` (chunked prefill round-trips a
+    slot's cache through the chunk layers and splices it back).
+
+    ``slot`` may be traced.  ``factors`` is the per-leaf batch factor
+    pytree (leaf dim 1 = B · factor); the batch=1 template the engine holds
+    supplies it via ``jax.tree.map(lambda a: a.shape[1], one_cache)``,
+    mirroring how :func:`cache_insert` reads the factor off its batch=1
+    argument.
+    """
+    def ext(big, factor):
+        start = (0, slot * factor) + (0,) * (big.ndim - 2)
+        sizes = (big.shape[0], factor) + big.shape[2:]
+        return lax.dynamic_slice(big, start, sizes)
+
+    return jax.tree.map(ext, big_cache, factors)

@@ -1,0 +1,56 @@
+"""Length bucketing + chunk planning for stripmined prefill.
+
+The paper's stripmining loop cuts an arbitrary application vector into
+hardware-vector-length chunks so the lanes never see a new shape; here the
+"hardware lengths" are a small geometric set of bucket sizes and the
+"application vector" is the prompt.  A prompt is covered greedily by
+bucket-sized chunks (largest first), padding only the final chunk — so
+
+  * every chunk shape is drawn from the bucket set ⟹ distinct prefill
+    compilations ≤ ``len(buckets)`` no matter how many prompt lengths the
+    traffic mix contains (monolithic prefill compiles once *per length*);
+  * padding waste is < ``min(buckets)`` tokens per prompt;
+  * the largest bucket bounds how long any single prefill call can stall
+    the co-resident decode batch (the TTFT knob).
+
+Pure host-side arithmetic — unit-testable without a model.
+"""
+from __future__ import annotations
+
+# Geometric bucket set: compile count ≤ 5, padding waste < 32 rows, and the
+# longest single device call ingests 512 prompt tokens.
+DEFAULT_BUCKETS: tuple[int, ...] = (32, 64, 128, 256, 512)
+
+
+def validate_buckets(buckets) -> tuple[int, ...]:
+    bs = tuple(sorted(set(int(b) for b in buckets)))
+    if not bs or bs[0] < 1:
+        raise ValueError(f"invalid bucket set {buckets!r}")
+    return bs
+
+
+def chunk_plan(prompt_len: int, buckets=DEFAULT_BUCKETS) -> list[int]:
+    """Greedy stripmine cover of ``prompt_len`` with bucket-sized chunks.
+
+    Largest buckets first; a sub-``min(buckets)`` remainder takes one
+    smallest bucket (the final chunk carries the padding).  Returns the
+    chunk sizes in ingestion order: ``sum(plan) >= prompt_len`` and
+    ``sum(plan) - prompt_len < min(buckets)``.
+    """
+    if prompt_len < 1:
+        raise ValueError(f"prompt_len={prompt_len}")
+    bs = validate_buckets(buckets)
+    plan: list[int] = []
+    rem = prompt_len
+    for b in reversed(bs):
+        while rem >= b:
+            plan.append(b)
+            rem -= b
+    if rem:
+        plan.append(bs[0])
+    return plan
+
+
+def padded_len(prompt_len: int, buckets=DEFAULT_BUCKETS) -> int:
+    """Total cache rows a chunk-planned prompt occupies (incl. padding)."""
+    return sum(chunk_plan(prompt_len, buckets))

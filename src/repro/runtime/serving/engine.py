@@ -16,15 +16,34 @@ host's shadow:
      admission therefore act on ``depth``-step-old information — the same
      lag a hardware dispatcher has, and harmless: a finished slot decodes a
      few extra masked tokens that the host drops.
-  3. **Admission splices, never rebuilds.**  A new request is prefilled as
-     batch=1 (compile-cached per prompt length) and spliced into its slot
-     of the cache arena with ``cache_insert`` — an async device op on the
-     *latest* in-flight state, so steady-state decode never synchronises.
+  3. **Admission splices, never rebuilds.**  A new request's prompt enters
+     the cache arena by async device ops on the *latest* in-flight state,
+     so steady-state decode never synchronises.
 
-Dead slots keep decoding garbage into their own rows; correctness holds
-because (a) flash-decode tail predication hides rows ≥ the slot's live
-length, (b) admission overwrites rows [0, prefill_len), and (c) a frozen
-slot's position pointer stops advancing (pos += active).
+Prefill comes in two modes:
+
+  * **monolithic** (``prefill_chunks=None``) — the whole prompt in one
+    batch=1 call, compile-cached *per prompt length*; a long prompt stalls
+    the decode batch for its full prefill and every new length recompiles.
+  * **chunked** (``prefill_chunks=(...)`` bucket sizes) — the paper's
+    stripmining discipline applied to prompt ingestion: the prompt is cut
+    into bucket-sized chunks (``serving.chunking``), each ingested by one
+    ``model.prefill_chunk`` call that appends K/V rows to the slot's arena
+    rows in place and attends causally over the already-written prefix.
+    Chunks interleave with decode steps under a per-step token budget
+    (``prefill_budget``), so time-to-first-token for short requests no
+    longer depends on the longest co-resident prompt, and distinct prefill
+    compilations are bounded by the bucket count instead of the number of
+    prompt lengths in the traffic mix.
+
+Dead slots keep decoding garbage tokens; correctness holds because (a)
+flash-decode tail predication hides rows ≥ the slot's live length, (b)
+prefill overwrites rows [0, prefill_len), and (c) a frozen slot's position
+pointer stops advancing (pos += active).  A slot undergoing *chunked*
+prefill additionally parks its position pointer at ``max_seq``: the decode
+step's KV scatter for that row goes out of bounds and is dropped (XLA
+scatter semantics), so in-flight decode steps can never corrupt prompt rows
+already written by earlier chunks.
 """
 from __future__ import annotations
 
@@ -39,7 +58,9 @@ import numpy as np
 
 from repro.core import masking
 from repro.core.dispatch import DispatchQueue
-from repro.runtime.serving.cache import PagedKVCacheManager, cache_insert
+from repro.runtime.serving import chunking
+from repro.runtime.serving.cache import (PagedKVCacheManager, cache_extract,
+                                         cache_insert)
 from repro.runtime.serving.request import Request, RequestState, Status
 from repro.runtime.serving.scheduler import Scheduler
 
@@ -64,6 +85,40 @@ def _compiled_prefill(model):
     return jax.jit(lambda p, t, c, e: model.prefill(p, t, c, **e))
 
 
+class _HashableFactors:
+    """Hashable wrapper for the per-leaf batch-factor pytree so it can key
+    the chunk-step jit cache."""
+
+    def __init__(self, tree):
+        self.tree = tree
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        self._key = (tuple(leaves), treedef)
+
+    def __hash__(self):
+        return hash(self._key)
+
+    def __eq__(self, other):
+        return (isinstance(other, _HashableFactors)
+                and self._key == other._key)
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_prefill_chunk(model, factors_key):
+    """One chunk through the slot arena: extract the slot's batch=1 cache,
+    append the chunk's K/V + attend prefix, splice back.  ``slot``,
+    ``start`` and ``last_idx`` are traced — the only compile key is the
+    chunk length, so compiles are bounded by the bucket set."""
+    factors = factors_key.tree
+
+    def chunk_step(params, big_cache, tokens, slot, start, last_idx):
+        one = cache_extract(big_cache, slot, factors=factors)
+        logits, one = model.prefill_chunk(params, tokens, one, start,
+                                          last_idx)
+        big_cache = cache_insert(big_cache, one, slot)
+        return logits, big_cache
+    return jax.jit(chunk_step)
+
+
 @jax.jit
 def _insert_jit(big_cache, one_cache, slot):
     return cache_insert(big_cache, one_cache, slot)
@@ -76,6 +131,11 @@ def _set_slot_jit(tokens, pos, active, slot, token0, pos0):
             active.at[slot].set(1))
 
 
+@jax.jit
+def _park_slot_jit(pos, slot, sentinel):
+    return pos.at[slot].set(sentinel)
+
+
 class ServingEngine:
     """Continuous-batching generation over any registry model family.
 
@@ -83,11 +143,20 @@ class ServingEngine:
     decode_step); ``cfg`` its ArchConfig.  depth=0 degrades to blocking
     dispatch (the paper's worst case) — the mode sweep in
     benchmarks/bench_serving.py measures exactly that gap.
+
+    ``prefill_chunks``: ``None`` for monolithic prefill, or a tuple of
+    bucket sizes (e.g. ``chunking.DEFAULT_BUCKETS``) to enable stripmined
+    chunked prefill (dense-family models only; see ``model.
+    supports_chunked_prefill``).  ``prefill_budget`` caps how many prompt
+    tokens are ingested per engine step (default: the largest bucket) —
+    the knob trading prefill throughput against decode-batch stall time.
     """
 
     def __init__(self, model, cfg, params, *, max_slots: int = 8,
                  max_seq: int = 256, depth: int = 2, page_size: int = 16,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None,
+                 prefill_chunks: Optional[tuple] = None,
+                 prefill_budget: Optional[int] = None):
         self.model = model
         self.cfg = cfg
         self.params = params
@@ -96,12 +165,26 @@ class ServingEngine:
         self.depth = depth
         self.prefix_extra = (cfg.n_patch_tokens
                              if cfg.family == "vlm" else 0)
+        if prefill_chunks is not None:
+            if not getattr(model, "supports_chunked_prefill", False):
+                raise ValueError(
+                    f"family {cfg.family!r} does not support chunked "
+                    f"prefill; use prefill_chunks=None")
+            if self.prefix_extra:
+                raise ValueError("chunked prefill with prefix_extra "
+                                 "(VLM patch tokens) is unsupported")
+            prefill_chunks = chunking.validate_buckets(prefill_chunks)
+        self.prefill_chunks = prefill_chunks
+        self.prefill_budget = (prefill_budget if prefill_budget is not None
+                               else (max(prefill_chunks)
+                                     if prefill_chunks else 0))
         if num_pages is None:       # default: pool sized to the full arena
             num_pages = max_slots * -(-max_seq // page_size)
         self.cache_mgr = PagedKVCacheManager(num_pages, page_size)
         self.scheduler = Scheduler(max_slots, self.cache_mgr,
                                    prefix_extra=self.prefix_extra,
-                                   max_len=max_seq)
+                                   max_len=max_seq,
+                                   chunked=prefill_chunks is not None)
 
         # device state: the slot batch
         self._tokens = jnp.zeros((max_slots,), jnp.int32)
@@ -115,8 +198,13 @@ class ServingEngine:
         # one prefill wrapper per model, compile-cached per prompt length
         self._prefill_fn = _compiled_prefill(model)
         # batch=1 zero cache reused by every admission (purely functional —
-        # prefill returns a new cache, this one is never written)
+        # prefill returns a new cache, this one is never written); its leaf
+        # dim-1 sizes are the per-slot batch factors cache_extract needs
         self._one_cache = model.init_cache(1, max_seq)
+        if prefill_chunks is not None:
+            self._chunk_fn = _compiled_prefill_chunk(
+                model, _HashableFactors(
+                    jax.tree.map(lambda a: a.shape[1], self._one_cache)))
         self._queue = DispatchQueue(self._submit_decode, depth=depth)
         # tokens of in-flight steps, with the slot→state map seen at submit;
         # per-slot admission generation guards against crediting a stale
@@ -124,24 +212,61 @@ class ServingEngine:
         self._pending: collections.deque = collections.deque()
         self._slot_gen = [0] * max_slots
         self._results: dict[Any, RequestState] = {}
-        self.stats = {"decode_steps": 0, "prefills": 0, "tokens_out": 0,
-                      "host_blocked_s": 0.0}
+        # distinct prefill-path compile-cache entries this engine touched:
+        # ("prefill", prompt_len) monolithic, ("chunk", size) chunked
+        self._prefill_shapes: set = set()
+        self._prefill_tick = 0
+        self.stats = {"decode_steps": 0, "prefills": 0, "prefill_chunks": 0,
+                      "prefill_compiles": 0, "tokens_out": 0,
+                      "host_blocked_s": 0.0, "ttft_s": {}}
 
     def _submit_decode(self, state):
         return self._decode(self.params, *state)
 
+    def _note_prefill_shape(self, key) -> None:
+        self._prefill_shapes.add(key)
+        self.stats["prefill_compiles"] = len(self._prefill_shapes)
+
+    def _first_token(self, st: RequestState) -> None:
+        if st.ttft_s is not None:
+            return      # preemption recompute: keep the *first* first-token
+        st.ttft_s = time.perf_counter() - st.submitted_at
+        self.stats["ttft_s"][st.request.uid] = st.ttft_s
+
     # -- intake --------------------------------------------------------------
     def submit(self, request: Request) -> RequestState:
-        st = self.scheduler.submit(request)
+        plan = None
+        if self.prefill_chunks is not None:
+            plan = chunking.chunk_plan(request.prompt.shape[0],
+                                       self.prefill_chunks)
+            if sum(plan) > self.max_seq:
+                # the padded final chunk would run past the slot arena and
+                # dynamic_update_slice clamps (= silently shifts the write);
+                # reject before the scheduler enqueues anything
+                raise ValueError(
+                    f"request {request.uid!r}: padded chunk plan {plan} "
+                    f"needs {sum(plan)} rows but a slot holds "
+                    f"max_seq={self.max_seq}")
+        st = self.scheduler.submit(request, chunk_plan=plan)
+        st.submitted_at = time.perf_counter()
         self._results[request.uid] = st
         return st
 
     # -- admission (prefill + splice) ----------------------------------------
     def _admit(self) -> None:
         for st in self.scheduler.schedule():
-            if st.status != Status.RUNNING or st.slot is None:
+            if st.slot is None:
                 # evicted again by an earlier admission's row reservation
                 # before we got to prefill it — it's back in the wait queue
+                continue
+            if st.status == Status.PREFILLING:
+                # chunked: park the slot's position pointer out of bounds so
+                # in-flight decode steps' KV scatters for this row are
+                # dropped instead of landing on freshly-written prompt rows
+                self._pos = _park_slot_jit(self._pos, jnp.int32(st.slot),
+                                           jnp.int32(self.max_seq))
+                continue
+            if st.status != Status.RUNNING:
                 continue
             self._slot_gen[st.slot] += 1
             req = st.request
@@ -151,36 +276,119 @@ class ServingEngine:
             logits, one_cache = self._prefill(prompt, self._one_cache,
                                               extras)
             self.stats["prefills"] += 1
-            slot = jnp.int32(st.slot)
-            self._cache = self._insert(self._cache, one_cache, slot)
-            token0 = jnp.argmax(logits[0], -1).astype(jnp.int32)
-            pos0 = st.prompt_len + self.prefix_extra
-            # reading token0 syncs the host on this prefill only; in-flight
-            # decode steps keep running on the device
-            t0 = time.perf_counter()
-            tok = int(token0)
-            self.stats["host_blocked_s"] += time.perf_counter() - t0
-            self._tokens, self._pos, self._active = self._set_slot(
-                self._tokens, self._pos, self._active, slot,
-                jnp.int32(tok), jnp.int32(pos0))
-            self.stats["tokens_out"] += 1
-            # first token may finish the request immediately, or its row
-            # reservation may evict a younger running sequence — deactivate
-            # every departed slot in the decode batch
-            for dslot, _ in self.scheduler.on_token(st.slot, tok):
-                self._active = self._active.at[dslot].set(0)
+            self._note_prefill_shape(("prefill", int(prompt.shape[1])))
+            self._cache = self._insert(self._cache, one_cache,
+                                       jnp.int32(st.slot))
+            self._activate_slot(st, logits)
+
+    def _activate_slot(self, st: RequestState, logits) -> None:
+        """Sample the prompt's first token off ``logits`` (1, V) and put
+        the slot into the decode batch — shared by monolithic admission
+        and the chunked path's final chunk."""
+        slot = st.slot
+        token0 = jnp.argmax(logits[0], -1).astype(jnp.int32)
+        pos0 = st.prompt_len + self.prefix_extra
+        # reading token0 syncs the host on this prefill only; in-flight
+        # decode steps keep running on the device
+        t0 = time.perf_counter()
+        tok = int(token0)
+        self.stats["host_blocked_s"] += time.perf_counter() - t0
+        self._first_token(st)
+        self._tokens, self._pos, self._active = self._set_slot(
+            self._tokens, self._pos, self._active, jnp.int32(slot),
+            jnp.int32(tok), jnp.int32(pos0))
+        self.stats["tokens_out"] += 1
+        # first token may finish the request immediately, or its row
+        # reservation may evict a younger running sequence — deactivate
+        # every departed slot in the decode batch
+        for dslot, _ in self.scheduler.on_token(slot, tok):
+            self._active = self._active.at[dslot].set(0)
 
     def _prefill(self, prompt, one_cache, extras):
         # compile-cached per prompt length (bucket prompts upstream if
-        # compile churn matters)
+        # compile churn matters — or use prefill_chunks)
         return self._prefill_fn(self.params, prompt, one_cache, extras)
+
+    # -- chunked prefill (stripmined prompt ingestion) ------------------------
+    def _advance_prefill(self) -> None:
+        """Ingest prompt chunks for PREFILLING slots, up to
+        ``prefill_budget`` tokens this step (always at least one chunk, so
+        prefill can never starve).
+
+        Order is least-ingested-first (ties broken by arrival): a short
+        prompt admitted next to a half-ingested long one takes the next
+        chunk slot and reaches its first token within a couple of steps —
+        TTFT stops depending on the longest co-resident prompt.  Every
+        other step the FIFO-oldest PREFILLING slot is first handed one
+        chunk ahead of that order, so a steady stream of fresh pos-0
+        arrivals cannot starve a long prompt's ingestion."""
+        if self.prefill_chunks is None:
+            return
+        self._prefill_tick += 1
+        spent = 0
+
+        def prefilling():
+            return [st for st in self.scheduler.running.values()
+                    if st.status == Status.PREFILLING
+                    and st.slot is not None]
+
+        if self._prefill_tick % 2:
+            states = prefilling()
+            if not states:
+                return
+            oldest = min(states, key=lambda s: s.seq)
+            size = oldest.chunk_plan[oldest.chunk_idx]
+            self._prefill_one_chunk(oldest, size)
+            spent += size
+        while True:
+            states = sorted(prefilling(),
+                            key=lambda s: (s.prefill_pos, s.seq))
+            if not states:
+                return
+            for st in states:
+                if st.status != Status.PREFILLING or st.slot is None:
+                    continue        # departed via an earlier activation
+                size = st.chunk_plan[st.chunk_idx]
+                # always ingest at least one chunk per step (progress
+                # guarantee), then stay within the budget
+                if spent and spent + size > self.prefill_budget:
+                    return
+                self._prefill_one_chunk(st, size)
+                spent += size
+
+    def _prefill_one_chunk(self, st: RequestState, size: int) -> None:
+        req = st.request
+        plen = st.prompt_len
+        start = st.prefill_pos
+        chunk = np.zeros((size,), np.int32)
+        real = min(size, plen - start)
+        chunk[:real] = req.prompt[start:start + real]
+        is_last = st.chunk_idx == len(st.chunk_plan) - 1
+        last_idx = plen - start - 1 if is_last else 0
+        logits, self._cache = self._chunk_fn(
+            self.params, self._cache, jnp.asarray(chunk)[None, :],
+            jnp.int32(st.slot), jnp.int32(start), jnp.int32(last_idx))
+        self.stats["prefill_chunks"] += 1
+        self._note_prefill_shape(("chunk", size))
+        st.prefill_pos = start + size
+        st.chunk_idx += 1
+        if not is_last:
+            return
+        # final chunk: sample the first token and join the decode batch
+        self.scheduler.finish_prefill(st.slot)
+        # steps submitted mid-prefill are stale for this slot: drop them
+        self._slot_gen[st.slot] += 1
+        self._activate_slot(st, logits)
 
     # -- the continuous-batching loop ----------------------------------------
     def step(self) -> None:
-        """One engine iteration: retire lagged outputs, admit, decode."""
+        """One engine iteration: retire lagged outputs, admit, ingest
+        prompt chunks, decode."""
         self._drain_pending(limit=self.depth)
         self._admit()
-        if not self.scheduler.running:
+        self._advance_prefill()
+        if not any(st.status == Status.RUNNING
+                   for st in self.scheduler.running.values()):
             return
         state = (self._tokens, self._cache, self._pos, self._active)
         state = self._queue.submit(state)
@@ -200,8 +408,9 @@ class ServingEngine:
             self.stats["host_blocked_s"] += time.perf_counter() - t0
             for slot, (st, gen) in snapshot.items():
                 # stale entries: the request left this slot (finished or
-                # preempted) after the step was submitted, or the slot was
-                # recycled to a newer admission
+                # preempted) after the step was submitted, was still
+                # prefilling when it was submitted (gen bumped on
+                # activation), or the slot was recycled to a newer admission
                 if (st.status != Status.RUNNING or st.slot != slot
                         or gen != self._slot_gen[slot]):
                     continue
@@ -215,13 +424,13 @@ class ServingEngine:
         {uid: (gen_tokens,) np.int32}."""
         steps = 0
         while not self.scheduler.all_done:
-            self.step()
-            steps += 1
-            if max_steps is not None and steps > max_steps:
+            if max_steps is not None and steps >= max_steps:
                 raise RuntimeError(
                     f"engine did not converge in {max_steps} steps "
                     f"(waiting={len(self.scheduler.waiting)}, "
                     f"running={len(self.scheduler.running)})")
+            self.step()
+            steps += 1
             # nothing in flight and nothing running: force lagged retire
             if not self.scheduler.running and self._pending:
                 self._queue.drain()

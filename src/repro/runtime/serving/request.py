@@ -16,6 +16,7 @@ import numpy as np
 
 class Status(enum.Enum):
     WAITING = "waiting"        # queued, not yet admitted to a slot
+    PREFILLING = "prefilling"  # owns a slot; prompt chunks being ingested
     RUNNING = "running"        # owns a slot; in the decode batch
     FINISHED = "finished"      # hit EOS or max_new_tokens; slot released
 
@@ -51,6 +52,14 @@ class RequestState:
     prefills: int = 0                     # >1 ⟹ recomputed after preemption
     finish_reason: Optional[str] = None   # "eos" | "max_new_tokens"
     seq: int = 0                          # arrival order (scheduler-assigned)
+    # chunked-prefill cursor (engine-owned; rewound to 0 on preemption so
+    # recompute replays the identical chunk sequence)
+    chunk_plan: Optional[list] = None     # bucket-sized chunk lengths
+    chunk_idx: int = 0                    # next chunk to ingest
+    prefill_pos: int = 0                  # prompt tokens already in cache
+    # service-time bookkeeping (engine-owned)
+    submitted_at: Optional[float] = None  # perf_counter at engine.submit
+    ttft_s: Optional[float] = None        # submit -> first sampled token
 
     @property
     def done(self) -> bool:

@@ -27,17 +27,22 @@ from repro.runtime.serving.request import Request, RequestState, Status
 
 class Scheduler:
     def __init__(self, max_slots: int, cache: PagedKVCacheManager, *,
-                 prefix_extra: int = 0, max_len: int | None = None):
+                 prefix_extra: int = 0, max_len: int | None = None,
+                 chunked: bool = False):
         """``prefix_extra``: cache rows a request occupies beyond its prompt
         before decoding starts (e.g. VLM patch tokens).  ``max_len``: the
         per-slot arena depth (engine's max_seq); requests that couldn't fit
-        a slot even alone are rejected at submit."""
+        a slot even alone are rejected at submit.  ``chunked``: admissions
+        enter PREFILLING (the engine ingests prompt chunks across steps and
+        calls :meth:`finish_prefill`) instead of going straight to RUNNING
+        via one monolithic prefill."""
         if max_slots < 1:
             raise ValueError(max_slots)
         self.max_slots = max_slots
         self.cache = cache
         self.prefix_extra = prefix_extra
         self.max_len = max_len
+        self.chunked = chunked
         self.waiting: collections.deque[RequestState] = collections.deque()
         self.running: dict[int, RequestState] = {}
         self._free_slots: list[int] = list(range(max_slots))
@@ -46,11 +51,16 @@ class Scheduler:
         self.stats = {"admitted": 0, "finished": 0, "preempted": 0}
 
     # -- intake --------------------------------------------------------------
-    def submit(self, request: Request) -> RequestState:
+    def submit(self, request: Request,
+               chunk_plan: list | None = None) -> RequestState:
         # progress guarantee: a request that can't fit the pool even alone
-        # would preempt itself forever — reject it up front
+        # would preempt itself forever — reject it up front.  A chunked
+        # request's padded final chunk occupies rows past the prompt, so
+        # its worst case is max(padded plan, prompt + generation).
         worst = (request.prompt.shape[0] + self.prefix_extra
                  + request.max_new_tokens)
+        if chunk_plan is not None:
+            worst = max(worst, sum(chunk_plan))
         if self.cache.pages_for(worst) > self.cache.num_pages:
             raise ValueError(
                 f"request {request.uid!r} needs {worst} cache rows but the "
@@ -61,7 +71,7 @@ class Scheduler:
             raise ValueError(
                 f"request {request.uid!r} needs {worst} cache rows but a "
                 f"slot holds max_seq={self.max_len}")
-        st = RequestState(request, seq=self._next_seq)
+        st = RequestState(request, seq=self._next_seq, chunk_plan=chunk_plan)
         self._next_seq += 1
         self.waiting.append(st)
         return st
@@ -78,27 +88,41 @@ class Scheduler:
     def schedule(self) -> list[RequestState]:
         """Admit FIFO-head requests into free slots while cache pages last.
 
-        Returns the newly-admitted states (slot assigned, status RUNNING);
-        the engine prefills each and splices it into the slot batch.
-        Admission reserves pages for prompt + prefix_extra + the first
-        generated token; decode growth is paged in per step.
+        Returns the newly-admitted states (slot assigned, status RUNNING —
+        or PREFILLING under chunked prefill); the engine prefills each and
+        splices it into the slot batch.  Admission reserves pages for
+        prompt + prefix_extra + the first generated token — under chunked
+        prefill at least the padded chunk plan, since the final chunk's
+        pad rows are physically written to the slot's arena rows too;
+        decode growth is paged in per step.
         """
         admitted = []
         while self.waiting and self._free_slots:
             st = self.waiting[0]
             need = st.prompt_len + self.prefix_extra + 1
+            if st.chunk_plan is not None:
+                need = max(need, sum(st.chunk_plan))
             slot = self._free_slots[0]     # smallest free slot: deterministic
             if not self.cache.allocate(slot, need):
                 break                      # head-of-line blocks: no pages yet
             heapq.heappop(self._free_slots)
             self.waiting.popleft()
             st.slot = slot
-            st.status = Status.RUNNING
+            st.status = Status.PREFILLING if self.chunked else Status.RUNNING
             st.prefills += 1
             self.running[slot] = st
             self.stats["admitted"] += 1
             admitted.append(st)
         return admitted
+
+    def finish_prefill(self, slot: int) -> RequestState:
+        """The engine ingested the request's final prompt chunk: it joins
+        the decode batch.  Returns the state (now RUNNING)."""
+        st = self.running[slot]
+        if st.status != Status.PREFILLING:
+            raise ValueError(f"slot {slot} is {st.status}, not PREFILLING")
+        st.status = Status.RUNNING
+        return st
 
     # -- per-step outcome ----------------------------------------------------
     def on_token(self, slot: int, token: int) -> list[tuple[int,
@@ -142,11 +166,16 @@ class Scheduler:
     def _preempt(self, st: RequestState) -> tuple[int, RequestState]:
         """Out of pages: drop the slot, requeue in arrival order.  Greedy
         decode is deterministic, so the recompute replays the same tokens —
-        generated-so-far is discarded and regenerated from the prompt."""
+        generated-so-far is discarded and regenerated from the prompt.  A
+        victim caught *mid-prefill* rewinds its chunk cursor to 0: the plan
+        is kept (it is a pure function of prompt length), so re-admission
+        replays the identical chunk sequence."""
         slot = st.slot
         self._release(st)
         st.status = Status.WAITING
         st.generated.clear()
+        st.chunk_idx = 0
+        st.prefill_pos = 0
         idx = 0
         for w in self.waiting:
             if w.seq > st.seq:

@@ -1,0 +1,441 @@
+"""Stripmined (chunked, length-bucketed) prefill: chunk planner, the
+chunk-append attention kernel vs a naive oracle, model-level equivalence
+with monolithic prefill, engine token-equality with sequential generation,
+mid-prefill preemption rewind, and the prefill-compile/TTFT stats."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops
+from repro.models import registry
+from repro.runtime.serving import (PagedKVCacheManager, Request,
+                                   ServingEngine, Scheduler, Status,
+                                   cache_extract, cache_insert, chunk_plan,
+                                   padded_len)
+
+# ---------------------------------------------------------------------------
+# chunk planner (pure host arithmetic)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("plen", [1, 7, 8, 9, 31, 32, 33, 100, 2048, 2049])
+def test_chunk_plan_covers_with_bounded_padding(plen):
+    buckets = (8, 16, 32)
+    plan = chunk_plan(plen, buckets)
+    assert all(c in buckets for c in plan)
+    assert sum(plan) >= plen
+    assert sum(plan) - plen < min(buckets)          # pad < smallest bucket
+    assert padded_len(plen, buckets) == sum(plan)
+
+
+def test_chunk_plan_is_greedy_largest_first_and_deterministic():
+    assert chunk_plan(100, (8, 16, 32)) == [32, 32, 32, 8]
+    assert chunk_plan(50, (8, 16, 32)) == [32, 16, 8]   # 48 real + pad 6
+    assert chunk_plan(3, (8, 16, 32)) == [8]
+    assert chunk_plan(100, (8, 16, 32)) == chunk_plan(100, (32, 16, 8))
+
+
+def test_chunk_plan_rejects_bad_input():
+    with pytest.raises(ValueError):
+        chunk_plan(0, (8,))
+    with pytest.raises(ValueError):
+        chunk_plan(8, ())
+
+
+# ---------------------------------------------------------------------------
+# chunk-append attention vs naive oracle (dynamic causal boundary)
+# ---------------------------------------------------------------------------
+
+def _naive_chunk_attn(q, k, v, prefix, window=None):
+    b, c, h, hd = q.shape
+    _, s, kvh, _ = k.shape
+    g = h // kvh
+    qh = q.transpose(0, 2, 1, 3).reshape(b, kvh, g, c, hd)
+    sc = jnp.einsum("bkgch,bskh->bkgcs", qh.astype(jnp.float32),
+                    k.astype(jnp.float32)) * hd ** -0.5
+    kpos = jnp.arange(s)[None, None, :]
+    qpos = prefix[:, None, None] + jnp.arange(c)[None, :, None]
+    mask = kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    sc = jnp.where(mask[:, None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, -1)
+    o = jnp.einsum("bkgcs,bskh->bkgch", p, v.astype(jnp.float32))
+    return o.reshape(b, h, c, hd).transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+@pytest.mark.parametrize("window", [None, 8])
+def test_flash_prefill_chunk_matches_naive(mode, window):
+    rng = np.random.default_rng(0)
+    B, C, H, KVH, S, hd = 3, 8, 8, 2, 40, 16
+    q = jnp.asarray(rng.standard_normal((B, C, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KVH, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KVH, hd)), jnp.float32)
+    # prefix 0 (first chunk), mid, and S-C (arena exactly full)
+    prefix = jnp.asarray([0, 17, S - C], jnp.int32)
+    got = ops.flash_prefill_chunk(q, k, v, prefix=prefix, window=window,
+                                  mode=mode, bk=16)
+    want = _naive_chunk_attn(q, k, v, prefix, window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_flash_prefill_chunk_prefix_is_runtime_data():
+    """Same compiled shape must serve every chunk position: jit once, call
+    with different prefixes, no retrace."""
+    rng = np.random.default_rng(1)
+    B, C, H, KVH, S, hd = 1, 4, 4, 4, 32, 8
+    q = jnp.asarray(rng.standard_normal((B, C, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KVH, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KVH, hd)), jnp.float32)
+    traces = []
+
+    @jax.jit
+    def f(q, k, v, prefix):
+        traces.append(1)
+        return ops.flash_prefill_chunk(q, k, v, prefix=prefix, mode="ref")
+
+    for pre in (0, 4, 20):
+        out = f(q, k, v, jnp.asarray([pre], jnp.int32))
+        want = _naive_chunk_attn(q, k, v, jnp.asarray([pre], jnp.int32))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=2e-5)
+    assert len(traces) == 1                     # one trace, three prefixes
+
+
+# ---------------------------------------------------------------------------
+# cache extract/insert round-trip (chunk path plumbing)
+# ---------------------------------------------------------------------------
+
+def test_cache_extract_inverts_insert_for_fused_batch_dims():
+    L, slots, S, kvh, hd, nh = 2, 3, 8, 2, 4, 5
+    rng = np.random.default_rng(2)
+    big = {
+        "kv": jnp.asarray(rng.standard_normal((L, slots, S, kvh, hd)),
+                          jnp.float32),
+        "ssm": jnp.asarray(rng.standard_normal((L, slots * nh, 7)),
+                           jnp.float32),
+    }
+    factors = {"kv": 1, "ssm": nh}
+    for slot in range(slots):
+        one = jax.jit(lambda b, s: cache_extract(b, s, factors=factors))(
+            big, jnp.int32(slot))
+        assert one["kv"].shape == (L, 1, S, kvh, hd)
+        assert one["ssm"].shape == (L, nh, 7)
+        np.testing.assert_array_equal(np.asarray(one["kv"][:, 0]),
+                                      np.asarray(big["kv"][:, slot]))
+        back = jax.jit(cache_insert)(big, one, jnp.int32(slot))
+        np.testing.assert_array_equal(np.asarray(back["kv"]),
+                                      np.asarray(big["kv"]))
+        np.testing.assert_array_equal(np.asarray(back["ssm"]),
+                                      np.asarray(big["ssm"]))
+
+
+# ---------------------------------------------------------------------------
+# model level: chunked prefill ≡ monolithic prefill
+# ---------------------------------------------------------------------------
+
+TINY = ArchConfig(name="tiny-dense", family="dense", n_layers=2, d_model=32,
+                  n_heads=4, n_kv_heads=2, d_ff=64, vocab=97, head_dim=8,
+                  param_dtype="float32", act_dtype="float32", max_seq=64)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    model = registry.build_model(TINY)
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+    return model, params
+
+
+def test_prefill_chunk_matches_monolithic(tiny_model):
+    """Ingesting the prompt as bucket-sized chunks writes the same cache
+    rows and yields the same last-token logits as one monolithic call."""
+    model, params = tiny_model
+    rng = np.random.default_rng(3)
+    plen, max_seq = 21, 40
+    prompt = rng.integers(0, TINY.vocab, plen).astype(np.int32)
+
+    cache_m = model.init_cache(1, max_seq)
+    logits_m, cache_m = jax.jit(model.prefill)(
+        params, jnp.asarray(prompt)[None], cache_m)
+
+    cache_c = model.init_cache(1, max_seq)
+    chunk_fn = jax.jit(model.prefill_chunk)
+    start = 0
+    for size in chunk_plan(plen, (4, 8)):       # [8, 8, 4, 4(pad 3)]
+        chunk = np.zeros((size,), np.int32)
+        real = min(size, plen - start)
+        chunk[:real] = prompt[start:start + real]
+        is_last = start + size >= plen
+        last_idx = plen - start - 1 if is_last else 0
+        logits_c, cache_c = chunk_fn(params, jnp.asarray(chunk)[None],
+                                     cache_c, jnp.int32(start),
+                                     jnp.int32(last_idx))
+        start += size
+    np.testing.assert_allclose(np.asarray(logits_c), np.asarray(logits_m),
+                               atol=1e-4, rtol=1e-4)
+    for leaf in ("k", "v"):
+        np.testing.assert_allclose(
+            np.asarray(cache_c[leaf][:, :, :plen]),
+            np.asarray(cache_m[leaf][:, :, :plen]), atol=1e-4)
+
+
+def test_prefill_chunk_unsupported_families_raise(tiny_model):
+    from repro.configs.base import SSMConfig
+    ssm_cfg = ArchConfig(name="tiny-ssm", family="ssm", n_layers=2,
+                         d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+                         vocab=97, ssm=SSMConfig(d_state=8, headdim=8,
+                                                 chunk=16),
+                         param_dtype="float32", act_dtype="float32",
+                         subquadratic=True, max_seq=64)
+    model = registry.build_model(ssm_cfg)
+    assert not model.supports_chunked_prefill
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="chunked"):
+        ServingEngine(model, ssm_cfg, params, max_slots=2, max_seq=64,
+                      prefill_chunks=(8, 16))
+
+
+# ---------------------------------------------------------------------------
+# engine end-to-end with chunked prefill
+# ---------------------------------------------------------------------------
+
+def _reference(model, params, prompt, gen, max_seq=64):
+    cache = model.init_cache(1, max_seq)
+    logits, cache = jax.jit(model.prefill)(
+        params, jnp.asarray(prompt)[None], cache)
+    toks = [int(jnp.argmax(logits[0]))]
+    pos = jnp.asarray([len(prompt)], jnp.int32)
+    tok = jnp.asarray([toks[0]], jnp.int32)
+    step = jax.jit(model.decode_step)
+    for _ in range(gen - 1):
+        logits, cache = step(params, tok, cache, pos)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        toks.append(int(tok[0]))
+        pos = pos + 1
+    return np.array(toks, np.int32)
+
+
+@pytest.mark.parametrize("depth", [0, 2])
+def test_engine_chunked_matches_sequential(tiny_model, depth):
+    """Chunked prefill interleaved with decode (slots < requests, mixed
+    lengths incl. sub-bucket and multi-chunk prompts) -> token-exact vs
+    sequential monolithic generation, with compiles capped by the bucket
+    set instead of the number of distinct lengths."""
+    model, params = tiny_model
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, TINY.vocab, n).astype(np.int32)
+               for n in (5, 9, 7, 12)]
+    gens = [8, 6, 10, 7]
+    want = [_reference(model, params, p, g) for p, g in zip(prompts, gens)]
+    eng = ServingEngine(model, TINY, params, max_slots=2, max_seq=64,
+                        depth=depth, prefill_chunks=(4, 8))
+    for i, (p, g) in enumerate(zip(prompts, gens)):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=g))
+    out = eng.run(max_steps=500)
+    for i in range(4):
+        np.testing.assert_array_equal(out[i], want[i])
+    assert eng.stats["prefills"] == 0           # no monolithic calls
+    assert eng.stats["prefill_chunks"] >= 4
+    assert eng.stats["prefill_compiles"] <= 2   # |{4, 8}|, 4 distinct lens
+    assert set(eng.stats["ttft_s"]) == {0, 1, 2, 3}
+    assert all(t > 0 for t in eng.stats["ttft_s"].values())
+
+
+def test_engine_chunked_preemption_recompute_is_exact(tiny_model):
+    """Undersized page pool + chunked prefill: preemption (possibly mid-
+    prefill) rewinds the chunk cursor and recompute replays identical
+    tokens."""
+    model, params = tiny_model
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, TINY.vocab, n).astype(np.int32)
+               for n in (10, 12, 11)]
+    want = [_reference(model, params, p, 14) for p in prompts]
+    eng = ServingEngine(model, TINY, params, max_slots=3, max_seq=64,
+                        depth=2, page_size=4, num_pages=8,
+                        prefill_chunks=(4, 8))
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=14))
+    out = eng.run(max_steps=2000)
+    for i in range(3):
+        np.testing.assert_array_equal(out[i], want[i])
+    assert eng.scheduler.stats["preempted"] > 0
+
+
+def test_engine_chunked_budget_interleaves_decode(tiny_model):
+    """A long prompt must not monopolise the engine: with a one-bucket
+    budget, a short request admitted alongside a long one gets its first
+    token while the long prompt is still being ingested."""
+    model, params = tiny_model
+    rng = np.random.default_rng(5)
+    long_p = rng.integers(0, TINY.vocab, 40).astype(np.int32)
+    short_p = rng.integers(0, TINY.vocab, 4).astype(np.int32)
+    want_long = _reference(model, params, long_p, 6)
+    want_short = _reference(model, params, short_p, 6)
+    eng = ServingEngine(model, TINY, params, max_slots=2, max_seq=64,
+                        depth=0, prefill_chunks=(4,), prefill_budget=4)
+    eng.submit(Request(uid="long", prompt=long_p, max_new_tokens=6))
+    eng.submit(Request(uid="short", prompt=short_p, max_new_tokens=6))
+    out = eng.run(max_steps=500)
+    np.testing.assert_array_equal(out["long"], want_long)
+    np.testing.assert_array_equal(out["short"], want_short)
+    # short (1 chunk) must beat long (10 chunks paced 1/step) to its token
+    assert eng.stats["ttft_s"]["short"] < eng.stats["ttft_s"]["long"]
+
+
+def test_engine_chunked_rejects_plan_overflowing_arena(tiny_model):
+    model, params = tiny_model
+    eng = ServingEngine(model, TINY, params, max_slots=2, max_seq=16,
+                        prefill_chunks=(16,))
+    # plan for plen=2 pads to 16 = max_seq: fits exactly with max_new=0?
+    # no: scheduler takes plen+max_new<=16, engine checks padded 16<=16 ok
+    eng.submit(Request(uid="ok", prompt=np.arange(2, dtype=np.int32),
+                       max_new_tokens=14))
+    # plen=17 would need a 32-row padded plan > max_seq
+    with pytest.raises(ValueError):
+        eng2 = ServingEngine(model, TINY, params, max_slots=2, max_seq=24,
+                             prefill_chunks=(16,))
+        eng2.submit(Request(uid="x", prompt=np.arange(17, dtype=np.int32),
+                            max_new_tokens=4))
+
+
+# ---------------------------------------------------------------------------
+# scheduler: mid-prefill preemption rewinds the chunk cursor
+# ---------------------------------------------------------------------------
+
+def _req(uid, plen=8, max_new=8):
+    return Request(uid=uid, prompt=np.arange(plen, dtype=np.int32),
+                   max_new_tokens=max_new)
+
+
+def test_scheduler_chunked_admission_reserves_padded_plan_rows():
+    """The final chunk's pad rows are physically written to the slot, so
+    admission must account them in the page pool — not just prompt+1."""
+    cache = PagedKVCacheManager(64, 4)
+    s = Scheduler(2, cache, chunked=True)
+    s.submit(_req("a", plen=9), chunk_plan=[8, 8])      # padded to 16
+    (st,) = s.schedule()
+    assert cache.length(st.slot) == 16                  # not 10
+    # worst-case admission check also covers the padded plan: a plan wider
+    # than the whole pool is rejected at submit
+    small = Scheduler(1, PagedKVCacheManager(2, 4), chunked=True)
+    with pytest.raises(ValueError):
+        small.submit(_req("x", plen=5, max_new=1), chunk_plan=[16])
+
+
+def test_scheduler_chunked_admission_enters_prefilling():
+    s = Scheduler(2, PagedKVCacheManager(64, 4), chunked=True)
+    s.submit(_req("a"))
+    (st,) = s.schedule()
+    assert st.status == Status.PREFILLING
+    assert s.finish_prefill(st.slot) is st
+    assert st.status == Status.RUNNING
+    with pytest.raises(ValueError):
+        s.finish_prefill(st.slot)               # already running
+
+
+def test_scheduler_mid_prefill_preemption_rewinds_cursor():
+    """A PREFILLING victim must rewind its chunk cursor deterministically:
+    re-admission replays the identical chunk sequence from position 0."""
+    # 2 slots, 6 pages of 4 rows: both 8-row prompts reserve 3 pages
+    s = Scheduler(2, PagedKVCacheManager(6, 4), chunked=True)
+    old = s.submit(_req("old", plen=8, max_new=8))
+    young = s.submit(_req("young", plen=8, max_new=8))
+    assert len(s.schedule()) == 2
+    # engine ingested two chunks of the young request, then finished the
+    # old one's prefill and started decoding it
+    young.chunk_plan = [4, 4]
+    young.chunk_idx = 1
+    young.prefill_pos = 4
+    s.finish_prefill(old.slot)
+    for tok in range(3):
+        assert s.on_token(old.slot, tok) == []
+    deps = s.on_token(old.slot, 99)             # growth -> evict youngest
+    assert [st.request.uid for _, st in deps] == ["young"]
+    assert young.status == Status.WAITING
+    assert young.chunk_idx == 0                 # cursor rewound
+    assert young.prefill_pos == 0
+    assert young.chunk_plan == [4, 4]           # plan kept (deterministic)
+    assert young.slot is None and young.generated == []
+    assert old.status == Status.RUNNING         # oldest never evicted
+
+
+# ---------------------------------------------------------------------------
+# run() step accounting + stats reporting satellites
+# ---------------------------------------------------------------------------
+
+def test_engine_run_max_steps_is_exact(tiny_model):
+    """run(max_steps=N) must execute at most N engine steps (the PR-1 code
+    permitted N+1) and still raise when the work cannot converge."""
+    model, params = tiny_model
+    eng = ServingEngine(model, TINY, params, max_slots=1, max_seq=64)
+    eng.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                       max_new_tokens=50))
+    calls = []
+    orig = eng.step
+    eng.step = lambda: (calls.append(1), orig())[1]
+    with pytest.raises(RuntimeError, match="did not converge in 3"):
+        eng.run(max_steps=3)
+    assert len(calls) == 3
+
+
+def test_first_token_time_survives_preemption_recompute(tiny_model):
+    """TTFT must record the *original* first token, not the recompute's:
+    a preempted request re-prefills and re-samples, but its service time
+    already started ticking at submit."""
+    import time as _time
+    model, params = tiny_model
+    eng = ServingEngine(model, TINY, params, max_slots=2, max_seq=64)
+    st = eng.submit(Request(uid="r", prompt=np.arange(4, dtype=np.int32),
+                            max_new_tokens=4))
+    eng._first_token(st)
+    first = st.ttft_s
+    assert first is not None and eng.stats["ttft_s"]["r"] == first
+    _time.sleep(0.01)
+    eng._first_token(st)                        # recompute after preemption
+    assert st.ttft_s == first                   # not overwritten
+    assert eng.stats["ttft_s"]["r"] == first
+
+
+def test_engine_chunked_oldest_not_starved_by_fresh_arrivals(tiny_model):
+    """Alternating chunk order: a long prompt mid-ingestion keeps making
+    progress (and finishes) even when every other step hands the budget to
+    a fresher pos-0 arrival."""
+    model, params = tiny_model
+    rng = np.random.default_rng(8)
+    long_p = rng.integers(0, TINY.vocab, 36).astype(np.int32)
+    shorts = [rng.integers(0, TINY.vocab, 4).astype(np.int32)
+              for _ in range(6)]
+    want_long = _reference(model, params, long_p, 4)
+    want_shorts = [_reference(model, params, p, 4) for p in shorts]
+    eng = ServingEngine(model, TINY, params, max_slots=2, max_seq=64,
+                        depth=0, prefill_chunks=(4,), prefill_budget=4)
+    eng.submit(Request(uid="long", prompt=long_p, max_new_tokens=4))
+    for i, p in enumerate(shorts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=4))
+    out = eng.run(max_steps=500)
+    np.testing.assert_array_equal(out["long"], want_long)
+    for i in range(6):
+        np.testing.assert_array_equal(out[i], want_shorts[i])
+    # the long prompt (9 chunks at 1 chunk/step shared) must not be the
+    # absolute last to finish prefill behind all 6 shorts' admissions
+    assert eng.stats["ttft_s"]["long"] < max(
+        eng.stats["ttft_s"][i] for i in range(6))
+
+
+def test_engine_stats_track_prefill_compiles_monolithic(tiny_model):
+    """Monolithic mode: one distinct compile-cache entry per distinct
+    prompt length (the churn chunking bounds)."""
+    model, params = tiny_model
+    rng = np.random.default_rng(6)
+    eng = ServingEngine(model, TINY, params, max_slots=2, max_seq=64)
+    for i, n in enumerate((5, 9, 5, 12)):       # 3 distinct lengths
+        eng.submit(Request(uid=i,
+                           prompt=rng.integers(0, TINY.vocab, n)
+                           .astype(np.int32), max_new_tokens=3))
+    eng.run(max_steps=500)
+    assert eng.stats["prefill_compiles"] == 3
+    assert eng.stats["prefills"] == 4
+    assert set(eng.stats["ttft_s"]) == {0, 1, 2, 3}
