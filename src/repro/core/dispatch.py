@@ -36,19 +36,29 @@ class DispatchQueue:
 
     Keeps at most ``depth`` dispatched-but-unfinished steps in flight.  With
     depth=0 it degrades to fully blocking dispatch.
+
+    ``inflight_of``: optional projection of the step output to the value the
+    queue blocks on for backpressure.  A step whose state buffers are
+    *donated* into the next step must not leave those buffers in the queue —
+    blocking on a donated buffer raises — so a donating caller passes e.g.
+    ``lambda out: out[-1]`` to track a never-donated output (the serving
+    engine's host-readback token copy).  Any output of the step becomes
+    ready exactly when the step completes, so backpressure is unchanged.
     """
 
-    def __init__(self, step_fn: Callable, *, depth: int = 2):
+    def __init__(self, step_fn: Callable, *, depth: int = 2,
+                 inflight_of: Callable[[Any], Any] = lambda out: out):
         self.step_fn = step_fn
         self.depth = depth
+        self._inflight_of = inflight_of
         self._inflight: collections.deque = collections.deque()
 
     def submit(self, state: Any, *args) -> Any:
         out = self.step_fn(state, *args)
         if self.depth == 0:
-            jax.block_until_ready(out)
+            jax.block_until_ready(self._inflight_of(out))
             return out
-        self._inflight.append(out)
+        self._inflight.append(self._inflight_of(out))
         while len(self._inflight) > self.depth:
             jax.block_until_ready(self._inflight.popleft())
         return out

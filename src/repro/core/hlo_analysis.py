@@ -546,3 +546,15 @@ def analyze(hlo_text: str) -> Cost:
         raise ValueError("no ENTRY computation found")
     model = HloCostModel(comps)
     return model.comp_cost(entry)
+
+
+def copied_bytes(cost: Cost) -> float:
+    """Bytes a program spends materialising copies: explicit ``copy`` ops
+    plus ``dynamic-update-slice`` / ``scatter`` write traffic.  Interprets
+    this model's charging rule (in-place updates are billed at 2x the
+    *update* size, never the buffer — see ``inst_cost``), so the serving
+    zero-copy claim checks (bench_serving, test_zero_copy) share one
+    definition instead of re-deriving it."""
+    by = cost.bytes_by_op
+    return (by.get("copy", 0.0) + by.get("dynamic-update-slice", 0.0)
+            + by.get("scatter", 0.0))

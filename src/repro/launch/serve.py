@@ -35,12 +35,12 @@ from repro.runtime.serving import DEFAULT_BUCKETS, Request, ServingEngine
 
 def make_engine(bundle, params, *, max_slots, max_seq, depth=2,
                 page_size=16, num_pages=None, prefill_chunks=None,
-                prefill_budget=None) -> ServingEngine:
+                prefill_budget=None, donate="auto") -> ServingEngine:
     return ServingEngine(bundle.model, bundle.cfg, params,
                          max_slots=max_slots, max_seq=max_seq, depth=depth,
                          page_size=page_size, num_pages=num_pages,
                          prefill_chunks=prefill_chunks,
-                         prefill_budget=prefill_budget)
+                         prefill_budget=prefill_budget, donate=donate)
 
 
 def _percentile(xs, q):
@@ -53,6 +53,9 @@ def report_stats(eng: ServingEngine) -> None:
     stats = dict(eng.stats)
     ttft = sorted(stats.pop("ttft_s", {}).values())
     print("engine:", stats)
+    print(f"arena: {eng.arena_bytes / 1e6:.2f} MB resident, "
+          f"donation {'on' if eng.donate else 'off'} "
+          f"(in-place slot writes are unconditional)")
     print("scheduler:", eng.scheduler.stats)
     if ttft:
         print(f"ttft_s: mean={np.mean(ttft):.4f} "
@@ -110,6 +113,10 @@ def main(argv=None):
                    help="comma-separated prompt lengths cycled over the "
                         "requests (a mixed-length prefill-heavy workload); "
                         "overrides --prompt-len")
+    p.add_argument("--donate", choices=["auto", "on", "off"], default="auto",
+                   help="KV-arena buffer donation: auto = on once the "
+                        "arena crosses the in-place pay-off threshold "
+                        "(serving.engine.DONATE_MIN_BYTES)")
     p.add_argument("--reduced", action="store_true", default=True)
     args = p.parse_args(argv)
 
@@ -144,12 +151,13 @@ def main(argv=None):
     # which stays under the smallest bucket)
     max_prompt = max(lens)
     pad_slack = min(chunks) if chunks else 0
+    donate = {"auto": "auto", "on": True, "off": False}[args.donate]
     eng = make_engine(bundle, params,
                       max_slots=args.slots or args.requests,
                       max_seq=max_prompt + prefix + args.gen + pad_slack + 1,
                       depth=args.depth, page_size=args.page_size,
                       num_pages=args.pages, prefill_chunks=chunks,
-                      prefill_budget=args.prefill_budget)
+                      prefill_budget=args.prefill_budget, donate=donate)
     for i in range(args.requests):
         eng.submit(Request(
             uid=i, prompt=rng.integers(0, cfg.vocab, lens[i]),

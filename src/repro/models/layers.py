@@ -234,6 +234,25 @@ def attention(p: dict, cfg, x: jax.Array, *, positions: jax.Array,
     return checkpoint_name(out, "tp_boundary")
 
 
+def _decode_qkv(p: dict, cfg, x_t: jax.Array, pos: jax.Array,
+                use_rope: bool) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """The decode step's QKV projection (+ qk_norm / RoPE at ``pos``).
+    x_t: (B, d).  Returns q (B, 1, H, hd), k_t/v_t (B, 1, KVH, hd)."""
+    b, d = x_t.shape
+    hd, nh, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    adt = cfg.adtype
+    q = _dot(x_t, p["wq"], adt).reshape(b, 1, nh, hd)
+    k_t = _dot(x_t, p["wk"], adt).reshape(b, 1, nkv, hd)
+    v_t = _dot(x_t, p["wv"], adt).reshape(b, 1, nkv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.rms_eps)
+        k_t = rmsnorm(p["k_norm"], k_t, cfg.rms_eps)
+    if use_rope:
+        q = rope(q, pos[:, None], cfg.rope_theta)
+        k_t = rope(k_t, pos[:, None], cfg.rope_theta)
+    return q, k_t, v_t
+
+
 def attention_decode(p: dict, cfg, x_t: jax.Array, cache: dict,
                      pos: jax.Array, *, window: Optional[int] = None,
                      layer_kv: Optional[tuple] = None, use_rope: bool = True,
@@ -246,17 +265,8 @@ def attention_decode(p: dict, cfg, x_t: jax.Array, cache: dict,
     b, d = x_t.shape
     hd, nh, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
     adt = cfg.adtype
-    q = _dot(x_t, p["wq"], adt).reshape(b, 1, nh, hd)
-    if cfg.qk_norm:
-        q = rmsnorm(p["q_norm"], q, cfg.rms_eps)
     if layer_kv is None:
-        k_t = _dot(x_t, p["wk"], adt).reshape(b, 1, nkv, hd)
-        v_t = _dot(x_t, p["wv"], adt).reshape(b, 1, nkv, hd)
-        if cfg.qk_norm:
-            k_t = rmsnorm(p["k_norm"], k_t, cfg.rms_eps)
-        if use_rope:
-            q = rope(q, pos[:, None], cfg.rope_theta)
-            k_t = rope(k_t, pos[:, None], cfg.rope_theta)
+        q, k_t, v_t = _decode_qkv(p, cfg, x_t, pos, use_rope)
         # scatter the new KV at per-sample positions
         bidx = jnp.arange(b)
         ck = cache["k"].at[bidx, pos].set(k_t[:, 0].astype(cache["k"].dtype))
@@ -265,6 +275,10 @@ def attention_decode(p: dict, cfg, x_t: jax.Array, cache: dict,
         k_all, v_all = ck, cv
         kv_len_mask_pos = pos
     else:
+        # cross-attention: no RoPE on q (positions belong to the static KV)
+        q = _dot(x_t, p["wq"], adt).reshape(b, 1, nh, hd)
+        if cfg.qk_norm:
+            q = rmsnorm(p["q_norm"], q, cfg.rms_eps)
         k_all, v_all = layer_kv
         kv_len_mask_pos = None
     # flash-decode over the (kv_seq lane-sharded) cache: each lane attends
@@ -282,30 +296,66 @@ def attention_decode(p: dict, cfg, x_t: jax.Array, cache: dict,
     return out, cache
 
 
-def attention_chunk(p: dict, cfg, x: jax.Array, cache: dict,
+def attention_chunk(p: dict, cfg, x: jax.Array, slot_kv: dict,
                     positions: jax.Array, start: jax.Array, *,
                     window: Optional[int] = None,
-                    rules=RULES) -> tuple[jax.Array, dict]:
-    """One prompt chunk: append K/V to the cache, attend prefix + chunk.
+                    rules=RULES) -> tuple[jax.Array, tuple]:
+    """One prompt chunk: attend the slot's prefix + the chunk, return the
+    chunk's K/V rows for the caller's arena splice.
 
-    x: (B, C, d) chunk hidden states; ``start``: scalar int32 row offset —
-    rows [0, start) of the cache are already live, the chunk's K/V are
-    written at rows [start, start + C) before attending.  ``positions`` are
-    absolute (start + arange(C)), so RoPE matches the monolithic prefill.
-    ``start`` is traced: every chunk position reuses one compiled shape.
+    x: (B, C, d) chunk hidden states; ``slot_kv``: the slot's cache *view*
+    {"k","v"} of (B, Smax, KVH, hd) — rows [0, start) are live, the rest
+    stale.  The chunk's K/V are patched into a temporary copy of the view
+    for attention; the **arena itself is not written here** — the driver
+    splices all layers' chunk rows with one in-place dynamic-update-slice,
+    so the bytes written per chunk stay O(chunk rows), not O(slot) or
+    O(arena).  ``positions`` are absolute (start + arange(C)) so RoPE
+    matches monolithic prefill; ``start`` is traced, so every chunk
+    position reuses one compiled shape.  Returns (out, (k_rows, v_rows)),
+    rows shaped (B, C, KVH, hd) in the cache dtype.
     """
     b, c, d = x.shape
     q, k, v = _project_qkv(p, cfg, x, positions, rules)
-    # append this chunk's K/V rows in place (dynamic row offset, no recompile)
-    ck = jax.lax.dynamic_update_slice(
-        cache["k"], k.astype(cache["k"].dtype), (0, start, 0, 0))
-    cv = jax.lax.dynamic_update_slice(
-        cache["v"], v.astype(cache["v"].dtype), (0, start, 0, 0))
-    cache = {"k": ck, "v": cv}
+    k_rows = k.astype(slot_kv["k"].dtype)
+    v_rows = v.astype(slot_kv["v"].dtype)
+    ck = jax.lax.dynamic_update_slice(slot_kv["k"], k_rows, (0, start, 0, 0))
+    cv = jax.lax.dynamic_update_slice(slot_kv["v"], v_rows, (0, start, 0, 0))
     prefix = jnp.full((b,), start, jnp.int32)
     o = ops.flash_prefill_chunk(q, ck, cv, prefix=prefix, window=window)
     out = _dot(o.reshape(b, c, -1), p["wo"], cfg.adtype)
-    return out, cache
+    return out, (k_rows, v_rows)
+
+
+def attention_decode_rows(p: dict, cfg, x_t: jax.Array, layer_kv: dict,
+                          pos: jax.Array, *, window: Optional[int] = None,
+                          rules=RULES) -> tuple[jax.Array, tuple]:
+    """One decode step against a read-only layer cache view, returning the
+    new K/V rows instead of a rewritten cache.
+
+    The generic :func:`attention_decode` scatters into its cache argument
+    and returns the whole updated layer cache; threading that through a
+    layer scan re-materialises the full arena every step.  Here the new
+    token's K/V rows are scattered into a *temporary* patched view only so
+    flash-decode can attend them; the caller (the dense arena driver)
+    collects the rows of every layer and writes them into the resident
+    arena with one in-place scatter.  x_t: (B, d); layer_kv: {"k","v"} of
+    (B, Smax, KVH, hd).  Returns (out, (k_row, v_row)) with rows shaped
+    (B, KVH, hd).
+    """
+    b, d = x_t.shape
+    nh, hd = cfg.n_heads, cfg.hd
+    q, k_t, v_t = _decode_qkv(p, cfg, x_t, pos, True)
+    k_row = k_t[:, 0].astype(layer_kv["k"].dtype)
+    v_row = v_t[:, 0].astype(layer_kv["v"].dtype)
+    bidx = jnp.arange(b)
+    ck = layer_kv["k"].at[bidx, pos].set(k_row)
+    cv = layer_kv["v"].at[bidx, pos].set(v_row)
+    k_all = lanes.constrain(ck, rules, "batch", "kv_seq", None, None)
+    v_all = lanes.constrain(cv, rules, "batch", "kv_seq", None, None)
+    o = ops.flash_decode(q[:, 0], k_all, v_all, lengths=pos + 1,
+                         window=window)
+    out = _dot(o.reshape(b, nh * hd), p["wo"], cfg.adtype)
+    return out, (k_row, v_row)
 
 
 def init_kv_cache(cfg, batch: int, max_seq: int, dtype=None) -> dict:

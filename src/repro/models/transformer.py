@@ -67,18 +67,34 @@ def dense_layer_apply(p, cfg, x, *, positions, window=None, rules=RULES):
     return x, jnp.zeros((), jnp.float32)
 
 
-def dense_layer_chunk(p, cfg, x, cache, positions, start, *, window=None,
+def dense_layer_chunk(p, cfg, x, slot_kv, positions, start, *, window=None,
                       rules=RULES):
     """One prompt chunk through a dense layer: chunk-append attention over
-    the cache prefix + MLP.  The stripmined counterpart of
-    :func:`_prefill_layer` (same math restricted to the chunk's rows)."""
+    the slot's cache prefix + MLP.  The stripmined counterpart of
+    :func:`_prefill_layer` (same math restricted to the chunk's rows).
+    ``slot_kv`` is a read-only view of the slot's arena rows; the layer
+    returns the chunk's K/V rows for the driver's single arena splice."""
     h = L.rmsnorm(p["ln1"], x, cfg.rms_eps)
-    a, cache = L.attention_chunk(p["attn"], cfg, h, cache, positions, start,
-                                 window=window, rules=rules)
+    a, rows = L.attention_chunk(p["attn"], cfg, h, slot_kv, positions, start,
+                                window=window, rules=rules)
     x = x + a
     h = L.rmsnorm(p["ln2"], x, cfg.rms_eps)
     x = x + L.mlp(p["mlp"], cfg, h, rules=rules)
-    return x, cache
+    return x, rows
+
+
+def dense_layer_decode_rows(p, cfg, x_t, layer_kv, pos, *, window=None,
+                            rules=RULES):
+    """One decode step through a dense layer against a read-only cache
+    view; returns the new K/V rows instead of a rewritten cache (see
+    :func:`repro.models.layers.attention_decode_rows`)."""
+    h = L.rmsnorm(p["ln1"], x_t, cfg.rms_eps)
+    a, rows = L.attention_decode_rows(p["attn"], cfg, h, layer_kv, pos,
+                                      window=window, rules=rules)
+    x_t = x_t + a
+    h = L.rmsnorm(p["ln2"], x_t, cfg.rms_eps)
+    x_t = x_t + L.mlp(p["mlp"], cfg, h, rules=rules)
+    return x_t, rows
 
 
 def dense_layer_decode(p, cfg, x_t, cache, pos, *, window=None, rules=RULES):
@@ -191,6 +207,12 @@ class LM:
         # custom-layer families (moe/ssm/hybrid) fall back to monolithic
         # prefill until they grow their own chunk path
         self.supports_chunked_prefill = layer_init is dense_layer_init
+        # dense KV caches also take the arena decode path (per-layer K/V
+        # rows scattered once into the resident arena — see decode_step);
+        # only that structure profits from buffer donation, so the serving
+        # engine's auto-donation keys off this flag
+        self.inplace_arena_decode = (self.supports_chunked_prefill
+                                     and layer_decode is None)
 
     # -- params ------------------------------------------------------------
     def init(self, key) -> dict:
@@ -286,19 +308,43 @@ class LM:
         logits = lanes.constrain(logits, self.rules, "batch", "vocab_tp")
         return logits, new_cache
 
-    def prefill_chunk(self, params, tokens, cache, start, last_idx):
-        """Stripmined prefill: ingest one prompt chunk into the cache.
+    @staticmethod
+    def _slot_view(cache, slot):
+        """Read-only view of one slot's rows across all layers: leaf
+        (L, B·f, ...) -> (L, f, ...) at batch index ``slot`` (traced).
+        Dense caches have factor 1, so this is leaf[:, slot:slot+1]."""
+        def view(leaf):
+            return lax.dynamic_slice(
+                leaf, (0, slot) + (0,) * (leaf.ndim - 2),
+                (leaf.shape[0], 1) + leaf.shape[2:])
+        return jax.tree.map(view, cache)
 
-        tokens: (B, C) — one bucket-sized chunk (the final chunk may carry
-        right-padding; pad rows land beyond the prompt and are overwritten
-        by decode before ever being attended).  ``start``: scalar int32 —
-        cache rows [0, start) are already live; this chunk occupies rows
-        [start, start + C).  ``last_idx``: scalar int32 index of the
+    def prefill_chunk(self, params, tokens, cache, slot, start, last_idx):
+        """Stripmined prefill: ingest one prompt chunk straight into slot
+        ``slot`` of the resident cache arena.
+
+        tokens: (B=1, C) — one bucket-sized chunk (the final chunk may
+        carry right-padding; pad rows land beyond the prompt and are
+        overwritten by decode before ever being attended).  ``cache`` is
+        the *full* slot arena (every leaf (L, max_slots, Smax, ...));
+        ``slot`` selects the row being ingested.  ``start``: scalar int32
+        — the slot's rows [0, start) are already live; this chunk occupies
+        rows [start, start + C).  ``last_idx``: scalar int32 index of the
         prompt's final token *within this chunk* (only meaningful on the
         last chunk; earlier chunks' logits are discarded by the caller).
-        Returns (logits (B, V), new_cache).  Both ``start`` and
-        ``last_idx`` are traced, so one compiled entry serves every chunk
-        of every prompt — compile count is bounded by the bucket set.
+        Returns (logits (B, V), new_cache).
+
+        Zero-copy discipline: the layer scan reads the slot's prefix rows
+        through one dynamic-slice view and emits only the chunk's K/V rows
+        (its ``ys``); the arena is written exactly once, after the scan,
+        with a chunk-rows dynamic-update-slice per leaf.  Under buffer
+        donation that update lowers in place, so the bytes copied per
+        chunk are O(chunk rows) — not O(slot) (the old extract/insert
+        round-trip) and not O(arena) (the old functional splice).  The
+        arena never enters the scan carry: XLA's while-loop copy insertion
+        would otherwise clone it every layer.  ``slot``, ``start`` and
+        ``last_idx`` are all traced, so one compiled entry serves every
+        chunk of every prompt — compile count is bounded by the bucket set.
         """
         if not self.supports_chunked_prefill:
             raise NotImplementedError(
@@ -309,22 +355,31 @@ class LM:
         x = L.embed_lookup(params["embed"], tokens, self.rules)
         positions = jnp.broadcast_to(start + jnp.arange(c), (b, c))
         layer_xs = self._layer_xs_fn(cfg) if self._layer_xs_fn else None
+        slot_kv = self._slot_view(cache, slot)
 
         def block(carry, inp):
             x = carry
             if layer_xs is None:
-                lp, cache_l = inp
+                lp, kv_l = inp
                 extra = None
             else:
-                lp, cache_l, extra = inp
-            x, cache_l = dense_layer_chunk(
-                lp, cfg, x, cache_l, positions, start,
+                lp, kv_l, extra = inp
+            x, rows = dense_layer_chunk(
+                lp, cfg, x, kv_l, positions, start,
                 window=self._extra_window(extra), rules=self.rules)
-            return x, cache_l
+            return x, rows
 
-        xs = (params["layers"], cache) if layer_xs is None \
-            else (params["layers"], cache, layer_xs)
-        x, new_cache = lax.scan(block, x, xs)
+        xs = (params["layers"], slot_kv) if layer_xs is None \
+            else (params["layers"], slot_kv, layer_xs)
+        x, (k_rows, v_rows) = lax.scan(block, x, xs)
+        # single in-place arena splice: (L, 1, C, KVH, hd) chunk rows at
+        # (layer 0, slot, start) — the only write the arena sees per chunk
+        new_cache = {
+            "k": lax.dynamic_update_slice(cache["k"], k_rows,
+                                          (0, slot, start, 0, 0)),
+            "v": lax.dynamic_update_slice(cache["v"], v_rows,
+                                          (0, slot, start, 0, 0)),
+        }
         h = L.rmsnorm(params["final_norm"], x, cfg.rms_eps)
         last = lax.dynamic_slice_in_dim(h, last_idx, 1, axis=1)[:, 0]
         logits = jnp.dot(last, self.head(params),
@@ -349,26 +404,67 @@ class LM:
 
     def decode_step(self, params, token_t, cache, pos):
         """token_t: (B,) int32; pos: (B,) position to write. Returns
-        (logits (B,V), new_cache)."""
+        (logits (B,V), new_cache).
+
+        Dense-family KV caches take the arena path: the layer scan reads
+        each layer's cache slice and emits only the new token's K/V rows;
+        the arena is written once, after the scan, by a single scatter at
+        (layer, batch, pos) — an in-place dynamic-update-slice under
+        buffer donation, never a re-materialised arena.  Families with
+        custom caches (SSD states, hybrid trees) keep the generic
+        functional threading of :func:`stack_decode`.
+        """
         cfg = self.cfg
         x_t = L.embed_lookup(params["embed"], token_t[:, None],
                              self.rules)[:, 0]
         layer_xs = self._layer_xs_fn(cfg) if self._layer_xs_fn else None
-        decode = self._layer_decode or (
-            lambda p, c, x, cache_l, pos_, extra: dense_layer_decode(
-                p, c, x, cache_l, pos_, window=self._extra_window(extra),
-                rules=self.rules))
+        if self.inplace_arena_decode:
+            x_t, new_cache = self._decode_rows(params, cfg, x_t, cache, pos,
+                                               layer_xs)
+        else:
+            decode = self._layer_decode or (
+                lambda p, c, x, cache_l, pos_, extra: dense_layer_decode(
+                    p, c, x, cache_l, pos_, window=self._extra_window(extra),
+                    rules=self.rules))
 
-        def ld(p, c, x, cache_l, pos_, extra=None):
-            return decode(p, c, x, cache_l, pos_, extra)
+            def ld(p, c, x, cache_l, pos_, extra=None):
+                return decode(p, c, x, cache_l, pos_, extra)
 
-        x_t, new_cache = stack_decode(
-            params["layers"], cfg, x_t, cache, pos,
-            layer_decode=lambda lp, c, x, cache_l, pos_, extra=None:
-                ld(lp, c, x, cache_l, pos_, extra),
-            layer_xs=layer_xs)
+            x_t, new_cache = stack_decode(
+                params["layers"], cfg, x_t, cache, pos,
+                layer_decode=lambda lp, c, x, cache_l, pos_, extra=None:
+                    ld(lp, c, x, cache_l, pos_, extra),
+                layer_xs=layer_xs)
         h = L.rmsnorm(params["final_norm"], x_t, cfg.rms_eps)
         logits = jnp.dot(h, self.head(params),
                          preferred_element_type=jnp.float32)
         logits = lanes.constrain(logits, self.rules, "batch", "vocab_tp")
         return logits, new_cache
+
+    def _decode_rows(self, params, cfg, x_t, cache, pos, layer_xs):
+        """Dense arena decode: scan layers collecting K/V rows, then one
+        in-place scatter of all (L·B) rows into the resident arena."""
+        b = x_t.shape[0]
+
+        def block(x_t, inp):
+            if layer_xs is None:
+                lp, kv_l = inp
+                extra = None
+            else:
+                lp, kv_l, extra = inp
+            return dense_layer_decode_rows(
+                lp, cfg, x_t, kv_l, pos,
+                window=self._extra_window(extra), rules=self.rules)
+
+        xs = (params["layers"], cache) if layer_xs is None \
+            else (params["layers"], cache, layer_xs)
+        x_t, (k_rows, v_rows) = lax.scan(block, x_t, xs)
+        # k_rows/v_rows: (L, B, KVH, hd) — scatter each layer's row into
+        # its slot's ``pos`` column, the arena's only write this step
+        nl = k_rows.shape[0]
+        li = jnp.broadcast_to(jnp.arange(nl)[:, None], (nl, b))
+        bi = jnp.broadcast_to(jnp.arange(b)[None, :], (nl, b))
+        pi = jnp.broadcast_to(pos[None, :], (nl, b))
+        new_cache = {"k": cache["k"].at[li, bi, pi].set(k_rows),
+                     "v": cache["v"].at[li, bi, pi].set(v_rows)}
+        return x_t, new_cache

@@ -1,11 +1,10 @@
-from repro.runtime.serving.cache import (PagedKVCacheManager, cache_extract,
-                                         cache_insert)
+from repro.runtime.serving.cache import PagedKVCacheManager, cache_insert
 from repro.runtime.serving.chunking import (DEFAULT_BUCKETS, chunk_plan,
                                             padded_len)
 from repro.runtime.serving.engine import ServingEngine
 from repro.runtime.serving.request import Request, RequestState, Status
 from repro.runtime.serving.scheduler import Scheduler
 
-__all__ = ["PagedKVCacheManager", "cache_extract", "cache_insert",
+__all__ = ["PagedKVCacheManager", "cache_insert",
            "DEFAULT_BUCKETS", "chunk_plan", "padded_len", "ServingEngine",
            "Request", "RequestState", "Status", "Scheduler"]

@@ -15,6 +15,11 @@ tail predication, not here.
 family cache pytrees — KV leaves are (L, B, S, KVH, hd), SSD state leaves
 fuse batch with heads as (L, B·nh, N, P) — by treating leaf dim 1 as
 ``B · per_slot_factor`` and using the batch=1 leaf to infer the factor.
+The arena itself is a *donated* resident buffer: every jitted path that
+returns it (decode step, chunk ingestion, this splice) declares the input
+arena donated, so XLA updates it in place — the serving analogue of Ara
+operating on vector operands inside the VRF instead of round-tripping them
+through memory.
 """
 from __future__ import annotations
 
@@ -105,6 +110,14 @@ def cache_insert(big_cache, one_cache, slot):
     runtime argument, so admissions don't recompile).  Leaf dim 0 is the
     layer axis, dim 1 is batch×factor — the factor (e.g. SSD's fused head
     dim) is read off the batch=1 leaf.
+
+    The engine jits this with the arena **donated** (``donate_argnums=0``),
+    so the dynamic-update-slice lowers in place: a monolithic admission
+    writes only the slot's rows, it does not re-materialise the arena.
+    (Its former inverse, ``cache_extract``, is gone: chunked prefill now
+    reads the slot through a dynamic-slice view inside
+    ``model.prefill_chunk`` and writes back only the chunk's rows — the
+    slot round-trip copy no longer exists on any path.)
     """
     def ins(big, one):
         factor = one.shape[1]
@@ -112,22 +125,3 @@ def cache_insert(big_cache, one_cache, slot):
         return lax.dynamic_update_slice(big, one.astype(big.dtype), start)
 
     return jax.tree.map(ins, big_cache, one_cache)
-
-
-def cache_extract(big_cache, slot, *, factors):
-    """Read slot ``slot`` of the arena back out as a batch=1 cache pytree —
-    the inverse of :func:`cache_insert` (chunked prefill round-trips a
-    slot's cache through the chunk layers and splices it back).
-
-    ``slot`` may be traced.  ``factors`` is the per-leaf batch factor
-    pytree (leaf dim 1 = B · factor); the batch=1 template the engine holds
-    supplies it via ``jax.tree.map(lambda a: a.shape[1], one_cache)``,
-    mirroring how :func:`cache_insert` reads the factor off its batch=1
-    argument.
-    """
-    def ext(big, factor):
-        start = (0, slot * factor) + (0,) * (big.ndim - 2)
-        sizes = (big.shape[0], factor) + big.shape[2:]
-        return lax.dynamic_slice(big, start, sizes)
-
-    return jax.tree.map(ext, big_cache, factors)

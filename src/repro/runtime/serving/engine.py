@@ -19,6 +19,18 @@ host's shadow:
   3. **Admission splices, never rebuilds.**  A new request's prompt enters
      the cache arena by async device ops on the *latest* in-flight state,
      so steady-state decode never synchronises.
+  4. **One resident arena, mutated in place.**  Every jitted path that
+     threads the KV arena — decode step, chunk ingestion, admission splice
+     — writes only the rows it changes (chunk rows / one token row per
+     slot; the arena never rides a scan carry or ys, where XLA would clone
+     it), and *donates* the arena (``donate_argnums``) so XLA overwrites
+     the buffer instead of materialising a fresh one per call: the serving
+     analogue of Ara keeping vector operands stationary in the lane-sliced
+     VRF.  Donation defaults to an arena-size ``"auto"`` policy (see
+     ``DONATE_MIN_BYTES``).  The ownership rule is that a donated
+     generation of device state is dead the moment the call is issued; the
+     only lagged host read (sampled tokens, ``depth`` steps late) goes
+     through a separate never-donated readback copy.
 
 Prefill comes in two modes:
 
@@ -50,6 +62,7 @@ from __future__ import annotations
 import collections
 import functools
 import time
+import weakref
 from typing import Any, Optional
 
 import jax
@@ -59,71 +72,112 @@ import numpy as np
 from repro.core import masking
 from repro.core.dispatch import DispatchQueue
 from repro.runtime.serving import chunking
-from repro.runtime.serving.cache import (PagedKVCacheManager, cache_extract,
-                                         cache_insert)
+from repro.runtime.serving.cache import PagedKVCacheManager, cache_insert
 from repro.runtime.serving.request import Request, RequestState, Status
 from repro.runtime.serving.scheduler import Scheduler
 
 
-# Compiled step functions are cached per *model object*, not per engine —
-# spinning up a fresh engine for the same model (benchmarks sweep dispatch
-# depths, tests sweep pool sizes) must hit the jit cache, not recompile.
-@functools.lru_cache(maxsize=None)
-def _compiled_decode(model):
+# Buffer-donation pay-off threshold.  Donation removes the output-copy of
+# every donated buffer (the arena stops being re-materialised per step) but
+# costs the runtime fixed per-call ownership bookkeeping — measured at
+# ~25-80 us/call on the jax-0.4.37 CPU client, vs ~100 us/MB saved copy.
+# Small test/CI arenas therefore run *faster* undonated, while any
+# production-sized arena (the regime the zero-copy rewrite targets —
+# max_slots·max_seq in the thousands of rows) pays the fixed cost back many
+# times over.  ``donate="auto"`` switches on this arena-size threshold;
+# the structural zero-copy paths (chunk-rows-only writes, no
+# extract/insert round-trip) are unconditional — they win at every size.
+DONATE_MIN_BYTES: int = 1 << 20
+
+
+def _per_model(build):
+    """Compiled step functions are cached per *model object* (and donation
+    flag), not per engine — spinning up a fresh engine for the same model
+    (benchmarks sweep dispatch depths, tests sweep pool sizes) must hit
+    the jit cache, not recompile.  The previous ``functools.lru_cache``
+    pinned every model ever served — and the XLA executables compiled for
+    it — for process lifetime, so benchmark sweeps leaked compiled
+    programs.  A ``WeakKeyDictionary`` alone does not fix that: the cached
+    jitted fn *closes over* the model, so the value would keep its own key
+    alive.  Instead the compiled fn is memoised on the model instance
+    itself (a self-cycle the garbage collector reclaims with the model),
+    with a ``WeakValueDictionary`` index kept purely for
+    tests/diagnostics."""
+    name = build.__name__
+    index: weakref.WeakValueDictionary = weakref.WeakValueDictionary()
+
+    @functools.wraps(build)
+    def get(model, donate: bool = True):
+        attr = f"_{name}_compiled_{bool(donate)}"
+        fn = model.__dict__.get(attr)
+        if fn is None:
+            fn = build(model, donate)
+            setattr(model, attr, fn)
+            index[id(model)] = model
+        return fn
+
+    get.cache = index          # live models with a compiled entry
+    return get
+
+
+# Ownership discipline for donated device state: the engine owns exactly one
+# live generation of (tokens, cache, pos, active); every jitted mutation
+# below *donates* those inputs and the engine immediately rebinds its
+# references to the outputs, so the arena is updated in place and the
+# donated (dead) buffers are never touched again.  The only value read
+# host-side after the fact — the sampled-token vector, read ``depth`` steps
+# late by ``_drain_pending`` — is returned as a separate never-donated
+# readback output (the raw ``sampled`` vector below), because the token
+# *state* buffer is donated into the next step while the host's lagged
+# read is still pending.
+
+@_per_model
+def _compiled_decode(model, donate):
     def step(params, tokens, cache, pos, active):
         logits, cache = model.decode_step(params, tokens, cache, pos)
         sampled = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         # dead slots: keep the old token (tail-undisturbed) & freeze pos
         tokens = masking.apply_mask(tokens, sampled, active == 1)
         pos = pos + active
-        return tokens, cache, pos, active
-    return jax.jit(step)
+        # the lagged host read gets the *raw* sampled vector: a distinct
+        # HLO value from the masked token state, so buffer assignment can
+        # never fold it onto the state buffer that is donated into the
+        # next step (a value-identical copy like ``tokens + 0`` could be
+        # simplified away and end up sharing the doomed buffer).  The
+        # drain only consumes entries for slots that were RUNNING at
+        # submit (active == 1), where sampled == masked tokens.
+        return tokens, cache, pos, active, sampled
+    return jax.jit(step, donate_argnums=(1, 2, 3, 4) if donate else ())
 
 
-@functools.lru_cache(maxsize=None)
-def _compiled_prefill(model):
+@_per_model
+def _compiled_prefill(model, donate):
+    # the batch=1 zero-cache template is reused by every admission, so it
+    # is NOT donated here; the arena splice (_insert_jit) donates instead
+    del donate
     return jax.jit(lambda p, t, c, e: model.prefill(p, t, c, **e))
 
 
-class _HashableFactors:
-    """Hashable wrapper for the per-leaf batch-factor pytree so it can key
-    the chunk-step jit cache."""
-
-    def __init__(self, tree):
-        self.tree = tree
-        leaves, treedef = jax.tree_util.tree_flatten(tree)
-        self._key = (tuple(leaves), treedef)
-
-    def __hash__(self):
-        return hash(self._key)
-
-    def __eq__(self, other):
-        return (isinstance(other, _HashableFactors)
-                and self._key == other._key)
-
-
-@functools.lru_cache(maxsize=None)
-def _compiled_prefill_chunk(model, factors_key):
-    """One chunk through the slot arena: extract the slot's batch=1 cache,
-    append the chunk's K/V + attend prefix, splice back.  ``slot``,
-    ``start`` and ``last_idx`` are traced — the only compile key is the
-    chunk length, so compiles are bounded by the bucket set."""
-    factors = factors_key.tree
-
+@_per_model
+def _compiled_prefill_chunk(model, donate):
+    """One chunk straight into the slot arena: ``model.prefill_chunk``
+    scatters the chunk's K/V rows into the slot's region of the (donated)
+    arena (no extract/insert round-trip — the bytes written are the
+    chunk's rows).  ``slot``, ``start`` and ``last_idx`` are traced — the
+    only compile key is the chunk length, so compiles are bounded by the
+    bucket set."""
     def chunk_step(params, big_cache, tokens, slot, start, last_idx):
-        one = cache_extract(big_cache, slot, factors=factors)
-        logits, one = model.prefill_chunk(params, tokens, one, start,
-                                          last_idx)
-        big_cache = cache_insert(big_cache, one, slot)
-        return logits, big_cache
-    return jax.jit(chunk_step)
+        return model.prefill_chunk(params, tokens, big_cache, slot, start,
+                                   last_idx)
+    return jax.jit(chunk_step, donate_argnums=(1,) if donate else ())
 
 
-@jax.jit
-def _insert_jit(big_cache, one_cache, slot):
-    return cache_insert(big_cache, one_cache, slot)
+_insert_jit = jax.jit(cache_insert, donate_argnums=0)
+_insert_plain_jit = jax.jit(cache_insert)
 
 
+# per-slot state pokes: a few bytes per admission — donation's fixed
+# per-call cost would dwarf the copies it elides, so these stay functional
 @jax.jit
 def _set_slot_jit(tokens, pos, active, slot, token0, pos0):
     return (tokens.at[slot].set(token0),
@@ -150,13 +204,22 @@ class ServingEngine:
     supports_chunked_prefill``).  ``prefill_budget`` caps how many prompt
     tokens are ingested per engine step (default: the largest bucket) —
     the knob trading prefill throughput against decode-batch stall time.
+
+    ``donate``: ``"auto"`` (default) donates the KV arena into every step
+    once ``arena_bytes >= DONATE_MIN_BYTES`` *and* the model decodes via
+    the in-place arena path (``model.inplace_arena_decode``) — in-place
+    reuse beats the runtime's fixed per-call donation bookkeeping exactly
+    when the buffer is large, which is the regime this engine targets;
+    ``True``/``False`` force the choice (tests force ``True`` to pin
+    buffer identity).
     """
 
     def __init__(self, model, cfg, params, *, max_slots: int = 8,
                  max_seq: int = 256, depth: int = 2, page_size: int = 16,
                  num_pages: Optional[int] = None,
                  prefill_chunks: Optional[tuple] = None,
-                 prefill_budget: Optional[int] = None):
+                 prefill_budget: Optional[int] = None,
+                 donate: Any = "auto"):
         self.model = model
         self.cfg = cfg
         self.params = params
@@ -192,23 +255,41 @@ class ServingEngine:
         self._active = jnp.zeros((max_slots,), jnp.int32)
         self._cache = model.init_cache(max_slots, max_seq)
 
-        self._decode = _compiled_decode(model)
-        self._insert = _insert_jit
+        self.arena_bytes = sum(
+            leaf.nbytes for leaf in jax.tree.leaves(self._cache))
+        # donation policy: "auto" donates the arena once it is big enough
+        # for in-place reuse to beat the runtime's fixed per-call ownership
+        # bookkeeping (DONATE_MIN_BYTES) — and only for models whose decode
+        # takes the arena path (per-row in-place writes); families that
+        # still thread caches functionally through the layer scan gain
+        # nothing from donation and pay XLA's loop-copy insertion for it.
+        # True/False force the choice.  The structural zero-copy paths are
+        # active regardless.
+        if donate == "auto":
+            donate = (self.arena_bytes >= DONATE_MIN_BYTES
+                      and getattr(model, "inplace_arena_decode", False))
+        self.donate = bool(donate)
+        self._decode = _compiled_decode(model, self.donate)
+        self._insert = _insert_jit if self.donate else _insert_plain_jit
         self._set_slot = _set_slot_jit
         # one prefill wrapper per model, compile-cached per prompt length
         self._prefill_fn = _compiled_prefill(model)
-        # batch=1 zero cache reused by every admission (purely functional —
-        # prefill returns a new cache, this one is never written); its leaf
-        # dim-1 sizes are the per-slot batch factors cache_extract needs
+        # batch=1 zero cache reused by every monolithic admission (purely
+        # functional — prefill returns a new cache, this one is never
+        # written and never donated)
         self._one_cache = model.init_cache(1, max_seq)
         if prefill_chunks is not None:
-            self._chunk_fn = _compiled_prefill_chunk(
-                model, _HashableFactors(
-                    jax.tree.map(lambda a: a.shape[1], self._one_cache)))
-        self._queue = DispatchQueue(self._submit_decode, depth=depth)
-        # tokens of in-flight steps, with the slot→state map seen at submit;
-        # per-slot admission generation guards against crediting a stale
-        # in-flight token to a slot that was recycled meanwhile
+            self._chunk_fn = _compiled_prefill_chunk(model, self.donate)
+        # decode-state buffers are donated into each step, so the queue
+        # tracks the never-donated readback copy (out[-1]) for backpressure
+        self._queue = DispatchQueue(self._submit_decode, depth=depth,
+                                    inflight_of=lambda out: out[-1])
+        # readback copies of in-flight steps' tokens, with the slot→state
+        # map seen at submit; per-slot admission generation guards against
+        # crediting a stale in-flight token to a slot that was recycled
+        # meanwhile.  (These are the ``read`` outputs — the token *state*
+        # buffers themselves are donated into the following step and must
+        # never be re-read.)
         self._pending: collections.deque = collections.deque()
         self._slot_gen = [0] * max_slots
         self._results: dict[Any, RequestState] = {}
@@ -391,12 +472,14 @@ class ServingEngine:
                    for st in self.scheduler.running.values()):
             return
         state = (self._tokens, self._cache, self._pos, self._active)
-        state = self._queue.submit(state)
-        self._tokens, self._cache, self._pos, self._active = state
+        out = self._queue.submit(state)
+        # rebind to the outputs: the submitted buffers were donated and are
+        # dead from here on
+        self._tokens, self._cache, self._pos, self._active, read = out
         self.stats["decode_steps"] += 1
         snapshot = {slot: (st, self._slot_gen[slot])
                     for slot, st in self.scheduler.running.items()}
-        self._pending.append((self._tokens, snapshot))
+        self._pending.append((read, snapshot))
 
     def _drain_pending(self, *, limit: int) -> None:
         """Process token outputs older than ``limit`` steps (blocking only

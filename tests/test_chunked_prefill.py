@@ -12,8 +12,7 @@ from repro.kernels import ops
 from repro.models import registry
 from repro.runtime.serving import (PagedKVCacheManager, Request,
                                    ServingEngine, Scheduler, Status,
-                                   cache_extract, cache_insert, chunk_plan,
-                                   padded_len)
+                                   cache_insert, chunk_plan, padded_len)
 
 # ---------------------------------------------------------------------------
 # chunk planner (pure host arithmetic)
@@ -106,10 +105,13 @@ def test_flash_prefill_chunk_prefix_is_runtime_data():
 
 
 # ---------------------------------------------------------------------------
-# cache extract/insert round-trip (chunk path plumbing)
+# cache insert (slot splice) over fused batch dims
 # ---------------------------------------------------------------------------
 
-def test_cache_extract_inverts_insert_for_fused_batch_dims():
+def test_cache_insert_targets_one_slot_for_fused_batch_dims():
+    """cache_insert must overwrite exactly slot ``slot``'s rows (with the
+    per-leaf batch factor applied) and leave every other slot bit-equal —
+    the contract the engine's donated in-place splice relies on."""
     L, slots, S, kvh, hd, nh = 2, 3, 8, 2, 4, 5
     rng = np.random.default_rng(2)
     big = {
@@ -118,19 +120,21 @@ def test_cache_extract_inverts_insert_for_fused_batch_dims():
         "ssm": jnp.asarray(rng.standard_normal((L, slots * nh, 7)),
                            jnp.float32),
     }
-    factors = {"kv": 1, "ssm": nh}
+    one = {
+        "kv": jnp.asarray(rng.standard_normal((L, 1, S, kvh, hd)),
+                          jnp.float32),
+        "ssm": jnp.asarray(rng.standard_normal((L, nh, 7)), jnp.float32),
+    }
     for slot in range(slots):
-        one = jax.jit(lambda b, s: cache_extract(b, s, factors=factors))(
-            big, jnp.int32(slot))
-        assert one["kv"].shape == (L, 1, S, kvh, hd)
-        assert one["ssm"].shape == (L, nh, 7)
-        np.testing.assert_array_equal(np.asarray(one["kv"][:, 0]),
-                                      np.asarray(big["kv"][:, slot]))
         back = jax.jit(cache_insert)(big, one, jnp.int32(slot))
-        np.testing.assert_array_equal(np.asarray(back["kv"]),
-                                      np.asarray(big["kv"]))
-        np.testing.assert_array_equal(np.asarray(back["ssm"]),
-                                      np.asarray(big["ssm"]))
+        np.testing.assert_array_equal(np.asarray(back["kv"][:, slot]),
+                                      np.asarray(one["kv"][:, 0]))
+        np.testing.assert_array_equal(
+            np.asarray(back["ssm"][:, slot * nh:(slot + 1) * nh]),
+            np.asarray(one["ssm"]))
+        others = [s for s in range(slots) if s != slot]
+        np.testing.assert_array_equal(np.asarray(back["kv"][:, others]),
+                                      np.asarray(big["kv"][:, others]))
 
 
 # ---------------------------------------------------------------------------
@@ -150,18 +154,24 @@ def tiny_model():
 
 
 def test_prefill_chunk_matches_monolithic(tiny_model):
-    """Ingesting the prompt as bucket-sized chunks writes the same cache
-    rows and yields the same last-token logits as one monolithic call."""
+    """Ingesting the prompt as bucket-sized chunks into one slot of a
+    multi-slot arena writes the same cache rows and yields the same
+    last-token logits as one monolithic call — and leaves every other
+    slot's rows untouched (the in-place splice is slot-local)."""
     model, params = tiny_model
     rng = np.random.default_rng(3)
-    plen, max_seq = 21, 40
+    plen, max_seq, slots, slot = 21, 40, 3, 1
     prompt = rng.integers(0, TINY.vocab, plen).astype(np.int32)
 
     cache_m = model.init_cache(1, max_seq)
     logits_m, cache_m = jax.jit(model.prefill)(
         params, jnp.asarray(prompt)[None], cache_m)
 
-    cache_c = model.init_cache(1, max_seq)
+    # arena pre-filled with noise so "other slots untouched" is observable
+    cache_c = jax.tree.map(
+        lambda a: jnp.asarray(rng.standard_normal(a.shape), a.dtype),
+        model.init_cache(slots, max_seq))
+    before = jax.tree.map(np.asarray, cache_c)
     chunk_fn = jax.jit(model.prefill_chunk)
     start = 0
     for size in chunk_plan(plen, (4, 8)):       # [8, 8, 4, 4(pad 3)]
@@ -171,15 +181,23 @@ def test_prefill_chunk_matches_monolithic(tiny_model):
         is_last = start + size >= plen
         last_idx = plen - start - 1 if is_last else 0
         logits_c, cache_c = chunk_fn(params, jnp.asarray(chunk)[None],
-                                     cache_c, jnp.int32(start),
+                                     cache_c, jnp.int32(slot),
+                                     jnp.int32(start),
                                      jnp.int32(last_idx))
         start += size
     np.testing.assert_allclose(np.asarray(logits_c), np.asarray(logits_m),
                                atol=1e-4, rtol=1e-4)
+    others = [s for s in range(slots) if s != slot]
     for leaf in ("k", "v"):
         np.testing.assert_allclose(
-            np.asarray(cache_c[leaf][:, :, :plen]),
-            np.asarray(cache_m[leaf][:, :, :plen]), atol=1e-4)
+            np.asarray(cache_c[leaf][:, slot, :plen]),
+            np.asarray(cache_m[leaf][:, 0, :plen]), atol=1e-4)
+        # rows past the padded plan and every other slot are untouched
+        np.testing.assert_array_equal(
+            np.asarray(cache_c[leaf][:, others]), before[leaf][:, others])
+        np.testing.assert_array_equal(
+            np.asarray(cache_c[leaf][:, slot, start:]),
+            before[leaf][:, slot, start:])
 
 
 def test_prefill_chunk_unsupported_families_raise(tiny_model):

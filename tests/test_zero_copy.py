@@ -1,0 +1,271 @@
+"""Zero-copy KV arena: donation safety + in-place lowering claims.
+
+The serving hot path's contract after the arena rewrite: (a) every jitted
+mutation of the resident KV arena donates it, and the backend actually
+reuses the buffer (pointer identity where the platform supports donation);
+(b) the compiled chunk step's copied bytes are bounded by the *chunk's*
+rows, independent of arena width (the cost-analysis claim check); (c) the
+compiled decode step lowers its cache update as in-place dynamic-update-
+slices/scatters, not arena-sized copies; (d) the engine's compiled-step
+cache is weakly keyed, so retired models release their executables.
+"""
+import gc
+import weakref
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core import hlo_analysis
+from repro.models import registry
+from repro.runtime.serving import Request, ServingEngine
+from repro.runtime.serving.engine import (_compiled_decode,
+                                          _compiled_prefill_chunk,
+                                          _insert_jit)
+
+TINY = ArchConfig(name="tiny-zc", family="dense", n_layers=2, d_model=32,
+                  n_heads=4, n_kv_heads=2, d_ff=64, vocab=97, head_dim=8,
+                  param_dtype="float32", act_dtype="float32", max_seq=64)
+
+SLOTS, SEQ, CHUNK = 3, 48, 8
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    model = registry.build_model(TINY)
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _leaf_ptrs(tree):
+    return [leaf.unsafe_buffer_pointer() for leaf in jax.tree.leaves(tree)]
+
+
+def _require_donation(donated_input):
+    """Skip (rather than fail) on platforms where donation is a no-op —
+    e.g. interpret-mode CI shims or backends without buffer donation."""
+    if not any(leaf.is_deleted() for leaf in jax.tree.leaves(donated_input)):
+        pytest.skip("backend does not implement buffer donation")
+
+
+# ---------------------------------------------------------------------------
+# buffer reuse (pointer identity under donation)
+# ---------------------------------------------------------------------------
+
+def test_decode_step_reuses_donated_arena_buffer(tiny_model):
+    model, params = tiny_model
+    step = _compiled_decode(model, True)
+    cache = model.init_cache(SLOTS, SEQ)
+    tokens = jnp.zeros((SLOTS,), jnp.int32)
+    pos = jnp.full((SLOTS,), 4, jnp.int32)
+    active = jnp.ones((SLOTS,), jnp.int32)
+    ptrs = _leaf_ptrs(cache)
+    tokens, new_cache, pos, active, read = step(params, tokens, cache, pos,
+                                                active)
+    _require_donation(cache)
+    assert _leaf_ptrs(new_cache) == ptrs, \
+        "decode step re-materialised the arena instead of reusing it"
+    # the readback copy must be a *distinct* buffer: it outlives the token
+    # state, which is donated into the next step
+    assert read.unsafe_buffer_pointer() != tokens.unsafe_buffer_pointer()
+    # second step: the arena stays resident in the same buffer
+    tokens2, cache2, pos2, active2, read2 = step(params, tokens, new_cache,
+                                                 pos, active)
+    assert _leaf_ptrs(cache2) == ptrs
+    # and the first step's readback is still host-readable
+    np.asarray(read)
+
+
+def test_chunk_step_reuses_donated_arena_buffer(tiny_model):
+    model, params = tiny_model
+    chunk_fn = _compiled_prefill_chunk(model, True)
+    cache = model.init_cache(SLOTS, SEQ)
+    toks = jnp.zeros((1, CHUNK), jnp.int32)
+    ptrs = _leaf_ptrs(cache)
+    logits, new_cache = chunk_fn(params, cache, toks, jnp.int32(1),
+                                 jnp.int32(0), jnp.int32(CHUNK - 1))
+    _require_donation(cache)
+    assert _leaf_ptrs(new_cache) == ptrs, \
+        "chunk step re-materialised the arena instead of reusing it"
+
+
+def test_insert_splice_reuses_donated_arena_buffer(tiny_model):
+    model, params = tiny_model
+    cache = model.init_cache(SLOTS, SEQ)
+    one = model.init_cache(1, SEQ)
+    ptrs = _leaf_ptrs(cache)
+    one_ptrs = _leaf_ptrs(one)
+    new_cache = _insert_jit(cache, one, jnp.int32(2))
+    _require_donation(cache)
+    assert _leaf_ptrs(new_cache) == ptrs
+    # the batch=1 prefill template is NOT donated (it is reused verbatim
+    # by every monolithic admission)
+    assert not any(leaf.is_deleted() for leaf in jax.tree.leaves(one))
+    assert _leaf_ptrs(one) == one_ptrs
+
+
+def test_engine_arena_is_single_resident_buffer(tiny_model):
+    """Across an entire engine run — admissions, chunk ingestion, decode
+    steps — the KV arena must live in one device buffer."""
+    model, params = tiny_model
+    rng = np.random.default_rng(0)
+    eng = ServingEngine(model, TINY, params, max_slots=2, max_seq=64,
+                        depth=2, prefill_chunks=(4, 8), donate=True)
+    ptrs0 = _leaf_ptrs(eng._cache)
+    for i, n in enumerate((5, 11, 7)):
+        eng.submit(Request(uid=i, prompt=rng.integers(0, TINY.vocab, n)
+                           .astype(np.int32), max_new_tokens=6))
+    eng.run(max_steps=500)
+    if not ptrs0:       # defensive; dense cache always has leaves
+        pytest.skip("no cache leaves")
+    try:
+        ptrs1 = _leaf_ptrs(eng._cache)
+    except Exception:
+        pytest.skip("backend does not expose buffer pointers")
+    if ptrs0 != ptrs1:
+        # tolerated only where donation is unimplemented (no deletion ever
+        # happened); on donating backends the arena must not move
+        probe = jax.jit(lambda x: x + 1, donate_argnums=0)
+        x = jnp.zeros((4,))
+        probe(x)
+        assert not x.is_deleted(), \
+            "donating backend moved the resident arena"
+
+
+# ---------------------------------------------------------------------------
+# cost-analysis claim checks (in-place lowering, chunk-row bounds)
+# ---------------------------------------------------------------------------
+
+_copied_bytes = hlo_analysis.copied_bytes
+
+
+def _chunk_cost(model, params, slots):
+    cache = model.init_cache(slots, SEQ)
+    toks = jnp.zeros((1, CHUNK), jnp.int32)
+    comp = jax.jit(
+        lambda p, c, t, s, st, li: model.prefill_chunk(p, t, c, s, st, li),
+        donate_argnums=1,
+    ).lower(params, cache, toks, jnp.int32(0), jnp.int32(8),
+            jnp.int32(0)).compile()
+    arena_bytes = sum(leaf.nbytes for leaf in jax.tree.leaves(cache))
+    return hlo_analysis.analyze(comp.as_text()), arena_bytes
+
+
+def test_chunk_copied_bytes_bounded_by_chunk_rows(tiny_model):
+    """The per-chunk write traffic must be O(chunk rows): the old
+    extract/insert round-trip was O(slot) per chunk and the undonated
+    splice O(arena)."""
+    model, params = tiny_model
+    cost, arena_bytes = _chunk_cost(model, params, SLOTS)
+    row_bytes = (2 * TINY.n_layers * CHUNK * TINY.n_kv_heads
+                 * TINY.hd * 4)                    # k+v chunk rows, f32
+    copied = _copied_bytes(cost)
+    # 2x for the cost model's read+write charge, 2x headroom for small
+    # fused copies (logits, positions); far below one slot's rows
+    assert copied <= 4 * row_bytes + 4096, (copied, row_bytes)
+    slot_bytes = arena_bytes / SLOTS
+    assert copied < slot_bytes, (copied, slot_bytes)
+
+
+def test_chunk_bytes_independent_of_arena_width(tiny_model):
+    """Doubling the number of slots must not change the chunk step's
+    copied bytes (and must leave total bytes within noise): the zero-copy
+    claim 'bytes move with the chunk, not the arena'."""
+    model, params = tiny_model
+    cost1, _ = _chunk_cost(model, params, SLOTS)
+    cost2, _ = _chunk_cost(model, params, 2 * SLOTS)
+    assert _copied_bytes(cost2) == pytest.approx(_copied_bytes(cost1)), \
+        "chunk copied bytes scale with arena width"
+    assert cost2.bytes <= cost1.bytes * 1.05, (cost2.bytes, cost1.bytes)
+
+
+def test_decode_step_lowers_inplace_not_copies(tiny_model):
+    """The donated decode step must alias the arena input to its output
+    (memory_analysis) and spend copy bytes far below the arena size (the
+    HLO cost model) — i.e. the cache update is an in-place scatter of the
+    new rows, not an arena re-materialisation."""
+    model, params = tiny_model
+    cache = model.init_cache(SLOTS, SEQ)
+    arena_bytes = sum(leaf.nbytes for leaf in jax.tree.leaves(cache))
+    tokens = jnp.zeros((SLOTS,), jnp.int32)
+    pos = jnp.full((SLOTS,), 4, jnp.int32)
+    active = jnp.ones((SLOTS,), jnp.int32)
+
+    def step(params, tokens, cache, pos, active):
+        logits, cache = model.decode_step(params, tokens, cache, pos)
+        return jnp.argmax(logits, -1), cache
+
+    comp = jax.jit(step, donate_argnums=2).lower(
+        params, tokens, cache, pos, active).compile()
+    try:
+        ma = comp.memory_analysis()
+    except Exception:
+        ma = None
+    if ma is not None and ma.alias_size_in_bytes:
+        assert ma.alias_size_in_bytes >= arena_bytes
+    cost = hlo_analysis.analyze(comp.as_text())
+    assert _copied_bytes(cost) < 0.5 * arena_bytes, \
+        (dict(cost.bytes_by_op), arena_bytes)
+
+
+# ---------------------------------------------------------------------------
+# engine-level: donation + preemption/recompute stay token-identical
+# ---------------------------------------------------------------------------
+
+def test_preemption_recompute_token_identical_with_donation(tiny_model):
+    """Mid-run preemption discards a slot whose arena rows were written
+    in place; deterministic recompute must replay identical tokens even
+    though the donated arena was mutated under the preempted request."""
+    model, params = tiny_model
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, TINY.vocab, n).astype(np.int32)
+               for n in (9, 13, 10)]
+
+    def reference(prompt, gen):
+        cache = model.init_cache(1, 64)
+        logits, cache = jax.jit(model.prefill)(
+            params, jnp.asarray(prompt)[None], cache)
+        toks = [int(jnp.argmax(logits[0]))]
+        pos = jnp.asarray([len(prompt)], jnp.int32)
+        tok = jnp.asarray([toks[0]], jnp.int32)
+        step = jax.jit(model.decode_step)
+        for _ in range(gen - 1):
+            logits, cache = step(params, tok, cache, pos)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            toks.append(int(tok[0]))
+            pos = pos + 1
+        return np.array(toks, np.int32)
+
+    want = [reference(p, 12) for p in prompts]
+    eng = ServingEngine(model, TINY, params, max_slots=3, max_seq=64,
+                        depth=2, page_size=4, num_pages=9,
+                        prefill_chunks=(4, 8), donate=True)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=12))
+    out = eng.run(max_steps=2000)
+    assert eng.scheduler.stats["preempted"] > 0
+    for i in range(3):
+        np.testing.assert_array_equal(out[i], want[i])
+
+
+# ---------------------------------------------------------------------------
+# weakly-keyed compiled-step cache
+# ---------------------------------------------------------------------------
+
+def test_compiled_step_cache_is_weak():
+    """The per-model jit caches must hit for a live model and release the
+    entry when the model is garbage-collected (lru_cache pinned every
+    model — and its XLA executables — forever)."""
+    model = registry.build_model(TINY)
+    fn1 = _compiled_decode(model)
+    fn2 = _compiled_decode(model)
+    assert fn1 is fn2                      # same model -> cache hit
+    assert id(model) in _compiled_decode.cache
+    ref = weakref.ref(model)
+    mid = id(model)
+    del model, fn1, fn2
+    gc.collect()
+    assert ref() is None, "compiled-step cache kept the model alive"
+    assert mid not in _compiled_decode.cache
