@@ -20,6 +20,17 @@ Prefill knobs (the stripmined prompt-ingestion path):
     (lengths cycle over the requests) — the traffic shape where chunked
     prefill pays: run it in both modes and compare the printed TTFT
     percentiles and ``prefill_compiles``.
+
+Sampling knobs (per-slot stochastic decode inside the compiled step):
+
+  * ``--temperature/--top-k/--top-p/--min-p`` set the sampled requests'
+    :class:`~repro.runtime.serving.SamplingParams`; ``--temperature 0``
+    (the default) keeps every request on the bit-exact greedy path.
+  * ``--seed`` is the run-level base seed; request *i* samples with seed
+    ``base + i``, so a rerun with the same seed replays identical streams.
+  * ``--sampling-mix f`` samples only a fraction ``f`` of the requests
+    (evenly spread), the rest stay greedy — the mixed traffic shape the
+    bench sweep measures.
 """
 from __future__ import annotations
 
@@ -30,17 +41,38 @@ import jax
 import numpy as np
 
 from repro.models import registry
-from repro.runtime.serving import DEFAULT_BUCKETS, Request, ServingEngine
+from repro.runtime.serving import (DEFAULT_BUCKETS, GREEDY, Request,
+                                   SamplingParams, ServingEngine)
 
 
 def make_engine(bundle, params, *, max_slots, max_seq, depth=2,
                 page_size=16, num_pages=None, prefill_chunks=None,
-                prefill_budget=None, donate="auto") -> ServingEngine:
+                prefill_budget=None, donate="auto",
+                base_seed=0) -> ServingEngine:
     return ServingEngine(bundle.model, bundle.cfg, params,
                          max_slots=max_slots, max_seq=max_seq, depth=depth,
                          page_size=page_size, num_pages=num_pages,
                          prefill_chunks=prefill_chunks,
-                         prefill_budget=prefill_budget, donate=donate)
+                         prefill_budget=prefill_budget, donate=donate,
+                         base_seed=base_seed)
+
+
+def sampling_plan(n_requests: int, *, temperature: float, top_k: int,
+                  top_p: float, min_p: float, seed: int,
+                  mix: float) -> list[SamplingParams]:
+    """Per-request SamplingParams for a run: a ``mix`` fraction of the
+    requests sample (evenly spread over arrival order, Bresenham-style),
+    the rest decode greedily.  Request i's seed is ``seed + i`` so streams
+    are distinct but the whole run replays from one base seed."""
+    if temperature <= 0 or mix <= 0:
+        return [GREEDY] * n_requests
+    mix = min(mix, 1.0)
+    return [
+        SamplingParams(temperature=temperature, top_k=top_k, top_p=top_p,
+                       min_p=min_p, seed=seed + i)
+        if int((i + 1) * mix) > int(i * mix) else GREEDY
+        for i in range(n_requests)
+    ]
 
 
 def _percentile(xs, q):
@@ -56,6 +88,11 @@ def report_stats(eng: ServingEngine) -> None:
     print(f"arena: {eng.arena_bytes / 1e6:.2f} MB resident, "
           f"donation {'on' if eng.donate else 'off'} "
           f"(in-place slot writes are unconditional)")
+    total = max(stats["requests"], 1)
+    print(f"sampler: base_seed={eng.base_seed} "
+          f"sampled={stats['sampled_requests']}/{total} requests "
+          f"(greedy={total - stats['sampled_requests']}; keys fold "
+          f"(seed, position) — batch/preemption/donation invariant)")
     print("scheduler:", eng.scheduler.stats)
     if ttft:
         print(f"ttft_s: mean={np.mean(ttft):.4f} "
@@ -117,6 +154,22 @@ def main(argv=None):
                    help="KV-arena buffer donation: auto = on once the "
                         "arena crosses the in-place pay-off threshold "
                         "(serving.engine.DONATE_MIN_BYTES)")
+    p.add_argument("--temperature", type=float, default=0.0,
+                   help="sampling temperature for sampled requests "
+                        "(0 = greedy argmax for every request)")
+    p.add_argument("--top-k", type=int, default=0,
+                   help="keep only the k highest-probability tokens "
+                        "(0 = off)")
+    p.add_argument("--top-p", type=float, default=1.0,
+                   help="nucleus sampling mass bound in (0, 1]")
+    p.add_argument("--min-p", type=float, default=0.0,
+                   help="drop tokens below min-p * max token probability")
+    p.add_argument("--seed", type=int, default=0,
+                   help="run-level base PRNG seed; request i samples with "
+                        "seed+i, so a rerun replays identical streams")
+    p.add_argument("--sampling-mix", type=float, default=1.0,
+                   help="fraction of requests that sample (evenly spread); "
+                        "the rest decode greedily")
     p.add_argument("--reduced", action="store_true", default=True)
     args = p.parse_args(argv)
 
@@ -157,11 +210,16 @@ def main(argv=None):
                       max_seq=max_prompt + prefix + args.gen + pad_slack + 1,
                       depth=args.depth, page_size=args.page_size,
                       num_pages=args.pages, prefill_chunks=chunks,
-                      prefill_budget=args.prefill_budget, donate=donate)
+                      prefill_budget=args.prefill_budget, donate=donate,
+                      base_seed=args.seed)
+    plan = sampling_plan(args.requests, temperature=args.temperature,
+                         top_k=args.top_k, top_p=args.top_p,
+                         min_p=args.min_p, seed=args.seed,
+                         mix=args.sampling_mix)
     for i in range(args.requests):
         eng.submit(Request(
             uid=i, prompt=rng.integers(0, cfg.vocab, lens[i]),
-            max_new_tokens=args.gen,
+            max_new_tokens=args.gen, sampling=plan[i],
             extras={k: v[i] for k, v in extras.items()}))
 
     t0 = time.perf_counter()

@@ -246,6 +246,13 @@ class EncDecLM:
                          preferred_element_type=jnp.float32)
         return logits, new_cache
 
+    # the serving engine's stochastic step.  EncDecLM is not an LM subclass
+    # (its cache/prefill contracts differ), but the sampling driver only
+    # needs decode_step, so the shared implementation applies verbatim —
+    # cross-attention KV is static per request and position-independent, so
+    # the (seed, position) key-fold determinism story carries over.
+    decode_and_sample = T.LM.decode_and_sample
+
 
 def _with_layers(cfg, n):
     import dataclasses

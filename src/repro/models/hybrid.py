@@ -56,6 +56,14 @@ def hybrid_layer_apply(p, cfg, x, extra, *, positions, rules=RULES):
 
 
 def hybrid_layer_decode(p, cfg, x_t, cache, pos, extra, *, rules=RULES):
+    """Decode step over the {kv, mamba} cache pair.
+
+    Both branches ride the shared ``decode_and_sample`` driver: sampled
+    decode stays deterministic under preemption because the attention KV
+    is position-addressed and the SSD state is re-derived by the replayed
+    prefill, while the draw at each position depends only on (seed,
+    position) — see mamba2.ssm_layer_decode for the recurrent-state
+    half of that argument."""
     h = L.rmsnorm(p["ln1"], x_t, cfg.rms_eps)
     a, kv_cache = L.attention_decode(p["attn"], cfg, h, cache["kv"], pos,
                                      window=extra, rules=rules)

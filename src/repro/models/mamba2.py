@@ -187,6 +187,14 @@ def ssm_layer_apply(p, cfg, x, extra=None, *, positions=None, rules=RULES):
 
 
 def ssm_layer_decode(p, cfg, x_t, cache, pos, extra=None, *, rules=RULES):
+    """Decode step over the recurrent (ssm, conv) state.
+
+    Unlike KV caches the SSD state is not position-addressed, so a
+    preempted slot cannot rewind it — recompute replays prefill from the
+    prompt and re-derives the state.  Sampled decode survives that replay
+    because ``decode_and_sample``'s PRNG keys fold only (seed, absolute
+    position): the regenerated state sees the identical token/draw
+    sequence, never a stored RNG cursor."""
     h = L.rmsnorm(p["ln"], x_t, cfg.rms_eps)
     y, cache = mamba_decode_step(p["mamba"], cfg, h, cache, rules=rules)
     return x_t + y, cache

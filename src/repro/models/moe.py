@@ -223,6 +223,16 @@ def moe_prefill_layer(p, cfg, x, cache_l, positions, extra=None, *,
 
 
 def moe_layer_decode(p, cfg, x_t, cache, pos, extra=None, *, rules=RULES):
+    """Decode step (functional cache threading via ``stack_decode``).
+
+    Sampling caveat: the PRNG side of ``decode_and_sample`` is
+    batch-composition independent for every family (keys fold only (seed,
+    position)), but MoE *logits* are not — capacity dropping couples the
+    slots sharing a dispatch buffer — so a sampled MoE stream is
+    deterministic for a fixed slot-batch trajectory (preemption replay,
+    donation, dispatch depth) while the batch-membership-invariance claim
+    is pinned on the dense family only (same caveat as greedy MoE
+    serving)."""
     h = L.rmsnorm(p["ln1"], x_t, cfg.rms_eps)
     a, cache = L.attention_decode(p["attn"], cfg, h, cache, pos, rules=rules)
     x_t = x_t + a

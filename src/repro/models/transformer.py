@@ -441,6 +441,26 @@ class LM:
         logits = lanes.constrain(logits, self.rules, "batch", "vocab_tp")
         return logits, new_cache
 
+    def decode_and_sample(self, params, token_t, cache, pos, samp):
+        """One decode step + on-device sampling: the serving engine's
+        compiled step body, shared by every LM family (dense arena path
+        and functional ``stack_decode`` families alike).
+
+        ``samp``: the engine's per-slot sampling vectors — ``{"temp",
+        "top_p", "min_p"}`` (B,) f32 and ``{"top_k", "seed"}`` (B,) i32.
+        The (B, V) logits stay inside the compiled step — only the sampled
+        (B,) int32 token vector comes out.  The token sampled here will
+        occupy cache row ``pos + 1``, so its PRNG key folds ``(seed,
+        pos + 1)`` (see :func:`repro.models.layers.sample_step`): a pure
+        function of the request's seed and the absolute position, never of
+        batch composition or donation generation.  Slots with
+        ``temp <= 0`` take the bit-exact argmax path.
+        """
+        logits, new_cache = self.decode_step(params, token_t, cache, pos)
+        tok = L.sample_step(logits, samp["seed"], pos + 1, samp["temp"],
+                            samp["top_k"], samp["top_p"], samp["min_p"])
+        return tok, new_cache
+
     def _decode_rows(self, params, cfg, x_t, cache, pos, layer_xs):
         """Dense arena decode: scan layers collecting K/V rows, then one
         in-place scatter of all (L·B) rows into the resident arena."""

@@ -4,7 +4,11 @@ Per the assignment, the anyres vision frontend is a STUB — ``input_specs()``
 provides precomputed patch embeddings (576 tokens per tile, one tile) that
 the backbone treats as a prefix of the text sequence.  Training masks the
 prefix positions out of the loss; prefill writes prefix KV into the cache
-exactly like prompt tokens (so decode is identical to the dense LM).
+exactly like prompt tokens (so decode — and the inherited
+``decode_and_sample`` stochastic path — is identical to the dense LM).
+Sampling positions are *absolute cache rows*, so the patch prefix shifts
+them: the first generated token's PRNG key folds ``(seed, n_patch_tokens +
+prompt_len)``, which the serving engine accounts for via ``prefix_extra``.
 """
 from __future__ import annotations
 

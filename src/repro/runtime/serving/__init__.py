@@ -3,8 +3,10 @@ from repro.runtime.serving.chunking import (DEFAULT_BUCKETS, chunk_plan,
                                             padded_len)
 from repro.runtime.serving.engine import ServingEngine
 from repro.runtime.serving.request import Request, RequestState, Status
+from repro.runtime.serving.sampling import GREEDY, SamplingParams
 from repro.runtime.serving.scheduler import Scheduler
 
 __all__ = ["PagedKVCacheManager", "cache_insert",
            "DEFAULT_BUCKETS", "chunk_plan", "padded_len", "ServingEngine",
-           "Request", "RequestState", "Status", "Scheduler"]
+           "Request", "RequestState", "Status", "Scheduler",
+           "GREEDY", "SamplingParams"]

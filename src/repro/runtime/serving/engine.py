@@ -48,6 +48,18 @@ Prefill comes in two modes:
     compilations are bounded by the bucket count instead of the number of
     prompt lengths in the traffic mix.
 
+Sampling (temperature / top-k / top-p / min-p) runs *inside* the compiled
+decode step (``model.decode_and_sample``): the (B, V) logits never leave the
+device, and the per-slot PRNG key is recomputed each step as
+``fold_in(fold_in(key0, request_seed), position)`` — no key material lives
+in (donated) device state, so a slot's token stream is a pure function of
+(seed, position), invariant to batch composition, chunked-prefill
+interleaving, preemption/recompute and donation generation (see
+``serving.sampling``).  Greedy slots take the bit-exact argmax path, and a
+step whose RUNNING slots are *all* greedy dispatches a pure-argmax twin
+executable (same signature and donation structure) so greedy-only traffic
+never pays the sampling transform at all.
+
 Dead slots keep decoding garbage tokens; correctness holds because (a)
 flash-decode tail predication hides rows ≥ the slot's live length, (b)
 prefill overwrites rows [0, prefill_len), and (c) a frozen slot's position
@@ -71,7 +83,7 @@ import numpy as np
 
 from repro.core import masking
 from repro.core.dispatch import DispatchQueue
-from repro.runtime.serving import chunking
+from repro.runtime.serving import chunking, sampling
 from repro.runtime.serving.cache import PagedKVCacheManager, cache_insert
 from repro.runtime.serving.request import Request, RequestState, Status
 from repro.runtime.serving.scheduler import Scheduler
@@ -133,9 +145,17 @@ def _per_model(build):
 
 @_per_model
 def _compiled_decode(model, donate):
-    def step(params, tokens, cache, pos, active):
-        logits, cache = model.decode_step(params, tokens, cache, pos)
-        sampled = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    def step(params, tokens, cache, pos, active, samp):
+        # decode + sampling in one compiled body (model.decode_and_sample):
+        # the (B, V) logits never leave the device.  ``samp`` is the
+        # per-slot sampling state (temp/top_k/top_p/min_p/seed vectors);
+        # greedy slots (temp <= 0) take the bit-exact argmax path.  The
+        # PRNG key of each draw folds (seed, pos+1) inside the step — no
+        # key material lives in device state, so donating ``samp`` (it
+        # passes through unchanged, aliased in place) cannot perturb a
+        # stream across donation generations.
+        sampled, cache = model.decode_and_sample(params, tokens, cache,
+                                                 pos, samp)
         # dead slots: keep the old token (tail-undisturbed) & freeze pos
         tokens = masking.apply_mask(tokens, sampled, active == 1)
         pos = pos + active
@@ -146,8 +166,28 @@ def _compiled_decode(model, donate):
         # simplified away and end up sharing the doomed buffer).  The
         # drain only consumes entries for slots that were RUNNING at
         # submit (active == 1), where sampled == masked tokens.
-        return tokens, cache, pos, active, sampled
-    return jax.jit(step, donate_argnums=(1, 2, 3, 4) if donate else ())
+        return tokens, cache, pos, active, samp, sampled
+    return jax.jit(step, donate_argnums=(1, 2, 3, 4, 5) if donate else ())
+
+
+@_per_model
+def _compiled_decode_greedy(model, donate):
+    """The pure-argmax twin of :func:`_compiled_decode` — same signature,
+    same donation structure (``samp`` passes through, aliased), no sampling
+    transform (sort / softmax / Gumbel).  The engine picks per step: a step
+    whose RUNNING slots are all greedy runs this executable, so pure-greedy
+    traffic pays exactly the pre-sampling step cost.  Switching executables
+    mid-run is safe — both consume/produce the same donated state, and
+    tokens for a slot that turns sampled *after* a greedy step was
+    submitted are dropped by the engine's slot-generation staleness guard
+    (activation bumps the generation)."""
+    def step(params, tokens, cache, pos, active, samp):
+        logits, cache = model.decode_step(params, tokens, cache, pos)
+        sampled = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        tokens = masking.apply_mask(tokens, sampled, active == 1)
+        pos = pos + active
+        return tokens, cache, pos, active, samp, sampled
+    return jax.jit(step, donate_argnums=(1, 2, 3, 4, 5) if donate else ())
 
 
 @_per_model
@@ -212,6 +252,12 @@ class ServingEngine:
     when the buffer is large, which is the regime this engine targets;
     ``True``/``False`` force the choice (tests force ``True`` to pin
     buffer identity).
+
+    ``base_seed``: the run-level PRNG seed.  A sampled request whose
+    ``SamplingParams.seed`` is ``None`` uses it, so two engines with the
+    same base seed and the same requests generate identical streams; the
+    per-draw key folds only (request seed, absolute position) — see
+    :mod:`repro.runtime.serving.sampling`.
     """
 
     def __init__(self, model, cfg, params, *, max_slots: int = 8,
@@ -219,7 +265,7 @@ class ServingEngine:
                  num_pages: Optional[int] = None,
                  prefill_chunks: Optional[tuple] = None,
                  prefill_budget: Optional[int] = None,
-                 donate: Any = "auto"):
+                 donate: Any = "auto", base_seed: int = 0):
         self.model = model
         self.cfg = cfg
         self.params = params
@@ -253,6 +299,10 @@ class ServingEngine:
         self._tokens = jnp.zeros((max_slots,), jnp.int32)
         self._pos = jnp.zeros((max_slots,), jnp.int32)
         self._active = jnp.zeros((max_slots,), jnp.int32)
+        # per-slot sampling params (greedy until a sampled admission);
+        # threaded through — and donated with — every decode step
+        self.base_seed = int(base_seed)
+        self._samp = sampling.init_slot_state(max_slots)
         self._cache = model.init_cache(max_slots, max_seq)
 
         self.arena_bytes = sum(
@@ -270,6 +320,8 @@ class ServingEngine:
                       and getattr(model, "inplace_arena_decode", False))
         self.donate = bool(donate)
         self._decode = _compiled_decode(model, self.donate)
+        self._decode_greedy = _compiled_decode_greedy(model, self.donate)
+        self._use_sampling = False      # per-step executable choice
         self._insert = _insert_jit if self.donate else _insert_plain_jit
         self._set_slot = _set_slot_jit
         # one prefill wrapper per model, compile-cached per prompt length
@@ -298,11 +350,15 @@ class ServingEngine:
         self._prefill_shapes: set = set()
         self._prefill_tick = 0
         self.stats = {"decode_steps": 0, "prefills": 0, "prefill_chunks": 0,
-                      "prefill_compiles": 0, "tokens_out": 0,
+                      "prefill_compiles": 0, "tokens_out": 0, "requests": 0,
+                      "sampled_requests": 0, "sampled_steps": 0,
                       "host_blocked_s": 0.0, "ttft_s": {}}
 
     def _submit_decode(self, state):
-        return self._decode(self.params, *state)
+        if self._use_sampling:
+            self.stats["sampled_steps"] += 1
+            return self._decode(self.params, *state)
+        return self._decode_greedy(self.params, *state)
 
     def _note_prefill_shape(self, key) -> None:
         self._prefill_shapes.add(key)
@@ -330,6 +386,9 @@ class ServingEngine:
                     f"max_seq={self.max_seq}")
         st = self.scheduler.submit(request, chunk_plan=plan)
         st.submitted_at = time.perf_counter()
+        self.stats["requests"] += 1
+        if not request.sampling.is_greedy:
+            self.stats["sampled_requests"] += 1
         self._results[request.uid] = st
         return st
 
@@ -365,10 +424,23 @@ class ServingEngine:
     def _activate_slot(self, st: RequestState, logits) -> None:
         """Sample the prompt's first token off ``logits`` (1, V) and put
         the slot into the decode batch — shared by monolithic admission
-        and the chunked path's final chunk."""
+        and the chunked path's final chunk.
+
+        The first generated token occupies cache row ``pos0``, so it is
+        drawn with the decode-path key at q = pos0: the draw is identical
+        whether the prompt arrived monolithically or chunked (the final
+        chunk's logits equal monolithic prefill's), and a preemption
+        recompute replays it exactly.  The slot's sampling vectors are
+        (re)written here, before the slot joins the decode batch."""
         slot = st.slot
-        token0 = jnp.argmax(logits[0], -1).astype(jnp.int32)
+        sp = st.request.sampling
+        seed = sampling.resolve_seed(sp, self.base_seed)
         pos0 = st.prompt_len + self.prefix_extra
+        if sp.is_greedy:    # temp <= 0 ⟺ argmax: skip the masked transform
+            token0 = jnp.argmax(logits[0], -1).astype(jnp.int32)
+        else:
+            token0 = sampling.sample_first(logits, seed, pos0, sp)
+        self._samp = sampling.write_slot(self._samp, slot, sp, seed)
         # reading token0 syncs the host on this prefill only; in-flight
         # decode steps keep running on the device
         t0 = time.perf_counter()
@@ -468,14 +540,21 @@ class ServingEngine:
         self._drain_pending(limit=self.depth)
         self._admit()
         self._advance_prefill()
-        if not any(st.status == Status.RUNNING
-                   for st in self.scheduler.running.values()):
+        running = [st for st in self.scheduler.running.values()
+                   if st.status == Status.RUNNING]
+        if not running:
             return
-        state = (self._tokens, self._cache, self._pos, self._active)
+        # executable choice: only a step with a sampled RUNNING slot pays
+        # the sampling transform; pure-greedy steps run the argmax twin
+        self._use_sampling = any(not st.request.sampling.is_greedy
+                                 for st in running)
+        state = (self._tokens, self._cache, self._pos, self._active,
+                 self._samp)
         out = self._queue.submit(state)
         # rebind to the outputs: the submitted buffers were donated and are
         # dead from here on
-        self._tokens, self._cache, self._pos, self._active, read = out
+        (self._tokens, self._cache, self._pos, self._active, self._samp,
+         read) = out
         self.stats["decode_steps"] += 1
         snapshot = {slot: (st, self._slot_gen[slot])
                     for slot, st in self.scheduler.running.items()}

@@ -13,6 +13,8 @@ from typing import Any, Optional
 
 import numpy as np
 
+from repro.runtime.serving.sampling import GREEDY, SamplingParams
+
 
 class Status(enum.Enum):
     WAITING = "waiting"        # queued, not yet admitted to a slot
@@ -27,12 +29,19 @@ class Request:
 
     ``extras`` are per-request prefill side inputs (e.g. whisper ``frames``,
     llava ``patch_embeds``), *unbatched* — the engine adds the batch dim.
+
+    ``sampling`` selects the decode policy (default: greedy).  A sampled
+    request's token at generation position q is a pure function of
+    ``(sampling.seed, q)`` — see :mod:`repro.runtime.serving.sampling` —
+    so preemption/recompute replays the identical continuation and the
+    stream does not depend on co-resident requests.
     """
     uid: Any
     prompt: np.ndarray                    # (S,) int32 token ids
     max_new_tokens: int
     eos_id: Optional[int] = None
     extras: Optional[dict] = None
+    sampling: SamplingParams = GREEDY
 
     def __post_init__(self):
         object.__setattr__(self, "prompt",

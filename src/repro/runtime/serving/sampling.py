@@ -1,0 +1,166 @@
+"""Stochastic sampling for the serving engine: params, per-slot PRNG keys.
+
+:class:`SamplingParams` is the immutable per-request knob set (temperature /
+top-k / top-p / min-p / seed) carried on :class:`~repro.runtime.serving.
+request.Request`.  The device-side transform itself lives in
+``repro.models.layers`` (:func:`~repro.models.layers.masked_logits` +
+:func:`~repro.models.layers.sample_step`) so every model family's decode
+driver shares one vectorized implementation and logits never leave the
+device; this module owns the host plumbing around it:
+
+  * the per-slot sampling state vectors threaded through the compiled
+    decode step (``init_slot_state`` / ``write_slot``) — five small (B,)
+    vectors (temp / top_k / top_p / min_p / seed), donated alongside
+    tokens/pos/active.  No PRNG *key* is ever stored in device state: a
+    slot's key for the token at absolute cache position q is
+    ``fold_in(fold_in(PRNGKey(0), seed), q)``, recomputed inside the step.
+    That is the whole determinism story — the draw at (seed, q) is a pure
+    function of those two ints, so it cannot depend on which other
+    requests are co-resident, how the prompt was chunked, whether the slot
+    was preempted and recomputed (the replay revisits the same positions),
+    or which donation generation of the arena is live.
+  * ``sample_first`` — the first generated token, sampled off the prefill
+    (or final-chunk) logits with the same key scheme at q = prompt_len
+    (+ prefix), so monolithic and chunked prefill produce the same draw.
+  * ``reference_probs`` — the numpy oracle for the masked/renormalised
+    categorical distribution, used by the statistical tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling knobs.  The default is greedy decode.
+
+    ``temperature <= 0`` means greedy (bit-exact argmax; every other knob
+    is ignored).  ``top_k <= 0`` disables the top-k filter; ``top_p`` is
+    the nucleus mass bound in (0, 1]; ``min_p`` drops tokens whose
+    probability is below ``min_p *`` the max probability.  ``seed=None``
+    defers to the engine's run-level ``base_seed``.
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    min_p: float = 0.0
+    seed: Optional[int] = None
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature < 0: {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k < 0: {self.top_k}")
+        if not (0.0 < self.top_p <= 1.0):
+            raise ValueError(f"top_p outside (0, 1]: {self.top_p}")
+        if not (0.0 <= self.min_p <= 1.0):
+            raise ValueError(f"min_p outside [0, 1]: {self.min_p}")
+
+    @property
+    def is_greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+GREEDY = SamplingParams()
+
+
+def resolve_seed(sp: SamplingParams, base_seed: int) -> int:
+    """The request's effective PRNG seed (run-level default applied)."""
+    seed = sp.seed if sp.seed is not None else base_seed
+    return int(seed) % (1 << 31)
+
+
+# ---------------------------------------------------------------------------
+# per-slot device state
+# ---------------------------------------------------------------------------
+
+def init_slot_state(max_slots: int) -> dict:
+    """The engine's per-slot sampling vectors (greedy everywhere)."""
+    return {
+        "temp": jnp.zeros((max_slots,), jnp.float32),
+        "top_k": jnp.zeros((max_slots,), jnp.int32),
+        "top_p": jnp.ones((max_slots,), jnp.float32),
+        "min_p": jnp.zeros((max_slots,), jnp.float32),
+        "seed": jnp.zeros((max_slots,), jnp.int32),
+    }
+
+
+# a few scalar pokes per admission: like the engine's _set_slot_jit these
+# stay functional — donation's fixed per-call cost would dwarf the copies
+@jax.jit
+def _write_slot_jit(samp, slot, temp, top_k, top_p, min_p, seed):
+    return {
+        "temp": samp["temp"].at[slot].set(temp),
+        "top_k": samp["top_k"].at[slot].set(top_k),
+        "top_p": samp["top_p"].at[slot].set(top_p),
+        "min_p": samp["min_p"].at[slot].set(min_p),
+        "seed": samp["seed"].at[slot].set(seed),
+    }
+
+
+def write_slot(samp: dict, slot: int, sp: SamplingParams, seed: int) -> dict:
+    """Install a request's sampling params into its slot (at admission —
+    re-admission after preemption rewrites them identically)."""
+    return _write_slot_jit(samp, jnp.int32(slot),
+                           jnp.float32(sp.temperature), jnp.int32(sp.top_k),
+                           jnp.float32(sp.top_p), jnp.float32(sp.min_p),
+                           jnp.int32(seed))
+
+
+# ---------------------------------------------------------------------------
+# first token (prefill / final-chunk logits)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _sample_first_jit(logits, seed, q, temp, top_k, top_p, min_p):
+    return L.sample_step(logits, seed[None], q[None], temp[None],
+                         top_k[None], top_p[None], min_p[None])[0]
+
+
+def sample_first(logits, seed: int, q: int, sp: SamplingParams):
+    """Sample the first generated token off (1, V) prefill logits with the
+    decode-path key scheme at absolute position ``q`` (= prompt_len +
+    prefix — the row the token will occupy).  Scalars are traced, so this
+    compiles once per vocab shape."""
+    return _sample_first_jit(logits, jnp.int32(seed), jnp.int32(q),
+                             jnp.float32(sp.temperature), jnp.int32(sp.top_k),
+                             jnp.float32(sp.top_p), jnp.float32(sp.min_p))
+
+
+# ---------------------------------------------------------------------------
+# numpy reference (test oracle)
+# ---------------------------------------------------------------------------
+
+def reference_probs(logits, sp: SamplingParams) -> np.ndarray:
+    """The masked/renormalised categorical distribution ``sample_step``
+    draws from, computed in numpy: the statistical tests' expected
+    marginal.  logits: (V,).  Greedy params return a one-hot argmax."""
+    x = np.asarray(logits, np.float64).reshape(-1)
+    v = x.shape[0]
+    if sp.is_greedy:
+        out = np.zeros(v)
+        out[int(np.argmax(x))] = 1.0
+        return out
+    x = x / max(sp.temperature, 1e-6)
+    keep = np.ones(v, bool)
+    sorted_x = np.sort(x)[::-1]
+    if sp.top_k > 0:
+        keep &= x >= sorted_x[min(sp.top_k, v) - 1]
+    ps = np.exp(sorted_x - sorted_x[0])
+    ps /= ps.sum()
+    excl = np.cumsum(ps) - ps
+    kept_sorted = sorted_x[excl < sp.top_p]
+    keep &= x >= kept_sorted.min()
+    probs = np.exp(x - x.max())
+    probs /= probs.sum()
+    keep &= probs >= sp.min_p * probs.max()
+    keep |= x >= x.max()
+    p = np.where(keep, probs, 0.0)
+    return p / p.sum()

@@ -164,12 +164,15 @@ class Scheduler:
         return slot, st
 
     def _preempt(self, st: RequestState) -> tuple[int, RequestState]:
-        """Out of pages: drop the slot, requeue in arrival order.  Greedy
-        decode is deterministic, so the recompute replays the same tokens —
-        generated-so-far is discarded and regenerated from the prompt.  A
-        victim caught *mid-prefill* rewinds its chunk cursor to 0: the plan
-        is kept (it is a pure function of prompt length), so re-admission
-        replays the identical chunk sequence."""
+        """Out of pages: drop the slot, requeue in arrival order.  Decode
+        is deterministic — greedy trivially, and *sampled* decode because
+        each draw's PRNG key folds only (request seed, absolute position),
+        never any rewindable state (see serving.sampling) — so the
+        recompute replays the same tokens: generated-so-far is discarded
+        and regenerated from the prompt, and there is no RNG cursor to
+        rewind here.  A victim caught *mid-prefill* rewinds its chunk
+        cursor to 0: the plan is kept (it is a pure function of prompt
+        length), so re-admission replays the identical chunk sequence."""
         slot = st.slot
         self._release(st)
         st.status = Status.WAITING

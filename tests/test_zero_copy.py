@@ -20,7 +20,8 @@ import pytest
 from repro.configs.base import ArchConfig
 from repro.core import hlo_analysis
 from repro.models import registry
-from repro.runtime.serving import Request, ServingEngine
+from repro.runtime.serving import Request, SamplingParams, ServingEngine
+from repro.runtime.serving import sampling
 from repro.runtime.serving.engine import (_compiled_decode,
                                           _compiled_prefill_chunk,
                                           _insert_jit)
@@ -61,9 +62,10 @@ def test_decode_step_reuses_donated_arena_buffer(tiny_model):
     tokens = jnp.zeros((SLOTS,), jnp.int32)
     pos = jnp.full((SLOTS,), 4, jnp.int32)
     active = jnp.ones((SLOTS,), jnp.int32)
+    samp = sampling.init_slot_state(SLOTS)
     ptrs = _leaf_ptrs(cache)
-    tokens, new_cache, pos, active, read = step(params, tokens, cache, pos,
-                                                active)
+    tokens, new_cache, pos, active, samp, read = step(params, tokens, cache,
+                                                      pos, active, samp)
     _require_donation(cache)
     assert _leaf_ptrs(new_cache) == ptrs, \
         "decode step re-materialised the arena instead of reusing it"
@@ -71,8 +73,8 @@ def test_decode_step_reuses_donated_arena_buffer(tiny_model):
     # state, which is donated into the next step
     assert read.unsafe_buffer_pointer() != tokens.unsafe_buffer_pointer()
     # second step: the arena stays resident in the same buffer
-    tokens2, cache2, pos2, active2, read2 = step(params, tokens, new_cache,
-                                                 pos, active)
+    tokens2, cache2, pos2, active2, samp2, read2 = step(
+        params, tokens, new_cache, pos, active, samp)
     assert _leaf_ptrs(cache2) == ptrs
     # and the first step's readback is still host-readable
     np.asarray(read)
@@ -246,6 +248,38 @@ def test_preemption_recompute_token_identical_with_donation(tiny_model):
         eng.submit(Request(uid=i, prompt=p, max_new_tokens=12))
     out = eng.run(max_steps=2000)
     assert eng.scheduler.stats["preempted"] > 0
+    for i in range(3):
+        np.testing.assert_array_equal(out[i], want[i])
+
+
+def test_preemption_recompute_token_identical_sampled(tiny_model):
+    """The stochastic extension of the preemption harness: a *sampled*
+    request evicted mid-decode must replay a token-identical continuation
+    on recompute, with the arena donated throughout.  Works because the
+    draw at each position folds only (seed, position) — there is no RNG
+    cursor to rewind, and no key material in the donated state.  The
+    reference is the same workload in an unpressured pool (no preemption),
+    so the comparison also pins batch-trajectory invariance."""
+    model, params = tiny_model
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, TINY.vocab, n).astype(np.int32)
+               for n in (9, 13, 10)]
+    sps = [SamplingParams(temperature=0.9, top_k=25, top_p=0.92,
+                          seed=300 + i) for i in range(3)]
+
+    def run(num_pages):
+        eng = ServingEngine(model, TINY, params, max_slots=3, max_seq=64,
+                            depth=2, page_size=4, num_pages=num_pages,
+                            prefill_chunks=(4, 8), donate=True)
+        for i, (p, sp) in enumerate(zip(prompts, sps)):
+            eng.submit(Request(uid=i, prompt=p, max_new_tokens=12,
+                               sampling=sp))
+        return eng.run(max_steps=2000), eng
+
+    want, calm = run(num_pages=None)          # full arena: no pressure
+    assert calm.scheduler.stats["preempted"] == 0
+    out, pressured = run(num_pages=9)         # undersized: evictions
+    assert pressured.scheduler.stats["preempted"] > 0
     for i in range(3):
         np.testing.assert_array_equal(out[i], want[i])
 
