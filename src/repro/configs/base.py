@@ -180,6 +180,45 @@ class ArchConfig:
         return dataclasses.replace(self, **kw)
 
 
+def tiny_family_configs(*, d_model: int = 32, vocab: int = 97,
+                        max_seq: int = 64,
+                        name_prefix: str = "tiny-fam") -> dict:
+    """Reduced MoE/SSM/hybrid configs pinning ONE shared serving-test
+    regime (used by tests/conftest.py and benchmarks/bench_serving.py so
+    the regime cannot drift between the suites and the bench claims).
+
+    The load-bearing knob: MoE ``capacity_factor = n_experts / top_k``
+    ⟹ expert capacity never binds for any routing ⟹ MoE logits are
+    per-token, so chunked/batched serving is bit-identical to sequential
+    generation (the regime the engine-equivalence tests compare in; under
+    binding capacity the dispatch buffer couples tokens — the documented
+    MoE caveat)."""
+    hd = d_model // 4
+    f32 = dict(param_dtype="float32", act_dtype="float32")
+    return {
+        "hybrid": ArchConfig(name=f"{name_prefix}-hybrid", family="hybrid",
+                             n_layers=3, d_model=d_model, n_heads=4,
+                             n_kv_heads=2, d_ff=2 * d_model, vocab=vocab,
+                             head_dim=hd,
+                             ssm=SSMConfig(d_state=8, headdim=hd, chunk=16),
+                             attn_window=8, n_global_layers=1,
+                             subquadratic=True, max_seq=max_seq, **f32),
+        "moe": ArchConfig(name=f"{name_prefix}-moe", family="moe",
+                          n_layers=2, d_model=d_model, n_heads=4,
+                          n_kv_heads=2, d_ff=2 * d_model, vocab=vocab,
+                          head_dim=hd,
+                          moe=MoEConfig(n_experts=4, top_k=2,
+                                        d_ff_expert=32,
+                                        capacity_factor=2.0),
+                          max_seq=max_seq, **f32),
+        "ssm": ArchConfig(name=f"{name_prefix}-ssm", family="ssm",
+                          n_layers=2, d_model=d_model, n_heads=8,
+                          n_kv_heads=8, d_ff=2 * d_model, vocab=vocab,
+                          ssm=SSMConfig(d_state=8, headdim=hd, chunk=16),
+                          subquadratic=True, max_seq=max_seq, **f32),
+    }
+
+
 @dataclasses.dataclass(frozen=True)
 class ShapeConfig:
     """One cell of the assigned (arch × shape) grid."""

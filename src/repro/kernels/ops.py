@@ -488,16 +488,23 @@ def _chunked_ssd_ref(x, log_a, B, C, *, chunk, initial_state=None):
 def ssd(x: jax.Array, log_a: jax.Array, B: jax.Array, C: jax.Array, *,
         chunk: int = 256, initial_state: Optional[jax.Array] = None,
         mode: Optional[Mode] = None):
-    """Chunked SSD: x (BH,S,P), log_a (BH,S), B/C (BH,S,N) -> (y, state)."""
+    """Chunked SSD: x (BH,S,P), log_a (BH,S), B/C (BH,S,N) -> (y, state).
+
+    ``initial_state`` (BH, N, P) seeds the recurrence (serving's chunked
+    prefill threads it across prompt chunks); supported by every path —
+    the Pallas kernel takes it as a VMEM-seeded operand, so stripmined
+    SSM prefill does not fall back to the jnp path on TPU."""
     mode = mode or _resolved()
-    if mode == "ref" or initial_state is not None:
+    if mode == "ref":
         return _chunked_ssd_ref(x, log_a, B, C, chunk=chunk,
                                 initial_state=initial_state)
     s = x.shape[1]
     chunk_ = min(chunk, s)
     if s % chunk_:
-        return _chunked_ssd_ref(x, log_a, B, C, chunk=chunk)
+        return _chunked_ssd_ref(x, log_a, B, C, chunk=chunk,
+                                initial_state=initial_state)
     return _ssd.ssd(x, log_a, B, C, chunk=chunk_,
+                    initial_state=initial_state,
                     interpret=(mode == "interpret"))
 
 

@@ -30,13 +30,16 @@ from repro.core import compat
 NEG_INF = -1e30
 
 
-def _ssd_kernel(x_ref, la_ref, b_ref, c_ref, y_ref, st_out_ref, state_ref, *,
-                nchunks: int):
+def _ssd_kernel(x_ref, la_ref, b_ref, c_ref, st0_ref, y_ref, st_out_ref,
+                state_ref, *, nchunks: int):
     c_idx = pl.program_id(1)
 
     @pl.when(c_idx == 0)
     def _init():
-        state_ref[...] = jnp.zeros_like(state_ref)
+        # seed the carry from the caller's initial state (zeros at sequence
+        # start; the previous chunk's carry-out under serving's stripmined
+        # prefill, where the recurrence is threaded across chunk calls)
+        state_ref[...] = st0_ref[0].astype(jnp.float32)
 
     x = x_ref[0].astype(jnp.float32)       # (Q, P)
     la = la_ref[0].astype(jnp.float32)     # (Q,)
@@ -73,10 +76,15 @@ def _ssd_kernel(x_ref, la_ref, b_ref, c_ref, y_ref, st_out_ref, state_ref, *,
 
 
 def ssd(x: jax.Array, log_a: jax.Array, B: jax.Array, C: jax.Array, *,
-        chunk: int = 256, interpret: bool = False):
+        chunk: int = 256, initial_state: jax.Array | None = None,
+        interpret: bool = False):
     """x: (BH, S, P), log_a: (BH, S), B/C: (BH, S, N) -> (y, final_state).
 
     y: (BH, S, P); final_state: (BH, N, P) f32.  Requires S % chunk == 0.
+    ``initial_state`` (BH, N, P) seeds the recurrence carry (None = zeros)
+    — the inter-*call* half of the slide-unit hand-off, used by serving's
+    chunked prefill to thread the SSD state across bucket-sized prompt
+    chunks without re-running the prefix.
     """
     bh, s, p = x.shape
     n = B.shape[-1]
@@ -84,6 +92,8 @@ def ssd(x: jax.Array, log_a: jax.Array, B: jax.Array, C: jax.Array, *,
     if s % chunk:
         raise ValueError(f"S={s} not a multiple of chunk={chunk}")
     nchunks = s // chunk
+    st0 = (jnp.zeros((bh, n, p), jnp.float32) if initial_state is None
+           else initial_state.astype(jnp.float32))
     y, st = pl.pallas_call(
         functools.partial(_ssd_kernel, nchunks=nchunks),
         grid=(bh, nchunks),
@@ -92,6 +102,7 @@ def ssd(x: jax.Array, log_a: jax.Array, B: jax.Array, C: jax.Array, *,
             pl.BlockSpec((1, chunk), lambda b, c: (b, c)),
             pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
             pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, n, p), lambda b, c: (b, 0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, chunk, p), lambda b, c: (b, c, 0)),
@@ -105,5 +116,5 @@ def ssd(x: jax.Array, log_a: jax.Array, B: jax.Array, C: jax.Array, *,
         compiler_params=compat.pallas_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(x, log_a, B, C)
+    )(x, log_a, B, C, st0)
     return y, st

@@ -15,7 +15,9 @@ Prefill knobs (the stripmined prompt-ingestion path):
   * ``--prefill-mode chunked`` cuts prompts into bucket-sized chunks
     (``--chunk-buckets``, default 32,64,128,256,512) interleaved with
     decode under a per-step token budget (``--prefill-budget``) — bounded
-    compile churn, bounded long-prompt stalls (dense-family archs).
+    compile churn, bounded long-prompt stalls.  Every LM family: dense/
+    MoE append K/V rows, SSM/hybrid thread the SSD chunk recurrence
+    through the slot's arena state.
   * ``--prompt-mix 64,128,512,2048`` serves a mixed-length workload
     (lengths cycle over the requests) — the traffic shape where chunked
     prefill pays: run it in both modes and compare the printed TTFT
@@ -89,9 +91,15 @@ def report_stats(eng: ServingEngine) -> None:
           f"donation {'on' if eng.donate else 'off'} "
           f"(in-place slot writes are unconditional)")
     total = max(stats["requests"], 1)
+    sampled = stats["sampled_requests"]
+    # guard the per-sampled-request average: a greedy-only run
+    # (--sampling-mix 0 / --temperature 0) has sampled == 0, and dividing
+    # by it printed nan — report "n/a" instead
+    per_req = (f"{stats['sampled_steps'] / sampled:.1f} sampling "
+               f"steps/request" if sampled else "n/a (greedy-only run)")
     print(f"sampler: base_seed={eng.base_seed} "
-          f"sampled={stats['sampled_requests']}/{total} requests "
-          f"(greedy={total - stats['sampled_requests']}; keys fold "
+          f"sampled={sampled}/{total} requests "
+          f"(greedy={total - sampled}; {per_req}; keys fold "
           f"(seed, position) — batch/preemption/donation invariant)")
     print("scheduler:", eng.scheduler.stats)
     if ttft:
@@ -139,7 +147,7 @@ def main(argv=None):
     p.add_argument("--prefill-mode", choices=["monolithic", "chunked"],
                    default="monolithic",
                    help="chunked = stripmined bucket-size prompt ingestion "
-                        "interleaved with decode (dense archs)")
+                        "interleaved with decode (every LM family)")
     p.add_argument("--chunk-buckets", default=None,
                    help="comma-separated chunk bucket sizes "
                         "(default 32,64,128,256,512)")

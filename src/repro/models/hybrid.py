@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.models import layers as L
 from repro.models import mamba2
+from repro.models import transformer as T
 
 RULES = L.RULES
 
@@ -55,26 +56,73 @@ def hybrid_layer_apply(p, cfg, x, extra, *, positions, rules=RULES):
     return x, jnp.zeros((), jnp.float32)
 
 
-def hybrid_layer_decode(p, cfg, x_t, cache, pos, extra, *, rules=RULES):
-    """Decode step over the {kv, mamba} cache pair.
+def hybrid_layer_decode_rows(p, cfg, x_t, cache_l, pos, extra, *,
+                             rules=RULES):
+    """Decode step against read-only {kv, mamba} per-layer views; emits
+    the attention branch's K/V rows and the SSD branch's new state for
+    the driver's single arena write (the rows/arena contract).
 
     Both branches ride the shared ``decode_and_sample`` driver: sampled
     decode stays deterministic under preemption because the attention KV
     is position-addressed and the SSD state is re-derived by the replayed
     prefill, while the draw at each position depends only on (seed,
-    position) — see mamba2.ssm_layer_decode for the recurrent-state
+    position) — see mamba2.ssm_layer_decode_rows for the recurrent-state
     half of that argument."""
     h = L.rmsnorm(p["ln1"], x_t, cfg.rms_eps)
-    a, kv_cache = L.attention_decode(p["attn"], cfg, h, cache["kv"], pos,
-                                     window=extra, rules=rules)
-    m, m_cache = mamba2.mamba_decode_step(p["mamba"], cfg, h, cache["mamba"],
-                                          rules=rules)
+    a, rows = L.attention_decode_rows(p["attn"], cfg, h, cache_l["kv"], pos,
+                                      window=extra, rules=rules)
+    m, m_state = mamba2.mamba_decode_step(p["mamba"], cfg, h,
+                                          cache_l["mamba"], rules=rules)
     mix = 0.5 * (L.rmsnorm(p["attn_norm"], a, cfg.rms_eps)
                  + L.rmsnorm(p["mamba_norm"], m, cfg.rms_eps))
     x_t = x_t + mix
     h2 = L.rmsnorm(p["ln2"], x_t, cfg.rms_eps)
     x_t = x_t + L.mlp(p["mlp"], cfg, h2, rules=rules)
-    return x_t, {"kv": kv_cache, "mamba": m_cache}
+    return x_t, {"kv": {"k": rows[0], "v": rows[1]}, "mamba": m_state}
+
+
+def hybrid_rows_scatter(cache, emits, pos):
+    """One decode step's arena write for the cache pair: K/V rows scatter
+    at each slot's ``pos`` column (parked slots drop out of bounds), SSD
+    state emissions keep-masked on ``pos`` (see mamba2.ssm_rows_scatter)."""
+    return {"kv": T.dense_rows_scatter(cache["kv"], emits["kv"], pos),
+            "mamba": mamba2.ssm_rows_scatter(cache["mamba"], emits["mamba"],
+                                             pos)}
+
+
+def hybrid_layer_chunk(p, cfg, x, cache_l, positions, start, nvalid, extra,
+                       *, rules=RULES):
+    """One prompt chunk through both branches: chunk-append attention
+    (per-layer window from the scanned schedule) over the slot's KV
+    prefix, and the SSD chunk recurrence threaded through the slot's
+    state (reset at start == 0, padding masked via ``nvalid`` — see
+    mamba2.ssm_layer_chunk)."""
+    state0, tail0 = mamba2.chunk_carry(cache_l["mamba"], start)
+    h = L.rmsnorm(p["ln1"], x, cfg.rms_eps)
+    a, rows = L.attention_chunk(p["attn"], cfg, h, cache_l["kv"], positions,
+                                start, window=extra, rules=rules)
+    m, (state, conv_tail) = mamba2.mamba_apply(
+        p["mamba"], cfg, h, rules=rules, initial_state=state0,
+        conv_tail=tail0, nvalid=nvalid, return_state=True)
+    mix = 0.5 * (L.rmsnorm(p["attn_norm"], a, cfg.rms_eps)
+                 + L.rmsnorm(p["mamba_norm"], m, cfg.rms_eps))
+    x = x + mix
+    h2 = L.rmsnorm(p["ln2"], x, cfg.rms_eps)
+    x = x + L.mlp(p["mlp"], cfg, h2, rules=rules)
+    return x, {"kv": {"k": rows[0], "v": rows[1]},
+               "mamba": {"ssm": state,
+                         "conv": conv_tail.astype(cfg.adtype)}}
+
+
+def hybrid_chunk_scatter(cache, emits, slot, start):
+    """One chunk's arena write for the cache pair: K/V chunk rows at
+    [slot, start:start+C], SSD carry at the slot's fused head rows — both
+    drop an out-of-range (parked) slot instead of clamping onto the last
+    live slot."""
+    return {"kv": T.dense_chunk_scatter(cache["kv"], emits["kv"], slot,
+                                        start),
+            "mamba": mamba2.ssm_chunk_scatter(cache["mamba"],
+                                              emits["mamba"], slot, start)}
 
 
 def init_hybrid_cache(cfg, batch: int, max_seq: int) -> dict:

@@ -20,6 +20,16 @@ from repro.kernels import ops
 
 RULES = lanes.LogicalRules()
 
+# Decode-position sentinel for a slot whose prompt is mid-chunked-prefill.
+# The serving engine parks the slot's position pointer here so in-flight
+# decode steps cannot touch the slot's freshly written rows: KV scatters at
+# PARKED_POS go out of bounds and are dropped (XLA scatter semantics), and
+# recurrent-state writes (SSD state / conv tail, which are not
+# position-addressed) mask on ``pos < PARKED_POS`` — see the families'
+# ``rows_scatter`` implementations.  Well inside int32 so ``pos + 1`` (the
+# sampling key fold, flash-decode lengths) never overflows.
+PARKED_POS: int = 1 << 30
+
 
 def _dot(x, w, adtype):
     return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(adtype)

@@ -222,20 +222,47 @@ def moe_prefill_layer(p, cfg, x, cache_l, positions, extra=None, *,
     return x + y, cache_l
 
 
-def moe_layer_decode(p, cfg, x_t, cache, pos, extra=None, *, rules=RULES):
-    """Decode step (functional cache threading via ``stack_decode``).
+def moe_layer_chunk(p, cfg, x, kv_l, positions, start, nvalid, extra=None,
+                    *, rules=RULES):
+    """One prompt chunk through an MoE layer: chunk-append attention over
+    the slot's KV prefix + the expert MLP on the chunk's tokens; emits the
+    chunk's K/V rows for the driver's single arena scatter (the cache is
+    pure KV — routing has no recurrent state to thread).
+
+    Capacity caveat: the expert capacity of a chunk is proportional to
+    the *chunk's* tokens (as monolithic prefill's is to the prompt's), so
+    chunked and monolithic prefill agree bit-for-bit exactly when
+    capacity never binds (``capacity_factor >= n_experts / top_k``
+    guarantees zero drops for any routing); under binding capacity the
+    outputs are shape-correct but may drop different tokens — the same
+    caveat as batched MoE decode vs sequential."""
+    h = L.rmsnorm(p["ln1"], x, cfg.rms_eps)
+    a, rows = L.attention_chunk(p["attn"], cfg, h, kv_l, positions, start,
+                                rules=rules)
+    x = x + a
+    h = L.rmsnorm(p["ln2"], x, cfg.rms_eps)
+    y, _ = moe_mlp_apply(p["moe"], cfg, h, rules=rules)
+    return x + y, {"k": rows[0], "v": rows[1]}
+
+
+def moe_layer_decode_rows(p, cfg, x_t, kv_l, pos, extra=None, *,
+                          rules=RULES):
+    """Decode step against a read-only layer KV view; emits the token's
+    K/V rows for the driver's single arena scatter (the rows/arena
+    contract — the old functional threading re-materialised the whole KV
+    arena every step through the layer scan's ys).
 
     Sampling caveat: the PRNG side of ``decode_and_sample`` is
     batch-composition independent for every family (keys fold only (seed,
     position)), but MoE *logits* are not — capacity dropping couples the
     slots sharing a dispatch buffer — so a sampled MoE stream is
     deterministic for a fixed slot-batch trajectory (preemption replay,
-    donation, dispatch depth) while the batch-membership-invariance claim
-    is pinned on the dense family only (same caveat as greedy MoE
-    serving)."""
+    donation, dispatch depth) while batch-membership invariance holds
+    exactly when capacity never binds (see ``moe_layer_chunk``)."""
     h = L.rmsnorm(p["ln1"], x_t, cfg.rms_eps)
-    a, cache = L.attention_decode(p["attn"], cfg, h, cache, pos, rules=rules)
+    a, rows = L.attention_decode_rows(p["attn"], cfg, h, kv_l, pos,
+                                      rules=rules)
     x_t = x_t + a
     h = L.rmsnorm(p["ln2"], x_t, cfg.rms_eps)
     y, _ = moe_mlp_apply(p["moe"], cfg, h[:, None, :], rules=rules)
-    return x_t + y[:, 0], cache
+    return x_t + y[:, 0], {"k": rows[0], "v": rows[1]}

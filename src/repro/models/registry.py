@@ -12,6 +12,7 @@ against these without ever allocating device memory.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any
 
 import jax
@@ -47,6 +48,13 @@ def config(name: str) -> ArchConfig:
 def build_model(cfg: ArchConfig, rules=None):
     """Instantiate the family driver for a config (full or reduced)."""
     kw = {} if rules is None else {"rules": rules}
+
+    def bind(fn):
+        # serving hooks take rules keyword-only: bind the model's rules
+        # (mirroring the dense adapters, which pass rules=self.rules) so a
+        # custom-rules build constrains the non-dense hot path identically
+        return functools.partial(fn, **kw) if kw else fn
+
     if cfg.family == "dense":
         return T.LM(cfg, **kw)
     if cfg.family == "vlm":
@@ -57,7 +65,10 @@ def build_model(cfg: ArchConfig, rules=None):
             layer_init=M.moe_layer_init,
             layer_apply=lambda p, c, x, extra, **k: M.moe_layer_apply(
                 p, c, x, extra, positions=k["positions"]),
-            layer_decode=M.moe_layer_decode, **kw)
+            layer_chunk=bind(M.moe_layer_chunk),
+            chunk_scatter=T.dense_chunk_scatter,
+            layer_decode_rows=bind(M.moe_layer_decode_rows),
+            rows_scatter=T.dense_rows_scatter, **kw)
         lm._prefill_layer = lambda lp, c, x, cache_l, positions, extra: \
             M.moe_prefill_layer(lp, c, x, cache_l, positions, extra,
                                 rules=lm.rules)
@@ -68,7 +79,10 @@ def build_model(cfg: ArchConfig, rules=None):
             layer_init=S.ssm_layer_init,
             layer_apply=lambda p, c, x, extra, **k: S.ssm_layer_apply(
                 p, c, x, extra),
-            layer_decode=S.ssm_layer_decode,
+            layer_chunk=bind(S.ssm_layer_chunk),
+            chunk_scatter=S.ssm_chunk_scatter,
+            layer_decode_rows=bind(S.ssm_layer_decode_rows),
+            rows_scatter=S.ssm_rows_scatter,
             init_layer_cache=S.init_ssm_cache, **kw)
         lm._prefill_layer = lambda lp, c, x, cache_l, positions, extra: \
             S.ssm_prefill_layer(lp, c, x, cache_l, positions, extra)
@@ -79,7 +93,10 @@ def build_model(cfg: ArchConfig, rules=None):
             layer_init=H.hybrid_layer_init,
             layer_apply=lambda p, c, x, extra, **k: H.hybrid_layer_apply(
                 p, c, x, extra, positions=k["positions"]),
-            layer_decode=H.hybrid_layer_decode,
+            layer_chunk=bind(H.hybrid_layer_chunk),
+            chunk_scatter=H.hybrid_chunk_scatter,
+            layer_decode_rows=bind(H.hybrid_layer_decode_rows),
+            rows_scatter=H.hybrid_rows_scatter,
             init_layer_cache=H.init_hybrid_cache,
             layer_xs_fn=H.window_schedule, **kw)
         lm._prefill_layer = lambda lp, c, x, cache_l, positions, extra: \

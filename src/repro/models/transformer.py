@@ -3,8 +3,10 @@
 The layer stack is a single ``lax.scan`` over stacked per-layer parameters
 (one compiled layer body regardless of depth — the strip-mining principle
 applied to the *layer* axis), with a configurable remat policy.  Families
-(dense/moe/ssm/hybrid) plug in their own ``layer_init`` / ``layer_apply`` /
-``layer_decode``; the drivers (``loss_fn``, ``prefill``, ``decode_step``)
+(dense/moe/ssm/hybrid) plug in their own ``layer_init`` / ``layer_apply``
+plus the four serving hooks (``layer_chunk`` / ``chunk_scatter`` /
+``layer_decode_rows`` / ``rows_scatter`` — see the LM class docstring);
+the drivers (``loss_fn``, ``prefill``, ``prefill_chunk``, ``decode_step``)
 are shared by every LM-family architecture.
 """
 from __future__ import annotations
@@ -97,14 +99,56 @@ def dense_layer_decode_rows(p, cfg, x_t, layer_kv, pos, *, window=None,
     return x_t, rows
 
 
-def dense_layer_decode(p, cfg, x_t, cache, pos, *, window=None, rules=RULES):
-    h = L.rmsnorm(p["ln1"], x_t, cfg.rms_eps)
-    a, cache = L.attention_decode(p["attn"], cfg, h, cache, pos,
-                                  window=window, rules=rules)
-    x_t = x_t + a
-    h = L.rmsnorm(p["ln2"], x_t, cfg.rms_eps)
-    x_t = x_t + L.mlp(p["mlp"], cfg, h, rules=rules)
-    return x_t, cache
+def _dense_layer_chunk_emit(p, cfg, x, kv_l, positions, start, *,
+                            window=None, rules=RULES):
+    """Hook adapter: dense chunk layer -> {"k","v"} chunk-row emission."""
+    x, rows = dense_layer_chunk(p, cfg, x, kv_l, positions, start,
+                                window=window, rules=rules)
+    return x, {"k": rows[0], "v": rows[1]}
+
+
+def _dense_layer_decode_emit(p, cfg, x_t, kv_l, pos, *, window=None,
+                             rules=RULES):
+    """Hook adapter: dense decode layer -> {"k","v"} row emission."""
+    x_t, rows = dense_layer_decode_rows(p, cfg, x_t, kv_l, pos,
+                                        window=window, rules=rules)
+    return x_t, {"k": rows[0], "v": rows[1]}
+
+
+def dense_chunk_scatter(cache, emits, slot, start):
+    """Write one chunk's K/V rows into slot ``slot`` of the arena.
+
+    ``emits``: the layer scan's ys — {"k","v"} of (L, 1, C, KVH, hd).  The
+    write is a single scatter per leaf at rows [start, start + C) of the
+    slot, which lowers in place under buffer donation.  Scatter (not
+    ``dynamic_update_slice``) deliberately: an out-of-range ``slot`` (a
+    parked/sentinel index ≥ the slot count) is *dropped* by XLA scatter
+    semantics, where dynamic_update_slice would clamp it onto the last
+    live slot's rows and corrupt them.
+    """
+    c = emits["k"].shape[2]
+    idx = start + jnp.arange(c)
+    return {"k": cache["k"].at[:, slot, idx].set(
+                emits["k"][:, 0].astype(cache["k"].dtype)),
+            "v": cache["v"].at[:, slot, idx].set(
+                emits["v"][:, 0].astype(cache["v"].dtype))}
+
+
+def dense_rows_scatter(cache, emits, pos):
+    """Scatter one decode step's K/V rows — ``emits`` {"k","v"} of
+    (L, B, KVH, hd) — into each slot's ``pos`` column: the arena's only
+    write this step (in place under donation).  A parked slot
+    (pos = PARKED_POS, mid-chunked-prefill) scatters out of bounds and is
+    dropped."""
+    k_rows, v_rows = emits["k"], emits["v"]
+    nl, b = k_rows.shape[:2]
+    li = jnp.broadcast_to(jnp.arange(nl)[:, None], (nl, b))
+    bi = jnp.broadcast_to(jnp.arange(b)[None, :], (nl, b))
+    pi = jnp.broadcast_to(pos[None, :], (nl, b))
+    return {"k": cache["k"].at[li, bi, pi].set(
+                k_rows.astype(cache["k"].dtype)),
+            "v": cache["v"].at[li, bi, pi].set(
+                v_rows.astype(cache["v"].dtype))}
 
 
 def attention_prefill(p_attn, cfg, h, cache_kv, positions, *, window=None,
@@ -164,55 +208,81 @@ def stack_forward(stacked, cfg, x, *, layer_apply: Callable,
     return x, aux
 
 
-def stack_decode(stacked, cfg, x_t, caches, pos, *, layer_decode: Callable,
-                 layer_xs: Any = None):
-    """scan decode step over layers, threading per-layer caches."""
-
-    def block(x_t, inp):
-        if layer_xs is None:
-            (lp, cache), extra = inp, None
-        else:
-            lp, cache, extra = inp
-        x_t, cache = layer_decode(lp, cfg, x_t, cache, pos, extra)
-        return x_t, cache
-
-    xs = (stacked, caches) if layer_xs is None else (stacked, caches, layer_xs)
-    x_t, new_caches = lax.scan(block, x_t, xs)
-    return x_t, new_caches
-
-
 # ---------------------------------------------------------------------------
-# LM drivers (shared by dense / moe / hybrid; ssm & encdec override parts)
+# LM drivers (shared by dense / moe / ssm / hybrid; encdec overrides parts)
 # ---------------------------------------------------------------------------
 
 class LM:
     """A decoder-only LM family: init/loss/prefill/decode built from a
-    layer implementation."""
+    layer implementation.
+
+    The serving hot path is family-pluggable through four hooks that share
+    one contract — *the arena never rides the layer scan* (XLA's while-loop
+    copy insertion would clone it every layer); the scan reads per-layer
+    cache views and emits only what changed, and the driver writes the
+    resident arena exactly once per call:
+
+      * ``layer_chunk(lp, cfg, x, view_l, positions, start, nvalid, extra)``
+        — one prompt chunk through one layer against a read-only slot view;
+        returns ``(x, emit_l)`` where ``emit_l`` is the layer's chunk
+        emission (K/V rows for attention caches, the threaded recurrent
+        state for SSD caches).
+      * ``chunk_scatter(cache, emits, slot, start)`` — write all layers'
+        chunk emissions into slot ``slot`` of the arena (one scatter per
+        leaf, in place under donation).
+      * ``layer_decode_rows(lp, cfg, x_t, view_l, pos, extra)`` — one
+        decode step against a read-only per-layer cache view; returns
+        ``(x_t, emit_l)`` (the token's K/V rows / the layer's new state).
+      * ``rows_scatter(cache, emits, pos)`` — write all layers' decode
+        emissions into the arena at ``pos`` (parked slots —
+        ``pos == layers.PARKED_POS`` — must be left untouched).
+
+    Dense KV caches get the default implementations; moe/ssm/hybrid plug
+    in their own (see the family modules + models/registry.py).
+    """
 
     def __init__(self, cfg, *, layer_init=dense_layer_init,
-                 layer_apply=None, layer_decode=None,
-                 init_layer_cache=None, layer_xs_fn=None, rules=RULES):
+                 layer_apply=None, init_layer_cache=None, layer_xs_fn=None,
+                 layer_chunk=None, chunk_scatter=None,
+                 layer_decode_rows=None, rows_scatter=None, rules=RULES):
         self.cfg = cfg
         self.rules = rules
         self._layer_init = layer_init
         self._layer_apply = layer_apply or (
             lambda p, c, x, extra, **kw: dense_layer_apply(
                 p, c, x, positions=kw["positions"], rules=self.rules))
-        self._layer_decode = layer_decode
         self._init_layer_cache = init_layer_cache or (
             lambda cfg, batch, max_seq: L.init_kv_cache(cfg, batch, max_seq))
         # per-layer static side inputs (e.g. hymba window schedule): (L,) arrays
         self._layer_xs_fn = layer_xs_fn
-        # chunked prefill needs a pure-KV cache + the dense chunk layer;
-        # custom-layer families (moe/ssm/hybrid) fall back to monolithic
-        # prefill until they grow their own chunk path
-        self.supports_chunked_prefill = layer_init is dense_layer_init
-        # dense KV caches also take the arena decode path (per-layer K/V
-        # rows scattered once into the resident arena — see decode_step);
-        # only that structure profits from buffer donation, so the serving
-        # engine's auto-donation keys off this flag
-        self.inplace_arena_decode = (self.supports_chunked_prefill
-                                     and layer_decode is None)
+        # serving hooks: dense defaults for pure-KV caches (``extra`` is the
+        # per-layer window where a schedule exists, None otherwise)
+        if layer_init is dense_layer_init and layer_chunk is None:
+            layer_chunk = (
+                lambda lp, c, x, kv_l, positions, start, nvalid, extra:
+                    _dense_layer_chunk_emit(lp, c, x, kv_l, positions, start,
+                                            window=extra, rules=self.rules))
+            chunk_scatter = dense_chunk_scatter
+        if layer_init is dense_layer_init and layer_decode_rows is None:
+            layer_decode_rows = (
+                lambda lp, c, x_t, kv_l, pos, extra:
+                    _dense_layer_decode_emit(lp, c, x_t, kv_l, pos,
+                                             window=extra, rules=self.rules))
+            rows_scatter = dense_rows_scatter
+        self._layer_chunk = layer_chunk
+        self._chunk_scatter = chunk_scatter
+        self._layer_decode_rows = layer_decode_rows
+        self._rows_scatter = rows_scatter
+        # per-family serving capabilities: chunked (stripmined) prefill and
+        # the in-place arena decode path.  Every LM family provides both
+        # (dense/moe KV rows, ssm state threading, hybrid's pair) — the
+        # flags stay because the serving engine's chunk scheduler and
+        # auto-donation policy key off them, and non-LM drivers (encdec)
+        # may lack the hooks.
+        self.supports_chunked_prefill = (self._layer_chunk is not None
+                                         and self._chunk_scatter is not None)
+        self.inplace_arena_decode = (self._layer_decode_rows is not None
+                                     and self._rows_scatter is not None)
 
     # -- params ------------------------------------------------------------
     def init(self, key) -> dict:
@@ -308,41 +378,74 @@ class LM:
         logits = lanes.constrain(logits, self.rules, "batch", "vocab_tp")
         return logits, new_cache
 
-    @staticmethod
-    def _slot_view(cache, slot):
+    def _cache_factors(self):
+        """Per-leaf batch factor of the family cache pytree (leaf dim 1 is
+        batch × factor: 1 for KV/conv leaves, n_heads for fused SSD state).
+        Read off an abstract batch=1 layer cache; memoised per model."""
+        factors = self.__dict__.get("_cache_factors_memo")
+        if factors is None:
+            one = jax.eval_shape(
+                lambda: self._init_layer_cache(self.cfg, 1, 8))
+            factors = jax.tree.map(lambda leaf: leaf.shape[0], one)
+            self._cache_factors_memo = factors
+        return factors
+
+    def _slot_view(self, cache, slot):
         """Read-only view of one slot's rows across all layers: leaf
-        (L, B·f, ...) -> (L, f, ...) at batch index ``slot`` (traced).
-        Dense caches have factor 1, so this is leaf[:, slot:slot+1]."""
-        def view(leaf):
+        (L, nslots·f, ...) -> (L, f, ...) at slot index ``slot`` (traced),
+        with the per-leaf batch factor f applied (dense KV leaves have
+        f = 1, fused SSD state leaves f = n_heads).
+
+        The slot index is clamped *explicitly* to the live slot range:
+        ``dynamic_slice`` would silently clamp an out-of-range start the
+        same way, but the write side (``chunk_scatter``) uses drop-on-OOB
+        scatters, and relying on two different OOB behaviours for the same
+        sentinel invites exactly the aliasing bug this guards against — a
+        parked slot index (≥ nslots) must never *write* the last live
+        slot's rows; the clamped read is harmless (its output is
+        discarded along with the dropped write)."""
+        factors = self._cache_factors()
+
+        def view(leaf, f):
+            nslots = leaf.shape[1] // f
+            s = jnp.minimum(slot, nslots - 1) * f
             return lax.dynamic_slice(
-                leaf, (0, slot) + (0,) * (leaf.ndim - 2),
-                (leaf.shape[0], 1) + leaf.shape[2:])
-        return jax.tree.map(view, cache)
+                leaf, (0, s) + (0,) * (leaf.ndim - 2),
+                (leaf.shape[0], f) + leaf.shape[2:])
+        return jax.tree.map(view, cache, factors)
 
     def prefill_chunk(self, params, tokens, cache, slot, start, last_idx):
         """Stripmined prefill: ingest one prompt chunk straight into slot
         ``slot`` of the resident cache arena.
 
         tokens: (B=1, C) — one bucket-sized chunk (the final chunk may
-        carry right-padding; pad rows land beyond the prompt and are
-        overwritten by decode before ever being attended).  ``cache`` is
-        the *full* slot arena (every leaf (L, max_slots, Smax, ...));
-        ``slot`` selects the row being ingested.  ``start``: scalar int32
-        — the slot's rows [0, start) are already live; this chunk occupies
-        rows [start, start + C).  ``last_idx``: scalar int32 index of the
-        prompt's final token *within this chunk* (only meaningful on the
-        last chunk; earlier chunks' logits are discarded by the caller).
-        Returns (logits (B, V), new_cache).
+        carry right-padding; pad K/V rows land beyond the prompt and are
+        overwritten by decode before ever being attended, and recurrent
+        families mask pad positions out of their state recurrence).
+        ``cache`` is the *full* slot arena (attention leaves
+        (L, max_slots, Smax, ...), fused SSD state leaves
+        (L, max_slots·nh, N, P)); ``slot`` selects the row being ingested.
+        ``start``: scalar int32 — the slot's rows [0, start) are already
+        live; this chunk occupies rows [start, start + C).  ``last_idx``:
+        scalar int32 index of the chunk's final *real* (non-pad) token —
+        C - 1 on every chunk except the last, where padding may pull it
+        forward; recurrent-state families thread ``nvalid = last_idx + 1``
+        through the layer hook so pad tokens never perturb the carried
+        state, and the final chunk's logits are read at ``last_idx``
+        (earlier chunks' logits are discarded by the caller).  Returns
+        (logits (B, V), new_cache).
 
-        Zero-copy discipline: the layer scan reads the slot's prefix rows
-        through one dynamic-slice view and emits only the chunk's K/V rows
-        (its ``ys``); the arena is written exactly once, after the scan,
-        with a chunk-rows dynamic-update-slice per leaf.  Under buffer
-        donation that update lowers in place, so the bytes copied per
-        chunk are O(chunk rows) — not O(slot) (the old extract/insert
-        round-trip) and not O(arena) (the old functional splice).  The
-        arena never enters the scan carry: XLA's while-loop copy insertion
-        would otherwise clone it every layer.  ``slot``, ``start`` and
+        Zero-copy discipline: the layer scan reads the slot through one
+        dynamic-slice view (``_slot_view``) and emits only what the chunk
+        changed (K/V rows; for SSD layers the threaded (nh, N, P) state +
+        conv tail — the chunk recurrence's carry-out); the arena is
+        written exactly once, after the scan, by the family's
+        ``chunk_scatter``.  Under buffer donation that write lowers in
+        place, so the bytes copied per chunk are O(chunk rows) for
+        attention caches and O(slot state) for recurrent ones — never
+        O(arena), and independent of the slot count.  The arena never
+        enters the scan carry: XLA's while-loop copy insertion would
+        otherwise clone it every layer.  ``slot``, ``start`` and
         ``last_idx`` are all traced, so one compiled entry serves every
         chunk of every prompt — compile count is bounded by the bucket set.
         """
@@ -354,32 +457,25 @@ class LM:
         b, c = tokens.shape
         x = L.embed_lookup(params["embed"], tokens, self.rules)
         positions = jnp.broadcast_to(start + jnp.arange(c), (b, c))
+        nvalid = last_idx + 1
         layer_xs = self._layer_xs_fn(cfg) if self._layer_xs_fn else None
-        slot_kv = self._slot_view(cache, slot)
+        slot_view = self._slot_view(cache, slot)
 
         def block(carry, inp):
             x = carry
             if layer_xs is None:
-                lp, kv_l = inp
+                lp, view_l = inp
                 extra = None
             else:
-                lp, kv_l, extra = inp
-            x, rows = dense_layer_chunk(
-                lp, cfg, x, kv_l, positions, start,
-                window=self._extra_window(extra), rules=self.rules)
-            return x, rows
+                lp, view_l, extra = inp
+            x, emit = self._layer_chunk(lp, cfg, x, view_l, positions,
+                                        start, nvalid, extra)
+            return x, emit
 
-        xs = (params["layers"], slot_kv) if layer_xs is None \
-            else (params["layers"], slot_kv, layer_xs)
-        x, (k_rows, v_rows) = lax.scan(block, x, xs)
-        # single in-place arena splice: (L, 1, C, KVH, hd) chunk rows at
-        # (layer 0, slot, start) — the only write the arena sees per chunk
-        new_cache = {
-            "k": lax.dynamic_update_slice(cache["k"], k_rows,
-                                          (0, slot, start, 0, 0)),
-            "v": lax.dynamic_update_slice(cache["v"], v_rows,
-                                          (0, slot, start, 0, 0)),
-        }
+        xs = (params["layers"], slot_view) if layer_xs is None \
+            else (params["layers"], slot_view, layer_xs)
+        x, emits = lax.scan(block, x, xs)
+        new_cache = self._chunk_scatter(cache, emits, slot, start)
         h = L.rmsnorm(params["final_norm"], x, cfg.rms_eps)
         last = lax.dynamic_slice_in_dim(h, last_idx, 1, axis=1)[:, 0]
         logits = jnp.dot(last, self.head(params),
@@ -406,35 +502,19 @@ class LM:
         """token_t: (B,) int32; pos: (B,) position to write. Returns
         (logits (B,V), new_cache).
 
-        Dense-family KV caches take the arena path: the layer scan reads
-        each layer's cache slice and emits only the new token's K/V rows;
-        the arena is written once, after the scan, by a single scatter at
-        (layer, batch, pos) — an in-place dynamic-update-slice under
-        buffer donation, never a re-materialised arena.  Families with
-        custom caches (SSD states, hybrid trees) keep the generic
-        functional threading of :func:`stack_decode`.
+        Every LM family takes the arena path: the layer scan reads each
+        layer's cache slice and emits only what the token changed (K/V
+        rows for attention caches, the layer's new recurrent state for SSD
+        caches); the arena is written once, after the scan, by the
+        family's ``rows_scatter`` — in place under buffer donation, never
+        a re-materialised arena riding the scan carry.
         """
         cfg = self.cfg
         x_t = L.embed_lookup(params["embed"], token_t[:, None],
                              self.rules)[:, 0]
         layer_xs = self._layer_xs_fn(cfg) if self._layer_xs_fn else None
-        if self.inplace_arena_decode:
-            x_t, new_cache = self._decode_rows(params, cfg, x_t, cache, pos,
-                                               layer_xs)
-        else:
-            decode = self._layer_decode or (
-                lambda p, c, x, cache_l, pos_, extra: dense_layer_decode(
-                    p, c, x, cache_l, pos_, window=self._extra_window(extra),
-                    rules=self.rules))
-
-            def ld(p, c, x, cache_l, pos_, extra=None):
-                return decode(p, c, x, cache_l, pos_, extra)
-
-            x_t, new_cache = stack_decode(
-                params["layers"], cfg, x_t, cache, pos,
-                layer_decode=lambda lp, c, x, cache_l, pos_, extra=None:
-                    ld(lp, c, x, cache_l, pos_, extra),
-                layer_xs=layer_xs)
+        x_t, new_cache = self._decode_rows(params, cfg, x_t, cache, pos,
+                                           layer_xs)
         h = L.rmsnorm(params["final_norm"], x_t, cfg.rms_eps)
         logits = jnp.dot(h, self.head(params),
                          preferred_element_type=jnp.float32)
@@ -443,8 +523,9 @@ class LM:
 
     def decode_and_sample(self, params, token_t, cache, pos, samp):
         """One decode step + on-device sampling: the serving engine's
-        compiled step body, shared by every LM family (dense arena path
-        and functional ``stack_decode`` families alike).
+        compiled step body, shared by every LM family (all on the
+        rows/arena decode path via their ``layer_decode_rows`` /
+        ``rows_scatter`` hooks).
 
         ``samp``: the engine's per-slot sampling vectors — ``{"temp",
         "top_p", "min_p"}`` (B,) f32 and ``{"top_k", "seed"}`` (B,) i32.
@@ -462,29 +543,19 @@ class LM:
         return tok, new_cache
 
     def _decode_rows(self, params, cfg, x_t, cache, pos, layer_xs):
-        """Dense arena decode: scan layers collecting K/V rows, then one
-        in-place scatter of all (L·B) rows into the resident arena."""
-        b = x_t.shape[0]
+        """Arena decode: scan layers collecting per-layer emissions (K/V
+        rows / new recurrent state), then one in-place write of everything
+        into the resident arena via the family's ``rows_scatter``."""
 
         def block(x_t, inp):
             if layer_xs is None:
-                lp, kv_l = inp
+                lp, cache_l = inp
                 extra = None
             else:
-                lp, kv_l, extra = inp
-            return dense_layer_decode_rows(
-                lp, cfg, x_t, kv_l, pos,
-                window=self._extra_window(extra), rules=self.rules)
+                lp, cache_l, extra = inp
+            return self._layer_decode_rows(lp, cfg, x_t, cache_l, pos, extra)
 
         xs = (params["layers"], cache) if layer_xs is None \
             else (params["layers"], cache, layer_xs)
-        x_t, (k_rows, v_rows) = lax.scan(block, x_t, xs)
-        # k_rows/v_rows: (L, B, KVH, hd) — scatter each layer's row into
-        # its slot's ``pos`` column, the arena's only write this step
-        nl = k_rows.shape[0]
-        li = jnp.broadcast_to(jnp.arange(nl)[:, None], (nl, b))
-        bi = jnp.broadcast_to(jnp.arange(b)[None, :], (nl, b))
-        pi = jnp.broadcast_to(pos[None, :], (nl, b))
-        new_cache = {"k": cache["k"].at[li, bi, pi].set(k_rows),
-                     "v": cache["v"].at[li, bi, pi].set(v_rows)}
-        return x_t, new_cache
+        x_t, emits = lax.scan(block, x_t, xs)
+        return x_t, self._rows_scatter(cache, emits, pos)

@@ -48,6 +48,18 @@ def chunk_plan(prompt_len: int, buckets=DEFAULT_BUCKETS) -> list[int]:
             rem -= b
     if rem:
         plan.append(bs[0])
+    # boundary invariant: a prompt landing exactly on a bucket cover must
+    # not emit an all-pad trailing chunk — every chunk ingests >= 1 real
+    # token, so the engine never spends a compile + a scheduler step on a
+    # zero-length tail (``>=`` above, not ``>``: rem == b consumes the
+    # bucket instead of falling through to the pad branch).  An explicit
+    # raise — not assert: it survives ``python -O`` and keeps this
+    # module's ValueError contract on the submit path — pinned by the
+    # boundary-length cases in tests/test_chunked_prefill.py.
+    if not (sum(plan[:-1]) < prompt_len <= sum(plan)):
+        raise ValueError(
+            f"chunk_plan invariant violated: prompt_len={prompt_len}, "
+            f"buckets={bs} -> {plan} (all-pad trailing chunk)")
     return plan
 
 

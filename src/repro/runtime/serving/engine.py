@@ -62,12 +62,16 @@ never pays the sampling transform at all.
 
 Dead slots keep decoding garbage tokens; correctness holds because (a)
 flash-decode tail predication hides rows ≥ the slot's live length, (b)
-prefill overwrites rows [0, prefill_len), and (c) a frozen slot's position
-pointer stops advancing (pos += active).  A slot undergoing *chunked*
-prefill additionally parks its position pointer at ``max_seq``: the decode
-step's KV scatter for that row goes out of bounds and is dropped (XLA
-scatter semantics), so in-flight decode steps can never corrupt prompt rows
-already written by earlier chunks.
+prefill overwrites rows [0, prefill_len) — and a recurrent (SSD) state is
+explicitly re-zeroed by the first chunk / overwritten by the monolithic
+splice, and (c) a frozen slot's position pointer stops advancing
+(pos += active).  A slot undergoing *chunked* prefill additionally parks
+its position pointer at the ``PARKED_POS`` sentinel: the decode step's KV
+scatter for that row goes out of bounds and is dropped (XLA scatter
+semantics), and recurrent-state writes are keep-masked on
+``pos < PARKED_POS`` (SSD state is not position-addressed, so the drop
+must be explicit) — in-flight decode steps can never corrupt prompt rows
+or chunk-threaded state already written by earlier chunks.
 """
 from __future__ import annotations
 
@@ -83,6 +87,7 @@ import numpy as np
 
 from repro.core import masking
 from repro.core.dispatch import DispatchQueue
+from repro.models.layers import PARKED_POS
 from repro.runtime.serving import chunking, sampling
 from repro.runtime.serving.cache import PagedKVCacheManager, cache_insert
 from repro.runtime.serving.request import Request, RequestState, Status
@@ -240,8 +245,10 @@ class ServingEngine:
 
     ``prefill_chunks``: ``None`` for monolithic prefill, or a tuple of
     bucket sizes (e.g. ``chunking.DEFAULT_BUCKETS``) to enable stripmined
-    chunked prefill (dense-family models only; see ``model.
-    supports_chunked_prefill``).  ``prefill_budget`` caps how many prompt
+    chunked prefill (every LM family — dense/MoE K/V rows, SSM/hybrid
+    thread the SSD chunk recurrence through the slot's arena state; see
+    ``model.supports_chunked_prefill``).  ``prefill_budget`` caps how many
+    prompt
     tokens are ingested per engine step (default: the largest bucket) —
     the knob trading prefill throughput against decode-batch stall time.
 
@@ -310,11 +317,11 @@ class ServingEngine:
         # donation policy: "auto" donates the arena once it is big enough
         # for in-place reuse to beat the runtime's fixed per-call ownership
         # bookkeeping (DONATE_MIN_BYTES) — and only for models whose decode
-        # takes the arena path (per-row in-place writes); families that
-        # still thread caches functionally through the layer scan gain
-        # nothing from donation and pay XLA's loop-copy insertion for it.
-        # True/False force the choice.  The structural zero-copy paths are
-        # active regardless.
+        # takes the arena path (per-row in-place writes / state keep-masks).
+        # Every LM family (dense/moe/ssm/hybrid/vlm) does since the
+        # rows/arena port; the flag guards non-LM drivers that still thread
+        # caches functionally.  True/False force the choice.  The
+        # structural zero-copy paths are active regardless.
         if donate == "auto":
             donate = (self.arena_bytes >= DONATE_MIN_BYTES
                       and getattr(model, "inplace_arena_decode", False))
@@ -400,11 +407,14 @@ class ServingEngine:
                 # before we got to prefill it — it's back in the wait queue
                 continue
             if st.status == Status.PREFILLING:
-                # chunked: park the slot's position pointer out of bounds so
-                # in-flight decode steps' KV scatters for this row are
-                # dropped instead of landing on freshly-written prompt rows
+                # chunked: park the slot's position pointer at the sentinel
+                # so in-flight decode steps cannot touch the slot — KV
+                # scatters for the row go out of bounds and are dropped,
+                # and recurrent-state writes (SSD state is not
+                # position-addressed) mask on pos < PARKED_POS inside the
+                # family's rows_scatter
                 self._pos = _park_slot_jit(self._pos, jnp.int32(st.slot),
-                                           jnp.int32(self.max_seq))
+                                           jnp.int32(PARKED_POS))
                 continue
             if st.status != Status.RUNNING:
                 continue
@@ -517,7 +527,11 @@ class ServingEngine:
         real = min(size, plen - start)
         chunk[:real] = req.prompt[start:start + real]
         is_last = st.chunk_idx == len(st.chunk_plan) - 1
-        last_idx = plen - start - 1 if is_last else 0
+        # index of the chunk's last *real* token: size - 1 except on a
+        # padded final chunk.  Recurrent families read it as the chunk's
+        # valid length (pad positions are masked out of the SSD state
+        # recurrence); the final chunk's logits are taken there.
+        last_idx = real - 1
         logits, self._cache = self._chunk_fn(
             self.params, self._cache, jnp.asarray(chunk)[None, :],
             jnp.int32(st.slot), jnp.int32(start), jnp.int32(last_idx))

@@ -33,6 +33,37 @@ def rng_key():
     return jax.random.PRNGKey(0)
 
 
+# ---------------------------------------------------------------------------
+# tiny non-dense family configs, shared by the serving-path suites
+# (test_chunked_prefill / test_zero_copy).  One source of truth —
+# configs.base.tiny_family_configs — also feeds bench_serving's family
+# claims, so the pinned regime (notably MoE's never-binding
+# capacity_factor) cannot drift between tests and bench.
+# ---------------------------------------------------------------------------
+
+FAMILY_CFGS = None      # populated lazily so conftest import stays free of
+                        # repro imports (collection works without PYTHONPATH)
+
+
+def family_cfgs():
+    global FAMILY_CFGS
+    if FAMILY_CFGS is None:
+        from repro.configs.base import tiny_family_configs
+        FAMILY_CFGS = tiny_family_configs()
+    return FAMILY_CFGS
+
+
+@pytest.fixture(scope="module", params=("hybrid", "moe", "ssm"))
+def family_model(request):
+    """(cfg, model, params) per non-dense family — module-scoped so each
+    suite reuses one initialised model per family."""
+    from repro.models import registry
+    cfg = family_cfgs()[request.param]
+    model = registry.build_model(cfg)
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
 @pytest.fixture
 def run8():
     """Run a test script in a subprocess with 8 fake CPU devices."""

@@ -43,6 +43,37 @@ def test_chunk_plan_rejects_bad_input():
         chunk_plan(8, ())
 
 
+@pytest.mark.parametrize("plen", [8, 16, 24, 32, 40, 48, 56, 64])
+def test_chunk_plan_boundary_lengths_have_no_allpad_chunk(plen):
+    """A prompt landing exactly on a bucket cover must not emit a
+    zero-length (all-pad) trailing chunk: each chunk costs a compile-cache
+    entry + a scheduler step, so every chunk must ingest >= 1 real token.
+    (The off-by-one regression guard: ``rem >= b`` consumes an exactly-
+    fitting bucket instead of falling through to the pad branch.)"""
+    buckets = (8, 16, 32)
+    plan = chunk_plan(plen, buckets)
+    assert all(c > 0 for c in plan)
+    # the final chunk holds at least one real token — never pure padding
+    assert sum(plan[:-1]) < plen <= sum(plan)
+    if plen % min(buckets) == 0:            # exact cover: zero padding
+        assert sum(plan) == plen
+
+
+def test_chunk_plan_boundary_engine_runs_one_chunk_per_bucket(tiny_model):
+    """Engine-level boundary case: a prompt exactly equal to a bucket is
+    ingested in exactly one chunk (no wasted all-pad step)."""
+    model, params = tiny_model
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, TINY.vocab, 8).astype(np.int32)   # == bucket
+    want = _reference(model, params, prompt, 4)
+    eng = ServingEngine(model, TINY, params, max_slots=2, max_seq=64,
+                        prefill_chunks=(4, 8))
+    eng.submit(Request(uid="b", prompt=prompt, max_new_tokens=4))
+    out = eng.run(max_steps=200)
+    np.testing.assert_array_equal(out["b"], want)
+    assert eng.stats["prefill_chunks"] == 1
+
+
 # ---------------------------------------------------------------------------
 # chunk-append attention vs naive oracle (dynamic causal boundary)
 # ---------------------------------------------------------------------------
@@ -200,20 +231,121 @@ def test_prefill_chunk_matches_monolithic(tiny_model):
             before[leaf][:, slot, start:])
 
 
-def test_prefill_chunk_unsupported_families_raise(tiny_model):
-    from repro.configs.base import SSMConfig
-    ssm_cfg = ArchConfig(name="tiny-ssm", family="ssm", n_layers=2,
-                         d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
-                         vocab=97, ssm=SSMConfig(d_state=8, headdim=8,
-                                                 chunk=16),
-                         param_dtype="float32", act_dtype="float32",
-                         subquadratic=True, max_seq=64)
-    model = registry.build_model(ssm_cfg)
-    assert not model.supports_chunked_prefill
-    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+# ---------------------------------------------------------------------------
+# per-family chunked prefill: MoE / SSM / hybrid on the rows/arena contract
+# (tiny family configs + the module-scoped ``family_model`` fixture live in
+# conftest.py, shared with test_zero_copy so the pinned regime — notably
+# MoE's never-binding capacity_factor — cannot drift between suites)
+# ---------------------------------------------------------------------------
+
+def test_every_lm_family_supports_chunked_prefill(family_model):
+    """The dense-only gates are gone: every family exposes the chunk path
+    and the in-place arena decode path (the engine's donation/scheduler
+    capabilities key off these flags)."""
+    cfg, model, _ = family_model
+    assert model.supports_chunked_prefill
+    assert model.inplace_arena_decode
+
+
+def test_engine_still_rejects_models_without_chunk_support(tiny_model):
+    """A driver without the chunk hooks (non-LM families) must be refused
+    chunked mode up front, not fail inside a traced call."""
+    model, params = tiny_model
+
+    class NoChunk:
+        supports_chunked_prefill = False
+        inplace_arena_decode = False
+
+        def __getattr__(self, name):        # delegate everything else
+            return getattr(model, name)
+
     with pytest.raises(ValueError, match="chunked"):
-        ServingEngine(model, ssm_cfg, params, max_slots=2, max_seq=64,
+        ServingEngine(NoChunk(), TINY, params, max_slots=2, max_seq=64,
                       prefill_chunks=(8, 16))
+
+
+def test_family_prefill_chunk_matches_monolithic(family_model):
+    """Chunked ingestion (recurrent-state threading across chunks, padded
+    final chunk masked out of the recurrence) reproduces monolithic
+    prefill's last-token logits and leaves every other slot's arena state
+    untouched — the dense equivalence, per family."""
+    cfg, model, params = family_model
+    rng = np.random.default_rng(3)
+    plen, max_seq, slots, slot = 21, 40, 3, 1
+    prompt = rng.integers(0, cfg.vocab, plen).astype(np.int32)
+
+    cache_m = model.init_cache(1, max_seq)
+    logits_m, cache_m = jax.jit(model.prefill)(
+        params, jnp.asarray(prompt)[None], cache_m)
+
+    cache_c = model.init_cache(slots, max_seq)
+    before = jax.tree.map(np.asarray, cache_c)
+    chunk_fn = jax.jit(model.prefill_chunk)
+    start = 0
+    for size in chunk_plan(plen, (4, 8)):
+        chunk = np.zeros((size,), np.int32)
+        real = min(size, plen - start)
+        chunk[:real] = prompt[start:start + real]
+        logits_c, cache_c = chunk_fn(params, jnp.asarray(chunk)[None],
+                                     cache_c, jnp.int32(slot),
+                                     jnp.int32(start), jnp.int32(real - 1))
+        start += size
+    np.testing.assert_allclose(np.asarray(logits_c), np.asarray(logits_m),
+                               atol=1e-4, rtol=1e-4)
+    # other slots' rows/state bit-untouched (slot-local writes); the fused
+    # SSD leaves carry a per-slot factor f = dim1 // slots
+    after = jax.tree.map(np.asarray, cache_c)
+
+    def check_leaf(b, a):
+        f = b.shape[1] // slots
+        others = [i for s in range(slots) if s != slot
+                  for i in range(s * f, (s + 1) * f)]
+        np.testing.assert_array_equal(a[:, others], b[:, others])
+
+    jax.tree.map(check_leaf, before, after)
+
+
+@pytest.mark.parametrize("depth", [0, 2])
+def test_family_engine_chunked_matches_sequential(family_model, depth):
+    """Chunked prefill interleaved with decode, slots < requests, mixed
+    prompt lengths -> token-exact vs sequential monolithic generation for
+    MoE (capacity unbound), SSM and hybrid."""
+    cfg, model, params = family_model
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32)
+               for n in (5, 9, 7, 12)]
+    gens = [8, 6, 10, 7]
+    want = [_reference(model, params, p, g) for p, g in zip(prompts, gens)]
+    eng = ServingEngine(model, cfg, params, max_slots=2, max_seq=64,
+                        depth=depth, prefill_chunks=(4, 8))
+    for i, (p, g) in enumerate(zip(prompts, gens)):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=g))
+    out = eng.run(max_steps=500)
+    for i in range(4):
+        np.testing.assert_array_equal(out[i], want[i])
+    assert eng.stats["prefills"] == 0           # no monolithic calls
+    assert eng.stats["prefill_compiles"] <= 2   # |{4, 8}|
+
+
+def test_family_engine_chunked_preemption_recompute_is_exact(family_model):
+    """Undersized page pool + chunked prefill per family: eviction
+    (possibly mid-prefill, discarding chunk-threaded recurrent state)
+    rewinds the chunk cursor; the replay re-derives the state and the
+    tokens exactly."""
+    cfg, model, params = family_model
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32)
+               for n in (10, 12, 11)]
+    want = [_reference(model, params, p, 14) for p in prompts]
+    eng = ServingEngine(model, cfg, params, max_slots=3, max_seq=64,
+                        depth=2, page_size=4, num_pages=8,
+                        prefill_chunks=(4, 8))
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=14))
+    out = eng.run(max_steps=2000)
+    for i in range(3):
+        np.testing.assert_array_equal(out[i], want[i])
+    assert eng.scheduler.stats["preempted"] > 0
 
 
 # ---------------------------------------------------------------------------
@@ -441,6 +573,32 @@ def test_engine_chunked_oldest_not_starved_by_fresh_arrivals(tiny_model):
     # absolute last to finish prefill behind all 6 shorts' admissions
     assert eng.stats["ttft_s"]["long"] < max(
         eng.stats["ttft_s"][i] for i in range(6))
+
+
+def test_report_stats_greedy_only_prints_na_not_nan(tiny_model, capsys):
+    """serve.py's sampler stats line averages sampling steps over
+    ``sampled_requests`` — a greedy-only run (--sampling-mix 0) has zero
+    of those and used to print nan/raise ZeroDivisionError; it must say
+    n/a instead (and still print the real average when sampling)."""
+    from repro.launch.serve import report_stats
+    from repro.runtime.serving import SamplingParams
+    model, params = tiny_model
+    eng = ServingEngine(model, TINY, params, max_slots=2, max_seq=64)
+    eng.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                       max_new_tokens=3))
+    eng.run(max_steps=200)
+    report_stats(eng)                          # greedy-only: must not raise
+    out = capsys.readouterr().out
+    assert "n/a (greedy-only run)" in out
+    assert "nan" not in out
+    eng2 = ServingEngine(model, TINY, params, max_slots=2, max_seq=64)
+    eng2.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                        max_new_tokens=3,
+                        sampling=SamplingParams(temperature=0.7, seed=1)))
+    eng2.run(max_steps=200)
+    report_stats(eng2)
+    out = capsys.readouterr().out
+    assert "steps/request" in out and "n/a" not in out
 
 
 def test_engine_stats_track_prefill_compiles_monolithic(tiny_model):

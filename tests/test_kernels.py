@@ -136,19 +136,24 @@ def test_ssd_vs_ref(mode, s, chunk):
     np.testing.assert_allclose(st, str_, rtol=2e-3, atol=2e-3)
 
 
-def test_ssd_chunked_state_chaining():
-    """Chunked scan carry-in/carry-out == contiguous run (C7 strip-mining)."""
+@pytest.mark.parametrize("mode", ["interpret", "ref"])
+def test_ssd_chunked_state_chaining(mode):
+    """Chunked scan carry-in/carry-out == contiguous run (C7 strip-mining).
+    ``initial_state`` is a kernel operand on every path (the Pallas kernel
+    seeds its VMEM carry from it), so serving's chunked prefill — which
+    threads the SSD state across bucket-sized prompt chunks — does not
+    fall back to the jnp path on TPU."""
     bh, s, p, n = 2, 64, 8, 4
     x = _rand(KEY, (bh, s, p), jnp.float32)
     la = -jnp.abs(_rand(jax.random.PRNGKey(1), (bh, s), jnp.float32)) * 0.2
     B = _rand(jax.random.PRNGKey(2), (bh, s, n), jnp.float32)
     C = _rand(jax.random.PRNGKey(3), (bh, s, n), jnp.float32)
-    y_full, st_full = ops.ssd(x, la, B, C, chunk=16, mode="ref")
+    y_full, st_full = ops.ssd(x, la, B, C, chunk=16, mode=mode)
     h = s // 2
     y1, st1 = ops.ssd(x[:, :h], la[:, :h], B[:, :h], C[:, :h],
-                      chunk=16, mode="ref")
+                      chunk=16, mode=mode)
     y2, st2 = ops.ssd(x[:, h:], la[:, h:], B[:, h:], C[:, h:],
-                      chunk=16, mode="ref", initial_state=st1)
+                      chunk=16, mode=mode, initial_state=st1)
     np.testing.assert_allclose(
         jnp.concatenate([y1, y2], axis=1), y_full, rtol=2e-3, atol=2e-3)
     np.testing.assert_allclose(st2, st_full, rtol=2e-3, atol=2e-3)

@@ -20,15 +20,22 @@ import pytest
 from repro.configs.base import ArchConfig
 from repro.core import hlo_analysis
 from repro.models import registry
+from repro.models.layers import PARKED_POS
 from repro.runtime.serving import Request, SamplingParams, ServingEngine
 from repro.runtime.serving import sampling
 from repro.runtime.serving.engine import (_compiled_decode,
                                           _compiled_prefill_chunk,
                                           _insert_jit)
 
+from conftest import family_cfgs
+
 TINY = ArchConfig(name="tiny-zc", family="dense", n_layers=2, d_model=32,
                   n_heads=4, n_kv_heads=2, d_ff=64, vocab=97, head_dim=8,
                   param_dtype="float32", act_dtype="float32", max_seq=64)
+
+# non-dense family configs + the ``family_model`` fixture are shared with
+# test_chunked_prefill via conftest.py (one pinned regime — notably MoE's
+# never-binding capacity_factor)
 
 SLOTS, SEQ, CHUNK = 3, 48, 8
 
@@ -136,6 +143,92 @@ def test_engine_arena_is_single_resident_buffer(tiny_model):
             "donating backend moved the resident arena"
 
 
+def test_family_chunk_and_decode_reuse_donated_arena_buffer(family_model):
+    """The rows/arena contract beyond dense: MoE/SSM/hybrid chunk
+    ingestion and decode steps donate the arena and the backend reuses
+    the buffers in place."""
+    cfg, model, params = family_model
+    step = _compiled_decode(model, True)
+    chunk_fn = _compiled_prefill_chunk(model, True)
+    cache = model.init_cache(SLOTS, SEQ)
+    ptrs = _leaf_ptrs(cache)
+    toks = jnp.zeros((1, CHUNK), jnp.int32)
+    logits, cache2 = chunk_fn(params, cache, toks, jnp.int32(1),
+                              jnp.int32(0), jnp.int32(CHUNK - 1))
+    _require_donation(cache)
+    assert _leaf_ptrs(cache2) == ptrs, \
+        f"{cfg.family}: chunk step re-materialised the arena"
+    tokens = jnp.zeros((SLOTS,), jnp.int32)
+    pos = jnp.full((SLOTS,), 4, jnp.int32)
+    active = jnp.ones((SLOTS,), jnp.int32)
+    samp = sampling.init_slot_state(SLOTS)
+    out = step(params, tokens, cache2, pos, active, samp)
+    assert _leaf_ptrs(out[1]) == ptrs, \
+        f"{cfg.family}: decode step re-materialised the arena"
+
+
+# ---------------------------------------------------------------------------
+# parked-slot safety: sentinel indices must never alias live rows/state
+# ---------------------------------------------------------------------------
+
+def _family_cases():
+    return [("dense", TINY)] + sorted(family_cfgs().items())
+
+
+@pytest.mark.parametrize("family,cfg", _family_cases())
+def test_prefill_chunk_parked_slot_cannot_alias_live_rows(family, cfg):
+    """Regression: ``_slot_view``/the chunk scatter used to rely on
+    ``dynamic_slice``/``dynamic_update_slice`` OOB *clamping* for an
+    out-of-range slot index — a slot parked at the ``max_slots`` sentinel
+    would clamp onto slot ``max_slots - 1`` and overwrite the last live
+    slot's rows (or SSD state).  The slot view now clamps explicitly and
+    every chunk write is a drop-on-OOB scatter, so a parked slot's chunk
+    call must leave the entire arena bit-identical."""
+    model = registry.build_model(cfg)
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    cache = jax.tree.map(
+        lambda a: jnp.asarray(rng.standard_normal(a.shape), a.dtype),
+        model.init_cache(SLOTS, SEQ))
+    before = jax.tree.map(np.asarray, cache)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, CHUNK)), jnp.int32)
+    chunk_fn = jax.jit(model.prefill_chunk)
+    for bad_slot in (SLOTS, SLOTS + 3):
+        _, cache_out = chunk_fn(params, toks, cache, jnp.int32(bad_slot),
+                                jnp.int32(0), jnp.int32(CHUNK - 1))
+        jax.tree.map(
+            lambda b, a: np.testing.assert_array_equal(np.asarray(a), b),
+            before, cache_out)
+
+
+def test_parked_slot_decode_preserves_recurrent_state(family_model):
+    """A slot mid-chunked-prefill parks its position at PARKED_POS; the
+    decode step must leave that slot's arena state bit-identical (KV
+    scatters drop out of bounds; SSD state writes keep-mask on pos) while
+    still updating the live slots."""
+    cfg, model, params = family_model
+    rng = np.random.default_rng(11)
+    cache = jax.tree.map(
+        lambda a: jnp.asarray(rng.standard_normal(a.shape), a.dtype),
+        model.init_cache(SLOTS, SEQ))
+    before = jax.tree.map(np.asarray, cache)
+    parked = 1
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, SLOTS), jnp.int32)
+    pos = jnp.asarray([4, PARKED_POS, 5][:SLOTS], jnp.int32)
+    _, cache_out = jax.jit(model.decode_step)(params, tokens, cache, pos)
+    after = jax.tree.map(np.asarray, cache_out)
+
+    def check_leaf(b, a):
+        f = b.shape[1] // SLOTS
+        sl = slice(parked * f, (parked + 1) * f)
+        np.testing.assert_array_equal(a[:, sl], b[:, sl])
+        # and the step was not a global no-op: some live slot's state moved
+        return np.array_equal(a, b)
+
+    unchanged = jax.tree.leaves(jax.tree.map(check_leaf, before, after))
+    assert not all(unchanged), "decode step wrote nothing at all"
+
+
 # ---------------------------------------------------------------------------
 # cost-analysis claim checks (in-place lowering, chunk-row bounds)
 # ---------------------------------------------------------------------------
@@ -212,6 +305,29 @@ def test_decode_step_lowers_inplace_not_copies(tiny_model):
         (dict(cost.bytes_by_op), arena_bytes)
 
 
+def test_family_chunk_bytes_independent_of_arena_width(family_model):
+    """Per family: doubling the slot count must not change a chunk step's
+    copied bytes — K/V writes move with the chunk's rows, recurrent-state
+    writes with one slot's carry, never with the arena."""
+    cfg, model, params = family_model
+
+    def cost(slots):
+        cache = model.init_cache(slots, SEQ)
+        toks = jnp.zeros((1, CHUNK), jnp.int32)
+        comp = jax.jit(
+            lambda p, c, t, s, st, li:
+                model.prefill_chunk(p, t, c, s, st, li),
+            donate_argnums=1,
+        ).lower(params, cache, toks, jnp.int32(0), jnp.int32(8),
+                jnp.int32(CHUNK - 1)).compile()
+        return hlo_analysis.analyze(comp.as_text())
+
+    c1, c2 = cost(SLOTS), cost(2 * SLOTS)
+    assert _copied_bytes(c2) == pytest.approx(_copied_bytes(c1)), \
+        f"{cfg.family}: chunk copied bytes scale with arena width"
+    assert c2.bytes <= c1.bytes * 1.05, (c2.bytes, c1.bytes)
+
+
 # ---------------------------------------------------------------------------
 # engine-level: donation + preemption/recompute stay token-identical
 # ---------------------------------------------------------------------------
@@ -269,6 +385,39 @@ def test_preemption_recompute_token_identical_sampled(tiny_model):
 
     def run(num_pages):
         eng = ServingEngine(model, TINY, params, max_slots=3, max_seq=64,
+                            depth=2, page_size=4, num_pages=num_pages,
+                            prefill_chunks=(4, 8), donate=True)
+        for i, (p, sp) in enumerate(zip(prompts, sps)):
+            eng.submit(Request(uid=i, prompt=p, max_new_tokens=12,
+                               sampling=sp))
+        return eng.run(max_steps=2000), eng
+
+    want, calm = run(num_pages=None)          # full arena: no pressure
+    assert calm.scheduler.stats["preempted"] == 0
+    out, pressured = run(num_pages=9)         # undersized: evictions
+    assert pressured.scheduler.stats["preempted"] > 0
+    for i in range(3):
+        np.testing.assert_array_equal(out[i], want[i])
+
+
+def test_family_preemption_recompute_token_identical_sampled(family_model):
+    """The stochastic preemption harness beyond dense (the PR-4 dense
+    harness, re-run per family on the ported rows/arena contract): a
+    *sampled* MoE/SSM/hybrid request evicted mid-run — possibly
+    mid-prefill, discarding chunk-threaded recurrent state — must replay
+    a token-identical continuation on recompute, with the arena donated
+    throughout.  The reference run is the same workload in an unpressured
+    pool, so the comparison also pins batch-trajectory invariance (exact
+    for SSM/hybrid; for MoE because the test capacity never binds)."""
+    cfg, model, params = family_model
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32)
+               for n in (9, 13, 10)]
+    sps = [SamplingParams(temperature=0.9, top_k=25, top_p=0.92,
+                          seed=300 + i) for i in range(3)]
+
+    def run(num_pages):
+        eng = ServingEngine(model, cfg, params, max_slots=3, max_seq=64,
                             depth=2, page_size=4, num_pages=num_pages,
                             prefill_chunks=(4, 8), donate=True)
         for i, (p, sp) in enumerate(zip(prompts, sps)):
