@@ -37,7 +37,9 @@ from jax import lax
 from repro.configs.base import ArchConfig, tiny_family_configs
 from repro.core import hlo_analysis
 from repro.models import registry
-from repro.runtime.serving import Request, SamplingParams, ServingEngine
+from repro.runtime.serving import (EngineConfig, Request, SamplingParams,
+                                   ServingEngine)
+from repro.runtime.serving.chunking import chunk_plan, tail_plan
 
 CFG = ArchConfig(name="bench-serve-tiny", family="dense", n_layers=2,
                  d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
@@ -52,8 +54,8 @@ def _workload(rng, n_requests, gen):
 
 
 def _run_engine(model, params, reqs, *, slots, max_seq, depth):
-    eng = ServingEngine(model, CFG, params, max_slots=slots,
-                        max_seq=max_seq, depth=depth)
+    eng = ServingEngine(model, CFG, params, config=EngineConfig(
+        max_slots=slots, max_seq=max_seq, depth=depth))
     for i, (prompt, gen) in enumerate(reqs):
         eng.submit(Request(uid=i, prompt=prompt, max_new_tokens=gen))
     t0 = time.perf_counter()
@@ -175,6 +177,7 @@ def run(report, smoke: bool = False):
                 f"ideal/blocking = {ideal_tps / blocking:.2f}x")
 
     _prefill_sweep(report, model, params, smoke=smoke)
+    _prefix_sweep(report, model, params, smoke=smoke)
     _memory_sweep(report, model, params, smoke=smoke)
     _family_sweep(report, smoke=smoke)
     _sampling_sweep(report, model, params, smoke=smoke)
@@ -205,8 +208,8 @@ def _prefill_workload(rng, smoke: bool):
 
 def _run_prefill_mode(model, params, prompts, gen, *, slots, max_seq,
                       chunks):
-    eng = ServingEngine(model, CFG, params, max_slots=slots,
-                        max_seq=max_seq, depth=2, prefill_chunks=chunks)
+    eng = ServingEngine(model, CFG, params, config=EngineConfig(
+        max_slots=slots, max_seq=max_seq, depth=2, prefill_chunks=chunks))
     for i, p in enumerate(prompts):
         eng.submit(Request(uid=i, prompt=p, max_new_tokens=gen))
     t0 = time.perf_counter()
@@ -233,8 +236,8 @@ def _prefill_sweep(report, model, params, *, smoke: bool):
 
     # warm the decode-step / splice jits with a prompt length *outside* the
     # workload, so both modes measure only their own prefill-path churn
-    warm = ServingEngine(model, CFG, params, max_slots=slots,
-                         max_seq=max_seq, depth=2)
+    warm = ServingEngine(model, CFG, params, config=EngineConfig(
+        max_slots=slots, max_seq=max_seq, depth=2))
     warm.submit(Request(uid="w", prompt=rng.integers(0, CFG.vocab, 5)
                         .astype(np.int32), max_new_tokens=3))
     warm.run()
@@ -288,6 +291,134 @@ def _prefill_sweep(report, model, params, *, smoke: bool):
 
 
 # ---------------------------------------------------------------------------
+# prefix-sharing sweep: copy-on-write KV pages for a shared-prefix batch
+# ---------------------------------------------------------------------------
+
+def _prefix_sweep(report, model, params, *, smoke: bool):
+    """The copy-on-write prefix-cache claims, on the workload it exists
+    for: N requests opening with one common page-aligned prefix plus
+    distinct tails.  Gates are deterministic — chunk-call counters, page
+    refcounts, and trip-count-aware HLO cost of the composed-view chunk
+    executable — not wall time:
+
+      (a) prefill work is flat in N for the shared prefix: the donor
+          ingests it once, every fork ingests only its re-cut tail, and
+          the executable set does not grow with N (the identity share
+          mapping keeps one chunk program for donors and forks alike);
+      (b) one resident copy of the shared pages: refcount == N, the
+          arena does not grow with N at fixed slots;
+      (c) CoW is write-free on the read path: the composed-view chunk
+          executable copies no more bytes than the unshared chunk (the
+          donor gather/select lowers to reads, not copies), so shared
+          rows are never re-materialised into the forked slot;
+      (d) sharing is a pure optimisation: tokens bit-identical to the
+          same batch with sharing off."""
+    rng = np.random.default_rng(13)
+    page, buckets = 8, (8, 16, 32)
+    shared, tail = (32, 8) if smoke else (64, 16)
+    gen = 6 if smoke else 12
+    ns = (1, 2, 4) if smoke else (1, 4, 8)
+    slots = max(ns)                   # fixed across N: arena size constant
+    plen = shared + tail
+    max_seq = plen + gen + min(buckets) + 1
+    head = rng.integers(0, CFG.vocab, shared).astype(np.int32)
+    prompts = [np.concatenate(
+        [head, rng.integers(0, CFG.vocab, tail).astype(np.int32)])
+        for _ in range(slots)]
+
+    def run_once(n, sharing):
+        eng = ServingEngine(model, CFG, params, config=EngineConfig(
+            max_slots=slots, max_seq=max_seq, depth=2, page_size=page,
+            prefill_chunks=buckets, prefix_sharing=sharing))
+        for i in range(n):
+            eng.submit(Request(uid=i, prompt=prompts[i],
+                               max_new_tokens=gen))
+        out = eng.run()
+        return eng, {i: out[i].tolist() for i in range(n)}
+
+    runs = {n: run_once(n, True) for n in ns}
+    _, out_off = run_once(max(ns), False)
+
+    # HLO gate for (c): the composed-view chunk (fork reading donor rows)
+    # vs the plain slot-view chunk, both donating the arena
+    cache = model.init_cache(slots, max_seq)
+    ctoks = jnp.zeros((1, page), jnp.int32)
+
+    def chunk_plain(params, cache, toks, slot, start, last):
+        return model.prefill_chunk(params, toks, cache, slot, start, last)
+
+    def chunk_shared(params, cache, toks, slot, start, last, src, ln):
+        return model.prefill_chunk(params, toks, cache, slot, start, last,
+                                   share_src=src, share_len=ln)
+
+    plain_cost, _ = _step_cost(chunk_plain, (1,), params, cache, ctoks,
+                               jnp.int32(1), jnp.int32(shared), jnp.int32(0))
+    shared_cost, _ = _step_cost(chunk_shared, (1,), params, cache, ctoks,
+                                jnp.int32(1), jnp.int32(shared), jnp.int32(0),
+                                jnp.int32(0), jnp.int32(shared))
+    plain_b, shared_b = _copied_bytes(plain_cost), _copied_bytes(shared_cost)
+
+    rows1 = sum(chunk_plan(plen, buckets))
+    tail_rows = sum(tail_plan(plen, shared, buckets))
+    table = []
+    for n in ns:
+        eng, _ = runs[n]
+        st, ps = eng.stats, eng.cache_mgr.stats
+        table.append({"batch": n,
+                      "prefill_rows": st["prefill_rows"],
+                      "forks": st["forks"],
+                      "shared_prompt_tokens": st["shared_prompt_tokens"],
+                      "prefill_compiles": st["prefill_compiles"],
+                      "max_page_ref": ps["max_page_ref"],
+                      "registered_pages": ps["registered_pages"],
+                      "shared_pages": ps["shared_pages"],
+                      "arena_kb": round(eng.arena_bytes / 1e3, 1)})
+    table.append({"batch": "(chunk HLO)", "prefill_rows": "-", "forks": "-",
+                  "shared_prompt_tokens": "-", "prefill_compiles": "-",
+                  "max_page_ref": "-", "registered_pages": "-",
+                  "shared_pages": f"plain {plain_b / 1e3:.1f}kB copied",
+                  "arena_kb": f"shared-view {shared_b / 1e3:.1f}kB"})
+    report.table("serving_prefix_sweep", table)
+
+    nmax = max(ns)
+    eng_max, out_max = runs[nmax]
+    rows_ok = all(
+        runs[n][0].stats["prefill_rows"] == rows1 + (n - 1) * tail_rows
+        for n in ns)
+    compiles = {n: runs[n][0].stats["prefill_compiles"] for n in ns}
+    arena = {n: runs[n][0].arena_bytes for n in ns}
+    report.claims("serving_prefix", {
+        "shared prefix ingested once: rows(N) = rows(1) + (N-1)*tail": (
+            rows_ok,
+            f"rows={[runs[n][0].stats['prefill_rows'] for n in ns]} for "
+            f"N={list(ns)} (tail covers {tail_rows} rows)"),
+        "prefill executable set flat in N (identity share mapping)": (
+            len(set(compiles.values())) == 1,
+            f"compiles={compiles}"),
+        "one resident copy of shared pages: refcount == N": (
+            eng_max.cache_mgr.stats["max_page_ref"] == nmax
+            and eng_max.stats["forks"] == nmax - 1,
+            f"max_page_ref={eng_max.cache_mgr.stats['max_page_ref']}, "
+            f"forks={eng_max.stats['forks']} at N={nmax}"),
+        "arena bytes flat in N at fixed slots": (
+            len(set(arena.values())) == 1,
+            f"{sorted(set(arena.values()))[0] / 1e3:.1f}kB for N={list(ns)}"),
+        "composed-view chunk copies no more than the unshared chunk": (
+            shared_b <= plain_b + 1024,
+            f"shared-view={shared_b / 1e3:.1f}kB vs "
+            f"plain={plain_b / 1e3:.1f}kB copied (donor rows are read via "
+            f"gather/select, never re-materialised)"),
+        "CoW tokens bit-identical to sharing off": (
+            out_max == out_off, f"N={nmax} batch, greedy decode"),
+    })
+    report.note("serving_prefix",
+                f"page={page}, shared prefix {shared} tokens "
+                f"({shared // page} pages) + {tail}-token tails; "
+                f"N={nmax} ingests {runs[nmax][0].stats['prefill_rows']} "
+                f"prompt rows vs {nmax * rows1} unshared")
+
+
+# ---------------------------------------------------------------------------
 # stochastic sampling sweep: greedy vs sampled throughput + determinism
 # ---------------------------------------------------------------------------
 
@@ -315,8 +446,8 @@ def _sampling_sweep(report, model, params, *, smoke: bool):
     knobs = dict(temperature=0.8, top_k=20, top_p=0.95)
 
     def run_once(sp_of, *, n_slots=slots, depth=2):
-        eng = ServingEngine(model, CFG, params, max_slots=n_slots,
-                            max_seq=max_seq, depth=depth)
+        eng = ServingEngine(model, CFG, params, config=EngineConfig(
+            max_slots=n_slots, max_seq=max_seq, depth=depth))
         for i, p in enumerate(prompts):
             eng.submit(Request(uid=i, prompt=p, max_new_tokens=gen,
                                sampling=sp_of(i)))

@@ -1,0 +1,134 @@
+"""Cross-run trend gate: diff a benchmark JSON against the previous run.
+
+``python benchmarks/trend.py --current BENCH_smoke.json --previous prev.json``
+
+``run.py --json`` dumps every table/claim/note per run; CI keeps the
+previous PR's artifact and feeds both files here.  The gate is asymmetric
+by metric class, because the smoke runs on a timeshared container:
+
+  * **deterministic** metrics — compile counts, copied/total bytes,
+    page refcounts, prompt rows, step counts — are load-invariant, so a
+    >20% *increase* (cost direction) over the previous run is a hard
+    failure (exit 1).  These are the quantities the gated paper claims
+    are built on; silent drift here is a real regression even while the
+    claim's absolute bound still passes.
+  * **timing** metrics — tokens/s, TTFT, wall, idle fractions — swing
+    with container load, so drift is *reported* (warn lines) but never
+    gates.
+
+A claim that passed previously and fails now is always a hard failure
+(run.py already fails the run on any failing claim; this catches the
+cross-run direction explicitly in the diff output).
+
+A missing previous artifact is tolerated (exit 0): the first run on a
+branch, or an expired CI cache, just seeds the trend.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# substrings marking a column as load-dependent timing (warn-only)
+_TIMING = ("_s", "_ms", "tokens_per_s", "ttft", "wall", "idle",
+           "host_blocked")
+
+
+def _is_timing(col: str) -> bool:
+    return any(t in col for t in _TIMING)
+
+
+def _numeric(v):
+    return (float(v) if isinstance(v, (int, float))
+            and not isinstance(v, bool) else None)
+
+
+def _rows_by_key(rows):
+    """Key each table row by its first column's value (mode / family /
+    batch / ...), the stable identity across runs."""
+    out = {}
+    for r in rows:
+        if r:
+            out[str(next(iter(r.values())))] = r
+    return out
+
+
+def diff(current: dict, previous: dict, *, tolerance: float):
+    """Returns (regressions, warnings, improvements) — lists of strings.
+    ``regressions`` non-empty ⇒ the gate fails."""
+    regressions, warnings, improvements = [], [], []
+
+    prev_claims = previous.get("claims", {})
+    for group, checks in current.get("claims", {}).items():
+        for desc, res in checks.items():
+            before = prev_claims.get(group, {}).get(desc)
+            if before and before.get("pass") and not res.get("pass"):
+                regressions.append(
+                    f"claim regressed: [{group}] {desc} "
+                    f"(now: {res.get('detail')})")
+
+    prev_tables = previous.get("tables", {})
+    for name, rows in current.get("tables", {}).items():
+        prev_rows = _rows_by_key(prev_tables.get(name, []))
+        for key, row in _rows_by_key(rows).items():
+            before = prev_rows.get(key)
+            if not before:
+                continue
+            for col, val in row.items():
+                cur_v, prev_v = _numeric(val), _numeric(before.get(col))
+                if cur_v is None or prev_v is None:
+                    continue
+                base = max(abs(prev_v), 1e-9)
+                delta = (cur_v - prev_v) / base
+                if abs(delta) <= tolerance:
+                    continue
+                line = (f"{name}[{key}].{col}: {prev_v:g} -> {cur_v:g} "
+                        f"({delta:+.0%})")
+                if _is_timing(col):
+                    warnings.append(line)
+                elif delta > 0:
+                    regressions.append(line)
+                else:
+                    improvements.append(line)
+    return regressions, warnings, improvements
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", required=True,
+                    help="this run's run.py --json artifact")
+    ap.add_argument("--previous", required=True,
+                    help="previous run's artifact (missing file tolerated)")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="relative drift allowed before flagging (0.2=20%%)")
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        current = json.load(f)
+    if not os.path.exists(args.previous):
+        print(f"trend: no previous artifact at {args.previous}; "
+              f"seeding trend from {args.current}")
+        return 0
+    with open(args.previous) as f:
+        previous = json.load(f)
+
+    regressions, warnings, improvements = diff(
+        current, previous, tolerance=args.tolerance)
+    for line in improvements:
+        print("  improved:", line)
+    for line in warnings:
+        print("  warn (timing, not gated):", line)
+    for line in regressions:
+        print("  REGRESSION:", line)
+    if regressions:
+        print(f"trend: {len(regressions)} gated metric(s) regressed "
+              f"beyond {args.tolerance:.0%}")
+        return 1
+    print(f"trend: no gated regression vs previous "
+          f"({len(warnings)} timing drift(s) ignored)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -22,6 +22,12 @@ Prefill knobs (the stripmined prompt-ingestion path):
     (lengths cycle over the requests) — the traffic shape where chunked
     prefill pays: run it in both modes and compare the printed TTFT
     percentiles and ``prefill_compiles``.
+  * ``--prefix-sharing`` (chunked mode only) turns on the copy-on-write
+    prefix cache: requests whose prompts open with an already-ingested
+    page-aligned token prefix fork onto the donor's pages by refcount
+    and ingest only the unshared tail.  ``--prompt-mix shared-prefix``
+    generates the matching workload — one common system prefix plus
+    distinct per-request tails.
 
 Sampling knobs (per-slot stochastic decode inside the compiled step):
 
@@ -43,20 +49,18 @@ import jax
 import numpy as np
 
 from repro.models import registry
-from repro.runtime.serving import (DEFAULT_BUCKETS, GREEDY, Request,
-                                   SamplingParams, ServingEngine)
+from repro.runtime.serving import (DEFAULT_BUCKETS, EngineConfig, GREEDY,
+                                   Request, SamplingParams, ServingEngine)
 
 
-def make_engine(bundle, params, *, max_slots, max_seq, depth=2,
-                page_size=16, num_pages=None, prefill_chunks=None,
-                prefill_budget=None, donate="auto",
-                base_seed=0) -> ServingEngine:
-    return ServingEngine(bundle.model, bundle.cfg, params,
-                         max_slots=max_slots, max_seq=max_seq, depth=depth,
-                         page_size=page_size, num_pages=num_pages,
-                         prefill_chunks=prefill_chunks,
-                         prefill_budget=prefill_budget, donate=donate,
-                         base_seed=base_seed)
+def make_engine(bundle, params, *, config: EngineConfig = None,
+                **fields) -> ServingEngine:
+    """Build the engine from an :class:`EngineConfig` (or config fields)."""
+    if config is None:
+        config = EngineConfig(**fields)
+    elif fields:
+        config = config.replace(**fields)
+    return ServingEngine(bundle.model, bundle.cfg, params, config=config)
 
 
 def sampling_plan(n_requests: int, *, temperature: float, top_k: int,
@@ -102,6 +106,13 @@ def report_stats(eng: ServingEngine) -> None:
           f"(greedy={total - sampled}; {per_req}; keys fold "
           f"(seed, position) — batch/preemption/donation invariant)")
     print("scheduler:", eng.scheduler.stats)
+    if getattr(eng, "prefix_sharing", False):
+        ps = eng.cache_mgr.stats
+        print(f"prefix cache: forks={stats['forks']} "
+              f"shared_prompt_tokens={stats['shared_prompt_tokens']} "
+              f"prefill_rows={stats['prefill_rows']} "
+              f"(pages: registered={ps['registered_pages']} "
+              f"shared={ps['shared_pages']} max_ref={ps['max_page_ref']})")
     if ttft:
         print(f"ttft_s: mean={np.mean(ttft):.4f} "
               f"p50={_percentile(ttft, 50):.4f} "
@@ -156,8 +167,14 @@ def main(argv=None):
                         "(default: largest bucket)")
     p.add_argument("--prompt-mix", default=None,
                    help="comma-separated prompt lengths cycled over the "
-                        "requests (a mixed-length prefill-heavy workload); "
-                        "overrides --prompt-len")
+                        "requests (a mixed-length prefill-heavy workload), "
+                        "or 'shared-prefix' for a common system prefix of "
+                        "half --prompt-len plus distinct tails; overrides "
+                        "--prompt-len")
+    p.add_argument("--prefix-sharing", action="store_true",
+                   help="copy-on-write prefix cache: fork repeated "
+                        "page-aligned prompt prefixes onto shared pages "
+                        "(requires --prefill-mode chunked)")
     p.add_argument("--donate", choices=["auto", "on", "off"], default="auto",
                    help="KV-arena buffer donation: auto = on once the "
                         "arena crosses the in-place pay-off threshold "
@@ -185,7 +202,19 @@ def main(argv=None):
     cfg = bundle.cfg
     params = jax.jit(bundle.model.init)(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    if args.prompt_mix:
+    prompts = None
+    if args.prompt_mix == "shared-prefix":
+        # one common system prefix (half the prompt, page-aligned) plus
+        # distinct per-request tails — the workload --prefix-sharing wins on
+        shared = max(args.page_size,
+                     args.prompt_len // 2 // args.page_size * args.page_size)
+        head = rng.integers(0, cfg.vocab, shared)
+        prompts = [np.concatenate(
+            [head, rng.integers(0, cfg.vocab,
+                                max(1, args.prompt_len - shared))])
+            for _ in range(args.requests)]
+        lens = [p.size for p in prompts]
+    elif args.prompt_mix:
         mix = [int(x) for x in args.prompt_mix.split(",")]
         lens = [mix[i % len(mix)] for i in range(args.requests)]
     else:
@@ -194,10 +223,15 @@ def main(argv=None):
         lens = [args.prompt_len if i % 2 == 0
                 else max(1, args.prompt_len * 3 // 4)
                 for i in range(args.requests)]
+    if prompts is None:
+        prompts = [rng.integers(0, cfg.vocab, lens[i])
+                   for i in range(args.requests)]
     chunks = None
     if args.prefill_mode == "chunked":
         chunks = (tuple(int(x) for x in args.chunk_buckets.split(","))
                   if args.chunk_buckets else DEFAULT_BUCKETS)
+    if args.prefix_sharing and chunks is None:
+        p.error("--prefix-sharing requires --prefill-mode chunked")
     extras = {}
     if cfg.family == "encdec":
         extras["frames"] = rng.standard_normal(
@@ -213,20 +247,21 @@ def main(argv=None):
     max_prompt = max(lens)
     pad_slack = min(chunks) if chunks else 0
     donate = {"auto": "auto", "on": True, "off": False}[args.donate]
-    eng = make_engine(bundle, params,
-                      max_slots=args.slots or args.requests,
-                      max_seq=max_prompt + prefix + args.gen + pad_slack + 1,
-                      depth=args.depth, page_size=args.page_size,
-                      num_pages=args.pages, prefill_chunks=chunks,
-                      prefill_budget=args.prefill_budget, donate=donate,
-                      base_seed=args.seed)
+    eng = make_engine(bundle, params, config=EngineConfig(
+        max_slots=args.slots or args.requests,
+        max_seq=max_prompt + prefix + args.gen + pad_slack + 1,
+        depth=args.depth, page_size=args.page_size,
+        num_pages=args.pages, prefill_chunks=chunks,
+        prefill_budget=args.prefill_budget,
+        prefix_sharing=args.prefix_sharing, donate=donate,
+        base_seed=args.seed))
     plan = sampling_plan(args.requests, temperature=args.temperature,
                          top_k=args.top_k, top_p=args.top_p,
                          min_p=args.min_p, seed=args.seed,
                          mix=args.sampling_mix)
     for i in range(args.requests):
         eng.submit(Request(
-            uid=i, prompt=rng.integers(0, cfg.vocab, lens[i]),
+            uid=i, prompt=prompts[i],
             max_new_tokens=args.gen, sampling=plan[i],
             extras={k: v[i] for k, v in extras.items()}))
 

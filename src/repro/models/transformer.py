@@ -283,6 +283,11 @@ class LM:
                                          and self._chunk_scatter is not None)
         self.inplace_arena_decode = (self._layer_decode_rows is not None
                                      and self._rows_scatter is not None)
+        # prefix sharing composes the chunk path (fork ingestion resumes at
+        # the divergence boundary) with the arena decode path (the share
+        # view reads donor rows in place) — it needs both hook sets
+        self.supports_prefix_sharing = (self.supports_chunked_prefill
+                                        and self.inplace_arena_decode)
 
     # -- params ------------------------------------------------------------
     def init(self, key) -> dict:
@@ -390,6 +395,130 @@ class LM:
             self._cache_factors_memo = factors
         return factors
 
+    def _seq_axes(self):
+        """Per-leaf sequence-axis index of the family cache pytree, or -1
+        for leaves with no sequence axis (recurrent state: SSD state /
+        conv tail).  Detected structurally — the axis whose extent tracks
+        ``max_seq`` across two abstract instantiations — so family modules
+        never have to declare it.  Indices are for the *per-layer* leaf
+        (the stacked arena leaf's axis is one higher); memoised per model.
+        """
+        axes = self.__dict__.get("_seq_axes_memo")
+        if axes is None:
+            small = jax.eval_shape(
+                lambda: self._init_layer_cache(self.cfg, 1, 8))
+            big = jax.eval_shape(
+                lambda: self._init_layer_cache(self.cfg, 1, 16))
+
+            def ax(ls, lb):
+                diff = [i for i, (p, q) in enumerate(zip(ls.shape, lb.shape))
+                        if p != q]
+                return diff[0] if diff else -1
+            axes = jax.tree.map(ax, small, big)
+            self._seq_axes_memo = axes
+        return axes
+
+    @property
+    def has_recurrent_state(self) -> bool:
+        """True if any cache leaf carries per-slot recurrent state (no
+        sequence axis) — those leaves cannot be shared positionally, so
+        prefix-sharing forks need a state snapshot at the divergence
+        boundary (see :meth:`extract_slot_state`)."""
+        return any(ax < 0 for ax in jax.tree.leaves(self._seq_axes()))
+
+    def _share_view(self, cache, share_src, share_len):
+        """Composed read view of the arena under prefix sharing.
+
+        ``share_src``/``share_len``: (B,) int32 — slot b reads sequence
+        rows [0, share_len[b]) from slot ``share_src[b]``'s region (the
+        donor's shared prefix pages) and its own rows past that.  Leaves
+        with no sequence axis (recurrent state) pass through untouched:
+        their shared-prefix contribution was spliced into the slot's own
+        state at fork time.  An unshared slot has ``share_src[b] == b``
+        and ``share_len[b] == 0``, so the select is the identity and the
+        composed view is bit-identical to the raw arena — one executable
+        serves shared and unshared traffic.
+
+        This is a *read* view only.  The write side (``rows_scatter`` /
+        ``chunk_scatter``) always targets the slot's own region, and every
+        write position is ≥ the slot's shared length (decode rows sit past
+        the prompt; fork chunk cursors start at the divergence boundary),
+        so a shared page is never written in place — copy-on-write by
+        construction.
+        """
+        factors = self._cache_factors()
+
+        def comp(leaf, f, ax):
+            if ax < 0:
+                return leaf
+            rows = (share_src[:, None] * f
+                    + jnp.arange(f)[None, :]).reshape(-1)
+            donor = jnp.take(leaf, rows, axis=1)
+            ln = jnp.repeat(share_len, f)
+            bshape = [1] * leaf.ndim
+            bshape[1] = ln.shape[0]
+            tshape = [1] * leaf.ndim
+            tshape[ax + 1] = leaf.shape[ax + 1]
+            t = jnp.arange(leaf.shape[ax + 1]).reshape(tshape)
+            return jnp.where(t < ln.reshape(bshape), donor, leaf)
+        return jax.tree.map(comp, cache, factors, self._seq_axes())
+
+    def _share_slot_view(self, cache, slot, share_src, share_len):
+        """Slot-view twin of :meth:`_share_view` for the chunk-prefill
+        path: one slot's (L, f, ...) view reading sequence rows
+        [0, share_len) from the donor slot's region.  ``share_src`` /
+        ``share_len`` are traced scalars."""
+        own = self._slot_view(cache, slot)
+        donor = self._slot_view(cache, share_src)
+
+        def comp(o, d, ax):
+            if ax < 0:
+                return o
+            tshape = [1] * o.ndim
+            tshape[ax + 1] = o.shape[ax + 1]
+            t = jnp.arange(o.shape[ax + 1]).reshape(tshape)
+            return jnp.where(t < share_len, d, o)
+        return jax.tree.map(comp, own, donor, self._seq_axes())
+
+    def extract_slot_state(self, cache, slot) -> list:
+        """Snapshot one slot's recurrent-state leaves (those without a
+        sequence axis), as a flat list in cache-leaf order.  Position-
+        addressed leaves are skipped — their rows are shared directly by
+        the composed view.  Used by the serving engine to checkpoint a
+        prefix donor's SSD state at page boundaries so a later fork can
+        resume the recurrence from the divergence point."""
+        factors = jax.tree.leaves(self._cache_factors())
+        axes = jax.tree.leaves(self._seq_axes())
+        out = []
+        for leaf, f, ax in zip(jax.tree.leaves(cache), factors, axes):
+            if ax >= 0:
+                continue
+            nslots = leaf.shape[1] // f
+            s = jnp.minimum(slot, nslots - 1) * f
+            out.append(lax.dynamic_slice(
+                leaf, (0, s) + (0,) * (leaf.ndim - 2),
+                (leaf.shape[0], f) + leaf.shape[2:]))
+        return out
+
+    def splice_slot_state(self, cache, state: list, slot):
+        """Inverse of :meth:`extract_slot_state`: write a snapshot into
+        slot ``slot``'s recurrent-state rows (drop-on-OOB scatter, same
+        discipline as the family scatters).  Position-addressed leaves
+        pass through."""
+        leaves, treedef = jax.tree.flatten(cache)
+        factors = jax.tree.leaves(self._cache_factors())
+        axes = jax.tree.leaves(self._seq_axes())
+        it = iter(state)
+        new = []
+        for leaf, f, ax in zip(leaves, factors, axes):
+            if ax >= 0:
+                new.append(leaf)
+                continue
+            piece = next(it)
+            idx = slot * f + jnp.arange(f)
+            new.append(leaf.at[:, idx].set(piece.astype(leaf.dtype)))
+        return jax.tree.unflatten(treedef, new)
+
     def _slot_view(self, cache, slot):
         """Read-only view of one slot's rows across all layers: leaf
         (L, nslots·f, ...) -> (L, f, ...) at slot index ``slot`` (traced),
@@ -414,7 +543,8 @@ class LM:
                 (leaf.shape[0], f) + leaf.shape[2:])
         return jax.tree.map(view, cache, factors)
 
-    def prefill_chunk(self, params, tokens, cache, slot, start, last_idx):
+    def prefill_chunk(self, params, tokens, cache, slot, start, last_idx,
+                      share_src=None, share_len=None):
         """Stripmined prefill: ingest one prompt chunk straight into slot
         ``slot`` of the resident cache arena.
 
@@ -448,6 +578,13 @@ class LM:
         otherwise clone it every layer.  ``slot``, ``start`` and
         ``last_idx`` are all traced, so one compiled entry serves every
         chunk of every prompt — compile count is bounded by the bucket set.
+
+        ``share_src``/``share_len`` (traced scalars, optional): prefix
+        sharing — the slot reads rows [0, share_len) from slot
+        ``share_src``'s region (see :meth:`_share_slot_view`).  A forked
+        request's chunks all start at ``start >= share_len``, so the
+        scatter below still only ever writes the slot's own private rows.
+        ``None`` (the default) keeps the original executable untouched.
         """
         if not self.supports_chunked_prefill:
             raise NotImplementedError(
@@ -459,7 +596,11 @@ class LM:
         positions = jnp.broadcast_to(start + jnp.arange(c), (b, c))
         nvalid = last_idx + 1
         layer_xs = self._layer_xs_fn(cfg) if self._layer_xs_fn else None
-        slot_view = self._slot_view(cache, slot)
+        if share_src is None:
+            slot_view = self._slot_view(cache, slot)
+        else:
+            slot_view = self._share_slot_view(cache, slot, share_src,
+                                              share_len)
 
         def block(carry, inp):
             x = carry
@@ -498,7 +639,7 @@ class LM:
     def _extra_window(extra):
         return None if extra is None else extra
 
-    def decode_step(self, params, token_t, cache, pos):
+    def decode_step(self, params, token_t, cache, pos, share=None):
         """token_t: (B,) int32; pos: (B,) position to write. Returns
         (logits (B,V), new_cache).
 
@@ -508,20 +649,27 @@ class LM:
         caches); the arena is written once, after the scan, by the
         family's ``rows_scatter`` — in place under buffer donation, never
         a re-materialised arena riding the scan carry.
+
+        ``share`` (optional): ``(share_src, share_len)`` (B,) int32
+        prefix-sharing vectors — the scan *reads* through the composed
+        view (:meth:`_share_view`) while ``rows_scatter`` still writes the
+        raw arena, so shared prefix rows are read in place from the donor
+        slot and never written.
         """
         cfg = self.cfg
         x_t = L.embed_lookup(params["embed"], token_t[:, None],
                              self.rules)[:, 0]
         layer_xs = self._layer_xs_fn(cfg) if self._layer_xs_fn else None
         x_t, new_cache = self._decode_rows(params, cfg, x_t, cache, pos,
-                                           layer_xs)
+                                           layer_xs, share=share)
         h = L.rmsnorm(params["final_norm"], x_t, cfg.rms_eps)
         logits = jnp.dot(h, self.head(params),
                          preferred_element_type=jnp.float32)
         logits = lanes.constrain(logits, self.rules, "batch", "vocab_tp")
         return logits, new_cache
 
-    def decode_and_sample(self, params, token_t, cache, pos, samp):
+    def decode_and_sample(self, params, token_t, cache, pos, samp,
+                          share=None):
         """One decode step + on-device sampling: the serving engine's
         compiled step body, shared by every LM family (all on the
         rows/arena decode path via their ``layer_decode_rows`` /
@@ -537,15 +685,23 @@ class LM:
         batch composition or donation generation.  Slots with
         ``temp <= 0`` take the bit-exact argmax path.
         """
-        logits, new_cache = self.decode_step(params, token_t, cache, pos)
+        logits, new_cache = self.decode_step(params, token_t, cache, pos,
+                                             share=share)
         tok = L.sample_step(logits, samp["seed"], pos + 1, samp["temp"],
                             samp["top_k"], samp["top_p"], samp["min_p"])
         return tok, new_cache
 
-    def _decode_rows(self, params, cfg, x_t, cache, pos, layer_xs):
+    def _decode_rows(self, params, cfg, x_t, cache, pos, layer_xs,
+                     share=None):
         """Arena decode: scan layers collecting per-layer emissions (K/V
         rows / new recurrent state), then one in-place write of everything
-        into the resident arena via the family's ``rows_scatter``."""
+        into the resident arena via the family's ``rows_scatter``.
+
+        Under prefix sharing the scan reads through the composed view but
+        the scatter targets the raw arena — shared rows are never written.
+        """
+        read = cache if share is None \
+            else self._share_view(cache, share[0], share[1])
 
         def block(x_t, inp):
             if layer_xs is None:
@@ -555,7 +711,7 @@ class LM:
                 lp, cache_l, extra = inp
             return self._layer_decode_rows(lp, cfg, x_t, cache_l, pos, extra)
 
-        xs = (params["layers"], cache) if layer_xs is None \
-            else (params["layers"], cache, layer_xs)
+        xs = (params["layers"], read) if layer_xs is None \
+            else (params["layers"], read, layer_xs)
         x_t, emits = lax.scan(block, x_t, xs)
         return x_t, self._rows_scatter(cache, emits, pos)

@@ -1,12 +1,32 @@
-from repro.runtime.serving.cache import PagedKVCacheManager, cache_insert
+"""Public serving surface.
+
+``EngineConfig`` + ``ServingEngine`` are the construction path; the
+request/queue objects (``Request``, ``RequestState``, ``Status``,
+``SamplingParams``) and the inspectable managers (``PagedKVCacheManager``
+with its ``AllocResult``/``PrefixMatch`` returns, ``Scheduler``) round out
+the API.  Engine-internal helpers — ``cache_insert`` (the device-side
+splice) and the raw ``chunk_plan``/``padded_len``/``tail_plan`` arithmetic
+— stay importable from their submodules (``serving.cache``,
+``serving.chunking``) but are no longer part of ``__all__``: they are
+implementation detail of the engine, not the serving contract.
+``DEFAULT_BUCKETS`` remains public — it is the documented value for
+``EngineConfig.prefill_chunks``.
+"""
+from repro.runtime.serving.cache import (AllocResult, PagedKVCacheManager,
+                                         PrefixMatch, cache_insert)
 from repro.runtime.serving.chunking import (DEFAULT_BUCKETS, chunk_plan,
-                                            padded_len)
+                                            padded_len, tail_plan)
+from repro.runtime.serving.config import EngineConfig
 from repro.runtime.serving.engine import ServingEngine
 from repro.runtime.serving.request import Request, RequestState, Status
 from repro.runtime.serving.sampling import GREEDY, SamplingParams
 from repro.runtime.serving.scheduler import Scheduler
 
-__all__ = ["PagedKVCacheManager", "cache_insert",
-           "DEFAULT_BUCKETS", "chunk_plan", "padded_len", "ServingEngine",
+# kept importable for compatibility, deliberately outside __all__
+_internal = (cache_insert, chunk_plan, padded_len, tail_plan)
+
+__all__ = ["EngineConfig", "ServingEngine",
+           "PagedKVCacheManager", "AllocResult", "PrefixMatch",
+           "DEFAULT_BUCKETS",
            "Request", "RequestState", "Status", "Scheduler",
            "GREEDY", "SamplingParams"]

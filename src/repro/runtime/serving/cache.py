@@ -1,4 +1,4 @@
-"""Slot-based paged KV-cache management.
+"""Slot-based paged KV-cache management, prefix-sharing and copy-on-write.
 
 Device memory for the decode batch is one preallocated slot-major cache
 (``model.init_cache(max_slots, max_seq)`` — jax needs static shapes), so
@@ -9,6 +9,27 @@ the role the scoreboard plays for Ara's VRF: the storage is physically
 there, the manager decides who may occupy it.  Per-slot *logical* length
 (the live prefix of the slot's rows) is enforced on device by flash-decode
 tail predication, not here.
+
+The manager is **page-centric**: every page carries a refcount, and pages
+holding a prompt prefix can be *registered* in a hash-consed prefix index —
+page content is keyed by the hash of its token-id chunk chained on the
+parent page's key, so two prompts share an index chain exactly as far as
+their token ids agree on page boundaries.  :meth:`fork` maps a new request
+onto an existing chain: the matched pages are taken by reference (refcount
+bump, zero ingestion) and the request copy-on-write-splits at the
+divergence point — its private tail pages are its own, and *writes* only
+ever target those (the engine starts the chunk cursor at the divergence
+boundary; decode rows land past the prompt).  ``free`` drops references;
+a page returns to the pool only at refcount zero, so shared prefix pages
+survive their donor's retirement or preemption.  Because registered pages
+physically live in the donor slot's region of the arena, a region still
+hosting live shared pages is *pinned*: :meth:`allocate` refuses to hand
+that slot to a new occupant until the last reference drops (the scheduler
+simply picks another free slot).
+
+All mutators return an :class:`AllocResult` — truthy on success, with the
+page movements (taken / shared / freed / retained) inspectable — instead
+of the bool/None mix they once were.
 
 ``cache_insert`` is the device-side half: splice one prefilled request
 (batch=1 cache) into a slot of the big arena.  It is shape-generic over the
@@ -23,10 +44,92 @@ through memory.
 """
 from __future__ import annotations
 
+import dataclasses
+import hashlib
 import math
+from typing import Any, Optional
 
 import jax
+import numpy as np
 from jax import lax
+
+
+@dataclasses.dataclass(frozen=True)
+class AllocResult:
+    """Structured outcome of a page-table mutation.
+
+    Truthy iff the operation succeeded (``bool(result)`` preserves the old
+    ``allocate``/``extend`` -> bool contract), with the page movements
+    inspectable:
+
+    ``taken``     pages newly handed out from the free pool
+    ``shared``    existing prefix pages mapped by reference (fork)
+    ``freed``     pages returned to the pool (refcount hit zero)
+    ``retained``  pages this slot released that stay live via other holders
+    ``shared_len``tokens covered by ``shared`` (the divergence boundary)
+    ``src_slot``  arena region physically hosting the shared pages
+    ``reason``    why the operation was refused (``"no-pages"``,
+                  ``"region-pinned"``, ``"no-prefix"``) — None on success
+    """
+    ok: bool
+    reason: Optional[str] = None
+    taken: tuple = ()
+    shared: tuple = ()
+    freed: tuple = ()
+    retained: tuple = ()
+    shared_len: int = 0
+    src_slot: Optional[int] = None
+
+    def __bool__(self) -> bool:
+        return self.ok
+
+
+@dataclasses.dataclass
+class _PrefixEntry:
+    """One registered prefix page in the hash-consed index.
+
+    ``key`` is the chain hash: H(parent_key ‖ page token ids) — content
+    addressing chained on the whole prefix, so a key match implies the
+    *entire* prefix up to and including this page matches.  ``snapshot``
+    optionally holds the donor's recurrent state (SSD state / conv tail)
+    captured just after this page's last token was ingested; forks of
+    recurrent families splice it to resume the recurrence at the boundary.
+    """
+    key: bytes
+    page: int
+    src_slot: int        # arena region the page physically lives in
+    idx: int             # page index within the prefix (0-based)
+    snapshot: Optional[list] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixMatch:
+    """Result of a prefix-index :meth:`PagedKVCacheManager.lookup`."""
+    entries: tuple          # matched _PrefixEntry chain, idx order
+    src_slot: int
+    shared_len: int         # tokens covered (= len(entries) * page_size)
+
+    @property
+    def pages(self) -> tuple:
+        return tuple(e.page for e in self.entries)
+
+    @property
+    def snapshot(self) -> Optional[list]:
+        return self.entries[-1].snapshot if self.entries else None
+
+
+def _chain_keys(tokens: np.ndarray, n_pages: int, page_size: int,
+                _H=hashlib.blake2b) -> list[bytes]:
+    """Chained content keys for the first ``n_pages`` full pages of a
+    prompt: key_i = H(key_{i-1} ‖ tokens[i·ps:(i+1)·ps])."""
+    toks = np.asarray(tokens, np.int32)
+    keys, prev = [], b""
+    for i in range(n_pages):
+        h = _H(prev, digest_size=16)
+        h.update(toks[i * page_size:(i + 1) * page_size].tobytes())
+        prev = h.digest()
+        keys.append(prev)
+    return keys
 
 
 class PagedKVCacheManager:
@@ -34,7 +137,7 @@ class PagedKVCacheManager:
 
     ``num_pages`` pages of ``page_size`` tokens each, shared by all slots.
     Pages are handed out from a free list (LIFO, so tests can observe
-    reuse) and returned on :meth:`free`.
+    reuse) and returned on :meth:`free` when their refcount drops to zero.
     """
 
     def __init__(self, num_pages: int, page_size: int):
@@ -45,6 +148,15 @@ class PagedKVCacheManager:
         self._free: list[int] = list(range(num_pages - 1, -1, -1))
         self._table: dict[int, list[int]] = {}     # slot -> owned page ids
         self._length: dict[int, int] = {}          # slot -> token count
+        self._ref: dict[int, int] = {}             # page -> holder count
+        # hash-consed prefix index: chain key -> registered page
+        self._index: dict[bytes, _PrefixEntry] = {}
+        self._entry_of_page: dict[int, _PrefixEntry] = {}
+        # arena regions hosting live *registered* pages (slot id -> pages);
+        # a region with entries here and no occupant is pinned
+        self._hosted: dict[int, set[int]] = {}
+        self.stats = {"forks": 0, "shared_pages": 0, "max_page_ref": 0,
+                      "peak_pages_used": 0, "registered_pages": 0}
 
     # -- queries -------------------------------------------------------------
     def pages_for(self, length: int) -> int:
@@ -66,37 +178,213 @@ class PagedKVCacheManager:
     def utilization(self) -> float:
         return 1.0 - self.free_pages / self.num_pages
 
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
+
+    def region_pinned(self, slot: int) -> bool:
+        """True if ``slot``'s arena region hosts live registered prefix
+        pages whose refcounts haven't drained — a new occupant would
+        overwrite rows other slots are reading through the share view."""
+        return bool(self._hosted.get(slot)) and slot not in self._table
+
+    def _note_usage(self) -> None:
+        used = self.num_pages - len(self._free)
+        if used > self.stats["peak_pages_used"]:
+            self.stats["peak_pages_used"] = used
+
     # -- allocation ----------------------------------------------------------
-    def allocate(self, slot: int, length: int) -> bool:
-        """Give ``slot`` pages for ``length`` tokens.  False if it wouldn't
-        fit (nothing is taken then) or the slot already holds pages."""
+    def allocate(self, slot: int, length: int) -> AllocResult:
+        """Give ``slot`` private (refcount-1) pages for ``length`` tokens.
+        Refused — nothing taken — if the pool can't cover it, or if the
+        slot's region is pinned by live shared pages of a departed donor."""
         if slot in self._table:
             raise ValueError(f"slot {slot} already allocated")
+        if self.region_pinned(slot):
+            return AllocResult(False, reason="region-pinned")
         need = self.pages_for(length)
         if need > self.free_pages:
-            return False
-        self._table[slot] = [self._free.pop() for _ in range(need)]
+            return AllocResult(False, reason="no-pages")
+        taken = [self._free.pop() for _ in range(need)]
+        for p in taken:
+            self._ref[p] = 1
+        self._table[slot] = taken
         self._length[slot] = length
-        return True
+        self._note_usage()
+        if taken and not self.stats["max_page_ref"]:
+            self.stats["max_page_ref"] = 1
+        return AllocResult(True, taken=tuple(taken))
 
-    def extend(self, slot: int, new_length: int) -> bool:
+    def extend(self, slot: int, new_length: int) -> AllocResult:
         """Grow ``slot`` to ``new_length`` tokens, taking pages as the
-        length crosses page boundaries.  False ⟹ out of pages (the caller
+        length crosses page boundaries.  Falsy ⟹ out of pages (the caller
         preempts); the slot keeps what it had."""
         if slot not in self._table:
             raise ValueError(f"slot {slot} not allocated")
         need = self.pages_for(new_length) - len(self._table[slot])
         if need > self.free_pages:
-            return False
+            return AllocResult(False, reason="no-pages")
+        taken = []
         for _ in range(max(0, need)):
-            self._table[slot].append(self._free.pop())
+            p = self._free.pop()
+            self._ref[p] = 1
+            taken.append(p)
+        self._table[slot].extend(taken)
         self._length[slot] = new_length
-        return True
+        self._note_usage()
+        return AllocResult(True, taken=tuple(taken))
 
-    def free(self, slot: int) -> None:
+    def free(self, slot: int) -> AllocResult:
+        """Drop ``slot``'s references.  A page returns to the pool only at
+        refcount zero (its index entry dies with it); pages other slots
+        still share stay resident — and keep the hosting region pinned."""
+        freed, retained = [], []
         for page in reversed(self._table.pop(slot, [])):
-            self._free.append(page)
+            n = self._ref.get(page, 1) - 1
+            if n <= 0:
+                self._ref.pop(page, None)
+                self._unregister(page)
+                self._free.append(page)
+                freed.append(page)
+            else:
+                self._ref[page] = n
+                retained.append(page)
         self._length.pop(slot, None)
+        return AllocResult(True, freed=tuple(freed), retained=tuple(retained))
+
+    # -- prefix index --------------------------------------------------------
+    def register_prefix(self, slot: int, tokens, upto: int,
+                        snapshot: Any = None) -> int:
+        """Publish ``slot``'s ingested prompt prefix into the index.
+
+        Registers every *full* page covering tokens ``[0, upto)`` that is
+        not yet indexed; only the engine calls this, and only for *pure*
+        (unforked) slots whose rows [0, upto) hold real prompt tokens.
+        ``snapshot``, if given, is attached to the page whose last token is
+        at ``upto - 1`` (i.e. when ``upto`` is page-aligned) — the donor's
+        recurrent state at that boundary.  Returns the number of newly
+        registered pages.  Chains that collide with a live foreign entry
+        are not re-registered (hash-consing: first publisher wins)."""
+        table = self._table.get(slot)
+        if table is None:
+            raise ValueError(f"slot {slot} not allocated")
+        n_pages = min(upto, len(np.asarray(tokens))) // self.page_size
+        n_pages = min(n_pages, len(table))
+        if n_pages <= 0:
+            return 0
+        new = 0
+        for i, key in enumerate(_chain_keys(tokens, n_pages,
+                                            self.page_size)):
+            ent = self._index.get(key)
+            if ent is None:
+                ent = _PrefixEntry(key=key, page=table[i], src_slot=slot,
+                                   idx=i)
+                self._index[key] = ent
+                self._entry_of_page[table[i]] = ent
+                self._hosted.setdefault(slot, set()).add(table[i])
+                new += 1
+            if (snapshot is not None and ent.src_slot == slot
+                    and (i + 1) * self.page_size == upto):
+                ent.snapshot = snapshot
+        self.stats["registered_pages"] += new
+        return new
+
+    def _unregister(self, page: int) -> None:
+        ent = self._entry_of_page.pop(page, None)
+        if ent is None:
+            return
+        self._index.pop(ent.key, None)
+        hosted = self._hosted.get(ent.src_slot)
+        if hosted is not None:
+            hosted.discard(page)
+            if not hosted:
+                del self._hosted[ent.src_slot]
+
+    def lookup(self, tokens, limit: int, *,
+               require_snapshot: bool = False) -> Optional[PrefixMatch]:
+        """Longest registered prefix of ``tokens`` covering at most
+        ``limit`` tokens, walking the chain of page keys.  The chain must
+        be *contiguous in one region* (same ``src_slot``, consecutive page
+        indices) — a chain stitched across two donors' regions would make
+        the share view read two slots at once.  With ``require_snapshot``
+        the match is cut back to the longest chain whose final page carries
+        a recurrent-state snapshot (recurrent families can only resume at
+        checkpointed boundaries)."""
+        n_pages = min(limit, len(np.asarray(tokens))) // self.page_size
+        if n_pages <= 0:
+            return None
+        entries: list[_PrefixEntry] = []
+        for i, key in enumerate(_chain_keys(tokens, n_pages,
+                                            self.page_size)):
+            ent = self._index.get(key)
+            if (ent is None or ent.idx != i
+                    or (entries and ent.src_slot != entries[0].src_slot)):
+                break
+            entries.append(ent)
+        if require_snapshot:
+            while entries and entries[-1].snapshot is None:
+                entries.pop()
+        if not entries:
+            return None
+        return PrefixMatch(entries=tuple(entries),
+                           src_slot=entries[0].src_slot,
+                           shared_len=len(entries) * self.page_size)
+
+    def fork(self, slot: int, match: PrefixMatch) -> AllocResult:
+        """Copy-on-write split: remap ``slot``'s leading pages onto the
+        matched prefix chain.  The slot must already hold a private
+        allocation covering its prompt (admission is unchanged); the first
+        ``len(match.entries)`` private pages are released back to the pool
+        and replaced *by reference* with the donor's registered pages —
+        refcount bump, no ingestion, no copy.  The slot's remaining pages
+        are its private tail: the divergence point.  Writes never target
+        shared pages (the engine's chunk cursor starts at
+        ``match.shared_len``; decode rows land past the prompt), so the
+        split is copy-on-write by construction."""
+        table = self._table.get(slot)
+        if table is None:
+            raise ValueError(f"slot {slot} not allocated")
+        k = len(match.entries)
+        if k == 0:
+            return AllocResult(False, reason="no-prefix")
+        if k > len(table):
+            raise ValueError(
+                f"fork of slot {slot}: match covers {k} pages but the slot "
+                f"holds {len(table)}")
+        stale = [self._index.get(e.key) is not e or self._ref.get(e.page, 0) < 1
+                 for e in match.entries]
+        if any(stale):
+            return AllocResult(False, reason="no-prefix")
+        dropped = table[:k]
+        shared = [e.page for e in match.entries]
+        # take the new references *before* releasing the old ones: a slot
+        # re-forking onto a chain it already shares would otherwise drive
+        # the overlapping pages through refcount 0 (pooling live pages)
+        for p in shared:
+            self._ref[p] = self._ref.get(p, 0) + 1
+        freed, retained = [], []
+        for p in dropped:
+            # released by *refcount*: a re-forking slot's leading pages may
+            # themselves be shared — they pool only when the last holder
+            # lets go, same rule as :meth:`free`
+            n = self._ref.get(p, 1) - 1
+            if n <= 0:
+                self._ref.pop(p, None)
+                self._unregister(p)
+                self._free.append(p)
+                freed.append(p)
+            else:
+                self._ref[p] = n
+                retained.append(p)
+        self._table[slot] = shared + table[k:]
+        self.stats["forks"] += 1
+        self.stats["shared_pages"] += k
+        ref = max(self._ref[p] for p in shared)
+        if ref > self.stats["max_page_ref"]:
+            self.stats["max_page_ref"] = ref
+        return AllocResult(True, shared=tuple(shared),
+                           freed=tuple(freed), retained=tuple(retained),
+                           shared_len=match.shared_len,
+                           src_slot=match.src_slot)
 
 
 # ---------------------------------------------------------------------------

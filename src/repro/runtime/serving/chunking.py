@@ -66,3 +66,21 @@ def chunk_plan(prompt_len: int, buckets=DEFAULT_BUCKETS) -> list[int]:
 def padded_len(prompt_len: int, buckets=DEFAULT_BUCKETS) -> int:
     """Total cache rows a chunk-planned prompt occupies (incl. padding)."""
     return sum(chunk_plan(prompt_len, buckets))
+
+
+def tail_plan(prompt_len: int, shared_len: int,
+              buckets=DEFAULT_BUCKETS) -> list[int]:
+    """Chunk plan for the *unshared tail* of a prefix-sharing fork.
+
+    The first ``shared_len`` prompt tokens were mapped onto existing
+    prefix pages by reference — no ingestion — so only the remaining
+    ``prompt_len - shared_len`` tokens are stripmined.  The fork's chunk
+    cursor starts at ``shared_len`` (the divergence boundary), and the
+    engine caps ``shared_len < prompt_len`` at fork time, so the tail is
+    never empty: every fork ingests at least one real token to produce its
+    first logits.
+    """
+    if not 0 <= shared_len < prompt_len:
+        raise ValueError(
+            f"shared_len={shared_len} outside [0, prompt_len={prompt_len})")
+    return chunk_plan(prompt_len - shared_len, buckets)

@@ -1,0 +1,88 @@
+"""EngineConfig: the serving engine's construction surface, as one value.
+
+``ServingEngine`` grew nine keyword knobs across PRs 1-5 (slot/arena
+geometry, dispatch depth, paging, chunked prefill, donation policy, PRNG
+seed); prefix sharing adds a tenth.  This module folds them into a single
+frozen dataclass so the construction path is one documented object —
+``ServingEngine(model, cfg, params, config=EngineConfig(...))`` — that can
+be validated once, passed through CLIs and benchmarks unchanged, compared
+and hashed (sweep keys), and extended without touching every call site.
+Legacy keyword construction still works for one PR via a deprecation shim
+in the engine that warns and builds the config.
+
+Field-level validation that needs only the config lives here
+(``__post_init__``); validation that needs the *model* (does the family
+support chunked prefill?) stays in the engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+from repro.runtime.serving.chunking import validate_buckets
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Everything ``ServingEngine`` needs beyond (model, cfg, params).
+
+    ``max_slots``       decode-batch width (concurrent sequences)
+    ``max_seq``         per-slot arena depth (cache rows)
+    ``depth``           dispatch-queue depth (in-flight decode steps;
+                        0 = blocking dispatch)
+    ``page_size``       cache-page granularity (rows) for admission control
+    ``num_pages``       page-pool size; None = cover the full arena
+    ``prefill_chunks``  bucket sizes for stripmined chunked prefill;
+                        None = monolithic prefill
+    ``prefill_budget``  prompt tokens ingested per engine step; None =
+                        largest bucket
+    ``prefix_sharing``  hash-cons prompt prefixes into refcounted shared
+                        pages with copy-on-write forks (requires
+                        ``prefill_chunks``)
+    ``donate``          arena buffer donation: "auto" | True | False
+    ``base_seed``       run-level PRNG seed for sampled requests
+    """
+    max_slots: int = 8
+    max_seq: int = 256
+    depth: int = 2
+    page_size: int = 16
+    num_pages: Optional[int] = None
+    prefill_chunks: Optional[tuple[int, ...]] = None
+    prefill_budget: Optional[int] = None
+    prefix_sharing: bool = False
+    donate: Any = "auto"
+    base_seed: int = 0
+
+    def __post_init__(self):
+        for name in ("max_slots", "max_seq", "page_size"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"EngineConfig.{name} must be >= 1, "
+                                 f"got {getattr(self, name)}")
+        if self.depth < 0:
+            raise ValueError(f"EngineConfig.depth must be >= 0, "
+                             f"got {self.depth}")
+        if self.num_pages is not None and self.num_pages < 1:
+            raise ValueError(f"EngineConfig.num_pages must be >= 1 or None, "
+                             f"got {self.num_pages}")
+        if self.prefill_chunks is not None:
+            # normalise through the chunking validator so two configs with
+            # the same effective bucket set compare equal
+            object.__setattr__(self, "prefill_chunks",
+                               validate_buckets(self.prefill_chunks))
+        if self.prefill_budget is not None and self.prefill_budget < 1:
+            raise ValueError(
+                f"EngineConfig.prefill_budget must be >= 1 or None, "
+                f"got {self.prefill_budget}")
+        if self.prefix_sharing and self.prefill_chunks is None:
+            raise ValueError(
+                "EngineConfig.prefix_sharing requires chunked prefill "
+                "(prefill_chunks): forks resume ingestion at the divergence "
+                "boundary, which monolithic prefill cannot express")
+        if self.donate not in ("auto", True, False):
+            raise ValueError(
+                f"EngineConfig.donate must be 'auto', True or False, "
+                f"got {self.donate!r}")
+
+    def replace(self, **changes) -> "EngineConfig":
+        """Functional update (re-runs validation)."""
+        return dataclasses.replace(self, **changes)

@@ -78,6 +78,7 @@ from __future__ import annotations
 import collections
 import functools
 import time
+import warnings
 import weakref
 from typing import Any, Optional
 
@@ -89,7 +90,9 @@ from repro.core import masking
 from repro.core.dispatch import DispatchQueue
 from repro.models.layers import PARKED_POS
 from repro.runtime.serving import chunking, sampling
-from repro.runtime.serving.cache import PagedKVCacheManager, cache_insert
+from repro.runtime.serving.cache import (PagedKVCacheManager, PrefixMatch,
+                                         cache_insert)
+from repro.runtime.serving.config import EngineConfig
 from repro.runtime.serving.request import Request, RequestState, Status
 from repro.runtime.serving.scheduler import Scheduler
 
@@ -196,6 +199,40 @@ def _compiled_decode_greedy(model, donate):
 
 
 @_per_model
+def _compiled_decode_shared(model, donate):
+    """Prefix-sharing variant of :func:`_compiled_decode`: the decode
+    state gains the per-slot share vectors ``{"src", "len"}`` (donated,
+    passed through unchanged like ``samp``), and the layer scan reads the
+    arena through the composed share view — slot b's rows
+    [0, share_len[b]) come from slot share_src[b]'s region.  An unshared
+    slot has src == own slot and len == 0, making the select the
+    identity, so one executable serves mixed shared/unshared batches
+    bit-identically to the unshared twin."""
+    def step(params, tokens, cache, pos, active, samp, share):
+        sampled, cache = model.decode_and_sample(
+            params, tokens, cache, pos, samp,
+            share=(share["src"], share["len"]))
+        tokens = masking.apply_mask(tokens, sampled, active == 1)
+        pos = pos + active
+        return tokens, cache, pos, active, samp, share, sampled
+    return jax.jit(step,
+                   donate_argnums=(1, 2, 3, 4, 5, 6) if donate else ())
+
+
+@_per_model
+def _compiled_decode_greedy_shared(model, donate):
+    def step(params, tokens, cache, pos, active, samp, share):
+        logits, cache = model.decode_step(
+            params, tokens, cache, pos, share=(share["src"], share["len"]))
+        sampled = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        tokens = masking.apply_mask(tokens, sampled, active == 1)
+        pos = pos + active
+        return tokens, cache, pos, active, samp, share, sampled
+    return jax.jit(step,
+                   donate_argnums=(1, 2, 3, 4, 5, 6) if donate else ())
+
+
+@_per_model
 def _compiled_prefill(model, donate):
     # the batch=1 zero-cache template is reused by every admission, so it
     # is NOT donated here; the arena splice (_insert_jit) donates instead
@@ -217,8 +254,50 @@ def _compiled_prefill_chunk(model, donate):
     return jax.jit(chunk_step, donate_argnums=(1,) if donate else ())
 
 
+@_per_model
+def _compiled_prefill_chunk_shared(model, donate):
+    """Prefix-sharing chunk ingestion: the fork's chunks attend over the
+    donor's shared rows through the composed slot view (``share_src`` /
+    ``share_len`` traced scalars; a pure slot passes (own slot, 0) and
+    gets identical math).  The scatter still writes only the slot's own
+    rows — every fork chunk starts at ``start >= share_len``."""
+    def chunk_step(params, big_cache, tokens, slot, start, last_idx,
+                   share_src, share_len):
+        return model.prefill_chunk(params, tokens, big_cache, slot, start,
+                                   last_idx, share_src=share_src,
+                                   share_len=share_len)
+    return jax.jit(chunk_step, donate_argnums=(1,) if donate else ())
+
+
+@_per_model
+def _compiled_extract_state(model, donate):
+    """Snapshot one slot's recurrent-state leaves (never donated — the
+    arena stays live; the snapshot is an independent O(slot state) copy
+    parked in the prefix index)."""
+    del donate
+    return jax.jit(lambda cache, slot: model.extract_slot_state(cache, slot))
+
+
+@_per_model
+def _compiled_splice_state(model, donate):
+    """Write a parked snapshot into a fork's recurrent-state rows.  The
+    arena is donated (in-place row write); the snapshot is not — the same
+    snapshot serves every future fork of its prefix."""
+    def splice(cache, state, slot):
+        return model.splice_slot_state(cache, state, slot)
+    return jax.jit(splice, donate_argnums=(0,) if donate else ())
+
+
 _insert_jit = jax.jit(cache_insert, donate_argnums=0)
 _insert_plain_jit = jax.jit(cache_insert)
+
+
+def _common_prefix_len(a: np.ndarray, b: np.ndarray) -> int:
+    n = min(len(a), len(b))
+    if n == 0:
+        return 0
+    neq = np.nonzero(a[:n] != b[:n])[0]
+    return int(neq[0]) if neq.size else n
 
 
 # per-slot state pokes: a few bytes per admission — donation's fixed
@@ -233,6 +312,12 @@ def _set_slot_jit(tokens, pos, active, slot, token0, pos0):
 @jax.jit
 def _park_slot_jit(pos, slot, sentinel):
     return pos.at[slot].set(sentinel)
+
+
+@jax.jit
+def _set_share_jit(share, slot, src, ln):
+    return {"src": share["src"].at[slot].set(src),
+            "len": share["len"].at[slot].set(ln)}
 
 
 class ServingEngine:
@@ -265,20 +350,37 @@ class ServingEngine:
     same base seed and the same requests generate identical streams; the
     per-draw key folds only (request seed, absolute position) — see
     :mod:`repro.runtime.serving.sampling`.
+
+    Construction: ``ServingEngine(model, cfg, params,
+    config=EngineConfig(...))`` is the documented path — every knob above
+    is an :class:`EngineConfig` field.  Legacy keyword construction
+    (``max_slots=...`` etc.) still works for one PR via a deprecation shim
+    that warns and builds the config; behavior is identical.
     """
 
-    def __init__(self, model, cfg, params, *, max_slots: int = 8,
-                 max_seq: int = 256, depth: int = 2, page_size: int = 16,
-                 num_pages: Optional[int] = None,
-                 prefill_chunks: Optional[tuple] = None,
-                 prefill_budget: Optional[int] = None,
-                 donate: Any = "auto", base_seed: int = 0):
+    def __init__(self, model, cfg, params, *,
+                 config: Optional[EngineConfig] = None, **legacy):
+        if legacy:
+            if config is not None:
+                raise TypeError(
+                    f"pass either config=EngineConfig(...) or legacy "
+                    f"keywords, not both: {sorted(legacy)}")
+            warnings.warn(
+                "ServingEngine keyword construction (max_slots=..., "
+                "prefill_chunks=..., ...) is deprecated; pass "
+                "config=EngineConfig(...) instead — same field names, "
+                "identical behavior", DeprecationWarning, stacklevel=2)
+            config = EngineConfig(**legacy)
+        elif config is None:
+            config = EngineConfig()
+        self.config = config
         self.model = model
         self.cfg = cfg
         self.params = params
-        self.max_slots = max_slots
-        self.max_seq = max_seq
-        self.depth = depth
+        max_slots = self.max_slots = config.max_slots
+        max_seq = self.max_seq = config.max_seq
+        self.depth = config.depth
+        prefill_chunks = config.prefill_chunks
         self.prefix_extra = (cfg.n_patch_tokens
                              if cfg.family == "vlm" else 0)
         if prefill_chunks is not None:
@@ -289,14 +391,21 @@ class ServingEngine:
             if self.prefix_extra:
                 raise ValueError("chunked prefill with prefix_extra "
                                  "(VLM patch tokens) is unsupported")
-            prefill_chunks = chunking.validate_buckets(prefill_chunks)
         self.prefill_chunks = prefill_chunks
-        self.prefill_budget = (prefill_budget if prefill_budget is not None
+        self.prefill_budget = (config.prefill_budget
+                               if config.prefill_budget is not None
                                else (max(prefill_chunks)
                                      if prefill_chunks else 0))
+        self.prefix_sharing = bool(config.prefix_sharing)
+        if self.prefix_sharing and not getattr(
+                model, "supports_prefix_sharing", False):
+            raise ValueError(
+                f"family {cfg.family!r} does not support prefix sharing "
+                f"(needs the chunked-prefill and arena-decode hooks)")
+        num_pages = config.num_pages
         if num_pages is None:       # default: pool sized to the full arena
-            num_pages = max_slots * -(-max_seq // page_size)
-        self.cache_mgr = PagedKVCacheManager(num_pages, page_size)
+            num_pages = max_slots * -(-max_seq // config.page_size)
+        self.cache_mgr = PagedKVCacheManager(num_pages, config.page_size)
         self.scheduler = Scheduler(max_slots, self.cache_mgr,
                                    prefix_extra=self.prefix_extra,
                                    max_len=max_seq,
@@ -308,8 +417,14 @@ class ServingEngine:
         self._active = jnp.zeros((max_slots,), jnp.int32)
         # per-slot sampling params (greedy until a sampled admission);
         # threaded through — and donated with — every decode step
-        self.base_seed = int(base_seed)
+        self.base_seed = int(config.base_seed)
         self._samp = sampling.init_slot_state(max_slots)
+        # per-slot prefix-share vectors (donated with the decode state):
+        # slot b reads rows [0, len[b]) from slot src[b]'s region.  The
+        # identity mapping (src == own slot, len == 0) is a no-op share.
+        self._share = ({"src": jnp.arange(max_slots, dtype=jnp.int32),
+                        "len": jnp.zeros((max_slots,), jnp.int32)}
+                       if self.prefix_sharing else None)
         self._cache = model.init_cache(max_slots, max_seq)
 
         self.arena_bytes = sum(
@@ -322,12 +437,18 @@ class ServingEngine:
         # rows/arena port; the flag guards non-LM drivers that still thread
         # caches functionally.  True/False force the choice.  The
         # structural zero-copy paths are active regardless.
+        donate = config.donate
         if donate == "auto":
             donate = (self.arena_bytes >= DONATE_MIN_BYTES
                       and getattr(model, "inplace_arena_decode", False))
         self.donate = bool(donate)
-        self._decode = _compiled_decode(model, self.donate)
-        self._decode_greedy = _compiled_decode_greedy(model, self.donate)
+        if self.prefix_sharing:
+            self._decode = _compiled_decode_shared(model, self.donate)
+            self._decode_greedy = _compiled_decode_greedy_shared(
+                model, self.donate)
+        else:
+            self._decode = _compiled_decode(model, self.donate)
+            self._decode_greedy = _compiled_decode_greedy(model, self.donate)
         self._use_sampling = False      # per-step executable choice
         self._insert = _insert_jit if self.donate else _insert_plain_jit
         self._set_slot = _set_slot_jit
@@ -338,10 +459,20 @@ class ServingEngine:
         # written and never donated)
         self._one_cache = model.init_cache(1, max_seq)
         if prefill_chunks is not None:
-            self._chunk_fn = _compiled_prefill_chunk(model, self.donate)
+            self._chunk_fn = (
+                _compiled_prefill_chunk_shared(model, self.donate)
+                if self.prefix_sharing
+                else _compiled_prefill_chunk(model, self.donate))
+        if self.prefix_sharing:
+            # recurrent families (SSD state / conv tail) can only fork at
+            # boundaries where the donor's state was checkpointed
+            self._needs_state_snapshot = bool(
+                getattr(model, "has_recurrent_state", False))
+            self._extract_state = _compiled_extract_state(model, False)
+            self._splice_state = _compiled_splice_state(model, self.donate)
         # decode-state buffers are donated into each step, so the queue
         # tracks the never-donated readback copy (out[-1]) for backpressure
-        self._queue = DispatchQueue(self._submit_decode, depth=depth,
+        self._queue = DispatchQueue(self._submit_decode, depth=self.depth,
                                     inflight_of=lambda out: out[-1])
         # readback copies of in-flight steps' tokens, with the slot→state
         # map seen at submit; per-slot admission generation guards against
@@ -357,8 +488,11 @@ class ServingEngine:
         self._prefill_shapes: set = set()
         self._prefill_tick = 0
         self.stats = {"decode_steps": 0, "prefills": 0, "prefill_chunks": 0,
-                      "prefill_compiles": 0, "tokens_out": 0, "requests": 0,
+                      "prefill_compiles": 0, "prefill_rows": 0,
+                      "tokens_out": 0, "requests": 0,
                       "sampled_requests": 0, "sampled_steps": 0,
+                      "forks": 0, "shared_prompt_tokens": 0,
+                      "prefix_hits": 0, "prefix_deferrals": 0,
                       "host_blocked_s": 0.0, "ttft_s": {}}
 
     def _submit_decode(self, state):
@@ -379,6 +513,17 @@ class ServingEngine:
 
     # -- intake --------------------------------------------------------------
     def submit(self, request: Request) -> RequestState:
+        # prompt-vs-arena validation happens here in *both* prefill modes:
+        # a monolithic prompt longer than the slot arena used to slip past
+        # this method (the splice's dynamic_update_slice clamps = silently
+        # shifts the write) and only get caught downstream by the
+        # scheduler's prompt+generation bound.  Same structured error
+        # either way.
+        need = request.prompt.shape[0] + self.prefix_extra + 1
+        if need > self.max_seq:
+            raise ValueError(
+                f"request {request.uid!r}: prompt needs {need} rows "
+                f"but a slot holds max_seq={self.max_seq}")
         plan = None
         if self.prefill_chunks is not None:
             plan = chunking.chunk_plan(request.prompt.shape[0],
@@ -391,6 +536,15 @@ class ServingEngine:
                     f"request {request.uid!r}: padded chunk plan {plan} "
                     f"needs {sum(plan)} rows but a slot holds "
                     f"max_seq={self.max_seq}")
+        if self.prefix_sharing:
+            # advisory index consult: admission keeps its conservative
+            # full-prompt reservation (the fork happens at first-chunk
+            # ingestion, against whatever pages are live *then*), but the
+            # hit statistic is visible to callers/benchmarks immediately
+            if self.cache_mgr.lookup(
+                    request.prompt, request.prompt.shape[0] - 1,
+                    require_snapshot=self._needs_state_snapshot):
+                self.stats["prefix_hits"] += 1
         st = self.scheduler.submit(request, chunk_plan=plan)
         st.submitted_at = time.perf_counter()
         self.stats["requests"] += 1
@@ -451,6 +605,14 @@ class ServingEngine:
         else:
             token0 = sampling.sample_first(logits, seed, pos0, sp)
         self._samp = sampling.write_slot(self._samp, slot, sp, seed)
+        if self.prefix_sharing:
+            # (re)write the slot's share vectors before it joins the
+            # decode batch: forks read their shared prefix rows from the
+            # donor's region, everyone else gets the identity mapping
+            src = st.share_src if st.share_src is not None else slot
+            self._share = _set_share_jit(self._share, jnp.int32(slot),
+                                         jnp.int32(src),
+                                         jnp.int32(st.share_len))
         # reading token0 syncs the host on this prefill only; in-flight
         # decode steps keep running on the device
         t0 = time.perf_counter()
@@ -500,6 +662,9 @@ class ServingEngine:
             if not states:
                 return
             oldest = min(states, key=lambda s: s.seq)
+            # the oldest PREFILLING slot never defers (deferral waits on a
+            # strictly older pure prefill), so this can only fork
+            self._maybe_fork(oldest)
             size = oldest.chunk_plan[oldest.chunk_idx]
             self._prefill_one_chunk(oldest, size)
             spent += size
@@ -508,9 +673,13 @@ class ServingEngine:
                             key=lambda s: (s.prefill_pos, s.seq))
             if not states:
                 return
+            progressed = False
             for st in states:
                 if st.status != Status.PREFILLING or st.slot is None:
                     continue        # departed via an earlier activation
+                if self._maybe_fork(st):
+                    continue        # deferred: an older donor is still
+                    #                 publishing this slot's prefix
                 size = st.chunk_plan[st.chunk_idx]
                 # always ingest at least one chunk per step (progress
                 # guarantee), then stay within the budget
@@ -518,6 +687,114 @@ class ServingEngine:
                     return
                 self._prefill_one_chunk(st, size)
                 spent += size
+                progressed = True
+            if not progressed:
+                return              # everything left is deferred
+
+    def _maybe_fork(self, st: RequestState) -> bool:
+        """At a slot's first ingestion under prefix sharing: try to remap
+        its leading pages onto a registered prefix chain (zero-ingestion
+        CoW fork).  Returns True if the slot should *defer* this round —
+        a strictly older pure prefill is still publishing a longer usable
+        prefix of this prompt (it progresses every step, so the wait is
+        bounded; if it departs, the deferral lapses)."""
+        if (not self.prefix_sharing or st.prefill_pos or st.share_len
+                or st.share_src is not None):
+            return False
+        mgr = self.cache_mgr
+        ps = mgr.page_size
+        plen = st.prompt_len
+        prompt = st.request.prompt
+        limit = plen - 1        # every fork ingests >= 1 real token
+        m = mgr.lookup(prompt, limit,
+                       require_snapshot=self._needs_state_snapshot)
+        m = self._trim_match(m, plen)
+        got = m.shared_len if m else 0
+        best_pending = 0
+        for other in self.scheduler.running.values():
+            if (other is st or other.status != Status.PREFILLING
+                    or other.slot is None or other.seq >= st.seq
+                    or other.share_len or other.share_src is not None):
+                continue
+            p = _common_prefix_len(other.request.prompt, prompt)
+            p = min(p, limit, other.prompt_len // ps * ps) // ps * ps
+            best_pending = max(best_pending, p)
+        if best_pending > got:
+            self.stats["prefix_deferrals"] += 1
+            return True
+        if not m:
+            return False
+        # page accounting: the fork swaps its first k private pages for
+        # the chain's k refcounted pages (freeing k to the pool) and may
+        # need extra tail pages when the re-cut plan's padding lands
+        # differently — make sure the pool covers that before committing
+        rows = m.shared_len + sum(chunking.tail_plan(plen, m.shared_len,
+                                                     self.prefill_chunks))
+        k = len(m.entries)
+        held = len(mgr.page_table(st.slot))
+        new_len = max(rows, mgr.length(st.slot))
+        extra = mgr.pages_for(new_len) - held
+        if extra > mgr.free_pages + k:
+            return False        # pool too tight to re-cut: ingest normally
+        res = mgr.fork(st.slot, m)
+        if not res:
+            return False
+        if extra > 0:
+            mgr.extend(st.slot, new_len)
+        if m.snapshot is not None:
+            # recurrent families: resume the SSD recurrence from the
+            # donor's checkpointed state at the divergence boundary
+            self._cache = self._splice_state(self._cache,
+                                             list(m.snapshot),
+                                             jnp.int32(st.slot))
+        st.share_src = res.src_slot
+        st.share_len = res.shared_len
+        st.chunk_plan = chunking.tail_plan(plen, res.shared_len,
+                                           self.prefill_chunks)
+        st.chunk_idx = 0
+        st.prefill_pos = res.shared_len
+        self.stats["forks"] += 1
+        self.stats["shared_prompt_tokens"] += res.shared_len
+        return False
+
+    def _trim_match(self, m: Optional[PrefixMatch],
+                    plen: int) -> Optional[PrefixMatch]:
+        """Cut a prefix match back until the shared pages plus the re-cut
+        tail plan fit the slot arena (tail padding can land past where the
+        full-prompt plan's did).  Recurrent families additionally re-trim
+        to a snapshot boundary."""
+        if m is None:
+            return None
+        entries = list(m.entries)
+        ps = self.cache_mgr.page_size
+        while entries:
+            sl = len(entries) * ps
+            rows = sl + sum(chunking.tail_plan(plen, sl,
+                                               self.prefill_chunks))
+            if rows <= self.max_seq:
+                break
+            entries.pop()
+            if self._needs_state_snapshot:
+                while entries and entries[-1].snapshot is None:
+                    entries.pop()
+        if not entries:
+            return None
+        return PrefixMatch(entries=tuple(entries),
+                           src_slot=m.src_slot,
+                           shared_len=len(entries) * ps)
+
+    def _register_prefix(self, st: RequestState) -> None:
+        """Publish a pure slot's ingested prefix pages into the index so
+        later arrivals can fork onto them.  Recurrent families checkpoint
+        the slot's state at page-aligned chunk boundaries — the only
+        points a fork can resume the recurrence from."""
+        upto = min(st.prefill_pos, st.prompt_len)
+        ps = self.cache_mgr.page_size
+        snap = None
+        if self._needs_state_snapshot and upto and upto % ps == 0:
+            snap = self._extract_state(self._cache, jnp.int32(st.slot))
+        self.cache_mgr.register_prefix(st.slot, st.request.prompt, upto,
+                                       snapshot=snap)
 
     def _prefill_one_chunk(self, st: RequestState, size: int) -> None:
         req = st.request
@@ -532,13 +809,23 @@ class ServingEngine:
         # valid length (pad positions are masked out of the SSD state
         # recurrence); the final chunk's logits are taken there.
         last_idx = real - 1
-        logits, self._cache = self._chunk_fn(
-            self.params, self._cache, jnp.asarray(chunk)[None, :],
-            jnp.int32(st.slot), jnp.int32(start), jnp.int32(last_idx))
+        if self.prefix_sharing:
+            src = st.share_src if st.share_src is not None else st.slot
+            logits, self._cache = self._chunk_fn(
+                self.params, self._cache, jnp.asarray(chunk)[None, :],
+                jnp.int32(st.slot), jnp.int32(start), jnp.int32(last_idx),
+                jnp.int32(src), jnp.int32(st.share_len))
+        else:
+            logits, self._cache = self._chunk_fn(
+                self.params, self._cache, jnp.asarray(chunk)[None, :],
+                jnp.int32(st.slot), jnp.int32(start), jnp.int32(last_idx))
         self.stats["prefill_chunks"] += 1
+        self.stats["prefill_rows"] += size
         self._note_prefill_shape(("chunk", size))
         st.prefill_pos = start + size
         st.chunk_idx += 1
+        if self.prefix_sharing and st.share_src is None:
+            self._register_prefix(st)
         if not is_last:
             return
         # final chunk: sample the first token and join the decode batch
@@ -564,11 +851,17 @@ class ServingEngine:
                                  for st in running)
         state = (self._tokens, self._cache, self._pos, self._active,
                  self._samp)
+        if self.prefix_sharing:
+            state = state + (self._share,)
         out = self._queue.submit(state)
         # rebind to the outputs: the submitted buffers were donated and are
         # dead from here on
-        (self._tokens, self._cache, self._pos, self._active, self._samp,
-         read) = out
+        if self.prefix_sharing:
+            (self._tokens, self._cache, self._pos, self._active, self._samp,
+             self._share, read) = out
+        else:
+            (self._tokens, self._cache, self._pos, self._active, self._samp,
+             read) = out
         self.stats["decode_steps"] += 1
         snapshot = {slot: (st, self._slot_gen[slot])
                     for slot, st in self.scheduler.running.items()}

@@ -66,9 +66,27 @@ class RequestState:
     chunk_plan: Optional[list] = None     # bucket-sized chunk lengths
     chunk_idx: int = 0                    # next chunk to ingest
     prefill_pos: int = 0                  # prompt tokens already in cache
+    # prefix-sharing bookkeeping (engine-owned).  A *forked* request reads
+    # its first ``share_len`` cache rows from slot ``share_src``'s arena
+    # region (the donor's refcounted prefix pages); its chunk plan is
+    # re-cut to the unshared tail.  ``base_chunk_plan`` keeps the full
+    # plan so preemption can rewind to an unforked state (re-admission
+    # re-forks against whatever prefix pages are live *then*).
+    share_src: Optional[int] = None       # donor region (None = unshared)
+    share_len: int = 0                    # tokens read via shared pages
+    base_chunk_plan: Optional[list] = None
+
     # service-time bookkeeping (engine-owned)
     submitted_at: Optional[float] = None  # perf_counter at engine.submit
     ttft_s: Optional[float] = None        # submit -> first sampled token
+
+    def reset_share(self) -> None:
+        """Rewind to the unforked state (preemption): the full-prompt
+        chunk plan is restored, the share mapping cleared."""
+        self.share_src = None
+        self.share_len = 0
+        if self.base_chunk_plan is not None:
+            self.chunk_plan = self.base_chunk_plan
 
     @property
     def done(self) -> bool:

@@ -71,7 +71,8 @@ class Scheduler:
             raise ValueError(
                 f"request {request.uid!r} needs {worst} cache rows but a "
                 f"slot holds max_seq={self.max_len}")
-        st = RequestState(request, seq=self._next_seq, chunk_plan=chunk_plan)
+        st = RequestState(request, seq=self._next_seq, chunk_plan=chunk_plan,
+                          base_chunk_plan=chunk_plan)
         self._next_seq += 1
         self.waiting.append(st)
         return st
@@ -102,10 +103,22 @@ class Scheduler:
             need = st.prompt_len + self.prefix_extra + 1
             if st.chunk_plan is not None:
                 need = max(need, sum(st.chunk_plan))
-            slot = self._free_slots[0]     # smallest free slot: deterministic
-            if not self.cache.allocate(slot, need):
-                break                      # head-of-line blocks: no pages yet
-            heapq.heappop(self._free_slots)
+            # smallest free slot first: deterministic.  A slot whose arena
+            # region is pinned (it hosts live shared prefix pages of a
+            # departed donor) is skipped — another region serves just as
+            # well; only page exhaustion blocks the head of the line.
+            slot = None
+            for cand in sorted(self._free_slots):
+                res = self.cache.allocate(cand, need)
+                if res:
+                    slot = cand
+                    break
+                if res.reason != "region-pinned":
+                    break                  # no pages yet
+            if slot is None:
+                break                      # head-of-line blocks
+            self._free_slots.remove(slot)
+            heapq.heapify(self._free_slots)
             self.waiting.popleft()
             st.slot = slot
             st.status = Status.PREFILLING if self.chunked else Status.RUNNING
@@ -172,13 +185,18 @@ class Scheduler:
         and regenerated from the prompt, and there is no RNG cursor to
         rewind here.  A victim caught *mid-prefill* rewinds its chunk
         cursor to 0: the plan is kept (it is a pure function of prompt
-        length), so re-admission replays the identical chunk sequence."""
+        length), so re-admission replays the identical chunk sequence.  A
+        forked victim additionally rewinds to the *unforked* state — its
+        shared-page references were just dropped by the release; the full
+        chunk plan is restored and re-admission re-forks against whatever
+        prefix pages are live then (or ingests everything itself)."""
         slot = st.slot
         self._release(st)
         st.status = Status.WAITING
         st.generated.clear()
         st.chunk_idx = 0
         st.prefill_pos = 0
+        st.reset_share()
         idx = 0
         for w in self.waiting:
             if w.seq > st.seq:

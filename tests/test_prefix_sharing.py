@@ -1,0 +1,367 @@
+"""Prefix-sharing copy-on-write KV arena + the EngineConfig surface.
+
+Manager level: page refcounts, the hash-consed prefix index, fork/free/
+region-pinning invariants.  Engine level: CoW token identity against the
+sharing-off baseline (dense + every chunked family), shared pages
+surviving the donor's retirement and preemption, prompt validation in
+both prefill modes, and the legacy-kwargs deprecation shim behaving
+identically to ``config=EngineConfig(...)``.
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+import repro.runtime.serving as serving
+from repro.configs.base import ArchConfig
+from repro.models import registry
+from repro.runtime.serving import (EngineConfig, PagedKVCacheManager,
+                                   Request, ServingEngine)
+
+TINY = ArchConfig(name="tiny-prefix-dense", family="dense", n_layers=2,
+                  d_model=32, n_heads=4, n_kv_heads=2, d_ff=64, vocab=97,
+                  head_dim=8, param_dtype="float32", act_dtype="float32",
+                  max_seq=64)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    model = registry.build_model(TINY)
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+    return model, params
+
+
+# ---------------------------------------------------------------------------
+# manager: refcounts, index, fork, pinning (pure host logic)
+# ---------------------------------------------------------------------------
+
+def test_refcounts_through_allocate_fork_extend_free():
+    m = PagedKVCacheManager(num_pages=8, page_size=4)
+    tokens = np.arange(12, dtype=np.int32)
+    assert m.allocate(0, 12)                       # 3 private pages
+    assert all(m.refcount(p) == 1 for p in m.page_table(0))
+    assert m.register_prefix(0, tokens, 12) == 3
+    assert m.register_prefix(0, tokens, 12) == 0   # idempotent
+
+    match = m.lookup(tokens, 12)
+    assert match and match.shared_len == 12
+    assert match.pages == m.page_table(0)
+
+    assert m.allocate(1, 16)                       # 4 private pages
+    res = m.fork(1, match)
+    assert res and res.shared == match.pages
+    assert len(res.freed) == 3                     # private head released
+    assert res.shared_len == 12 and res.src_slot == 0
+    assert m.page_table(1)[:3] == match.pages
+    assert all(m.refcount(p) == 2 for p in match.pages)
+    assert m.free_pages == 4                       # 8 - 3 - 4 + 3 released
+    assert m.stats["forks"] == 1 and m.stats["max_page_ref"] == 2
+
+    assert m.extend(1, 20)                         # private tail grows
+    assert all(m.refcount(p) == 2 for p in match.pages)
+
+    # donor retires: its registered pages stay live via the fork
+    fr = m.free(0)
+    assert set(fr.retained) == set(match.pages) and fr.freed == ()
+    assert all(m.refcount(p) == 1 for p in match.pages)
+
+    # the departed donor's region is pinned while its pages are shared
+    assert m.region_pinned(0)
+    refused = m.allocate(0, 4)
+    assert not refused and refused.reason == "region-pinned"
+
+    # last holder drains: pages pool, region unpins, index entries die
+    m.free(1)
+    assert m.free_pages == 8
+    assert not m.region_pinned(0)
+    assert m.lookup(tokens, 12) is None
+    assert m.allocate(0, 4)
+
+
+def test_lookup_contiguity_divergence_and_snapshot_trim():
+    m = PagedKVCacheManager(num_pages=8, page_size=4)
+    tokens = np.arange(12, dtype=np.int32)
+    assert m.allocate(0, 12)
+    # snapshot published at the 8-token boundary, third page without one
+    m.register_prefix(0, tokens, 8, snapshot=["state@8"])
+    m.register_prefix(0, tokens, 12)
+
+    assert m.lookup(tokens, 12).shared_len == 12
+    assert m.lookup(tokens, 11).shared_len == 8    # limit floors to pages
+    snap = m.lookup(tokens, 12, require_snapshot=True)
+    assert snap.shared_len == 8 and snap.snapshot == ["state@8"]
+
+    # divergence mid-page breaks the chain at the page boundary before it
+    other = tokens.copy()
+    other[5] = 96
+    assert m.lookup(other, 12).shared_len == 4
+    other[2] = 96
+    assert m.lookup(other, 12) is None
+
+
+def test_fork_refuses_stale_match():
+    m = PagedKVCacheManager(num_pages=8, page_size=4)
+    tokens = np.arange(8, dtype=np.int32)
+    assert m.allocate(0, 8)
+    m.register_prefix(0, tokens, 8)
+    match = m.lookup(tokens, 8)
+    m.free(0)                        # refcount 1 -> 0: pages + index die
+    assert m.allocate(1, 8)
+    res = m.fork(1, match)
+    assert not res and res.reason == "no-prefix"
+    assert all(m.refcount(p) == 1 for p in m.page_table(1))
+
+
+def test_retained_chain_outlives_donor_and_serves_new_forks():
+    """Eviction survival: after the donor is freed, the still-referenced
+    chain keeps serving lookups and forks for later arrivals."""
+    m = PagedKVCacheManager(num_pages=12, page_size=4)
+    tokens = np.arange(8, dtype=np.int32)
+    assert m.allocate(0, 8)
+    m.register_prefix(0, tokens, 8)
+    assert m.allocate(1, 12)
+    assert m.fork(1, m.lookup(tokens, 8))
+    m.free(0)                        # donor evicted; fork keeps the chain
+
+    match = m.lookup(tokens, 8)
+    assert match and match.shared_len == 8
+    assert m.allocate(2, 12)
+    assert m.fork(2, match)
+    assert all(m.refcount(p) == 2 for p in match.pages)
+    assert m.stats["max_page_ref"] == 2
+
+
+# invariant helpers shared by the random-walk and hypothesis drivers ------
+
+def _check_invariants(m: PagedKVCacheManager):
+    free = set(m._free)
+    held = {}
+    for slot in list(m._table):
+        for p in m.page_table(slot):
+            held[p] = held.get(p, 0) + 1
+    # a page is in the pool XOR referenced; refcount == holder count
+    assert not (free & set(held)), "pooled page still referenced"
+    assert len(free) + len(held) == m.num_pages
+    for p, n in held.items():
+        assert m.refcount(p) == n, (p, n, m.refcount(p))
+    for p in free:
+        assert m.refcount(p) == 0
+
+
+def _random_walk(m: PagedKVCacheManager, steps, rng_ints):
+    """Interleaved submit(allocate+register)/fork/extend/free(preempt or
+    complete) driver; ``rng_ints(n)`` yields ints in [0, n)."""
+    prompts = [np.arange(16, dtype=np.int32),
+               np.concatenate([np.arange(8), 50 + np.arange(8)])
+               .astype(np.int32),
+               np.arange(100, 116, dtype=np.int32)]
+    slots = list(range(6))
+    for _ in range(steps):
+        op = rng_ints(4)
+        slot = slots[rng_ints(len(slots))]
+        occupied = slot in m._table
+        if op == 0 and not occupied:               # admit
+            prompt = prompts[rng_ints(len(prompts))]
+            if m.allocate(slot, len(prompt)):
+                upto = (rng_ints(len(prompt) + 1)
+                        // m.page_size * m.page_size)
+                m.register_prefix(slot, prompt, upto)
+        elif op == 1 and occupied:                 # fork onto a chain
+            prompt = prompts[rng_ints(len(prompts))]
+            match = m.lookup(prompt, m.length(slot))
+            if match and len(match.entries) <= len(m.page_table(slot)) \
+                    and slot != match.src_slot:
+                m.fork(slot, match)
+        elif op == 2 and occupied:                 # decode growth
+            m.extend(slot, m.length(slot) + 1 + rng_ints(4))
+        elif op == 3 and occupied:                 # preempt / complete
+            m.free(slot)
+        _check_invariants(m)
+
+
+def test_random_interleave_never_frees_referenced_page():
+    rng = np.random.default_rng(42)
+    for _ in range(20):
+        m = PagedKVCacheManager(num_pages=10, page_size=4)
+        _random_walk(m, 60, lambda n: int(rng.integers(n)))
+
+
+def test_hypothesis_interleave_invariants():
+    hyp = pytest.importorskip(
+        "hypothesis", reason="hypothesis not installed")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(st.lists(st.integers(min_value=0, max_value=10 ** 6),
+                        min_size=1, max_size=200))
+    @hyp.settings(max_examples=50, deadline=None)
+    def run(seq):
+        it = iter(seq)
+        m = PagedKVCacheManager(num_pages=10, page_size=4)
+        _random_walk(m, len(seq), lambda n: next(it, 0) % n)
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# engine: CoW token identity + survival across the donor's lifetime
+# ---------------------------------------------------------------------------
+
+def _shared_prompts(vocab, n, shared, tail, rng):
+    head = rng.integers(0, vocab, shared).astype(np.int32)
+    return [np.concatenate([head,
+                            rng.integers(0, vocab, tail).astype(np.int32)])
+            for _ in range(n)]
+
+
+def _run(model, cfg, params, prompts, gens, *, sharing, slots=None,
+         num_pages=None, depth=2):
+    page, buckets = 4, (4, 8, 16)
+    max_seq = max(len(p) for p in prompts) + max(gens) + page + 1
+    eng = ServingEngine(model, cfg, params, config=EngineConfig(
+        max_slots=slots or len(prompts), max_seq=max_seq, depth=depth,
+        page_size=page, num_pages=num_pages, prefill_chunks=buckets,
+        prefix_sharing=sharing))
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=gens[i]))
+    out = eng.run()
+    return {i: out[i].tolist() for i in range(len(prompts))}, eng
+
+
+def test_cow_token_identity_dense(tiny_model):
+    model, params = tiny_model
+    rng = np.random.default_rng(5)
+    prompts = _shared_prompts(TINY.vocab, 3, 16, 4, rng)
+    gens = [6, 6, 6]
+    out_on, eng = _run(model, TINY, params, prompts, gens, sharing=True)
+    out_off, _ = _run(model, TINY, params, prompts, gens, sharing=False)
+    assert out_on == out_off
+    assert eng.stats["forks"] == 2
+    assert eng.stats["shared_prompt_tokens"] == 2 * 16
+    assert eng.cache_mgr.stats["max_page_ref"] == 3
+    # shared prefix ingested once: donor's full plan + two 4-token tails
+    assert eng.stats["prefill_rows"] == 20 + 2 * 4
+
+
+def test_cow_token_identity_families(family_model):
+    """MoE (position-addressed), SSM (pure recurrent-state snapshot), and
+    hybrid (both) forks are bit-identical to the unshared baseline."""
+    cfg, model, params = family_model
+    if not model.supports_prefix_sharing:
+        pytest.skip(f"{cfg.family}: no prefix sharing")
+    rng = np.random.default_rng(9)
+    prompts = _shared_prompts(cfg.vocab, 3, 16, 4, rng)
+    gens = [5, 5, 5]
+    out_on, eng = _run(model, cfg, params, prompts, gens, sharing=True)
+    out_off, _ = _run(model, cfg, params, prompts, gens, sharing=False)
+    assert out_on == out_off
+    assert eng.stats["forks"] == 2
+    assert eng.cache_mgr.stats["max_page_ref"] == 3
+
+
+def test_shared_pages_survive_donor_retirement(tiny_model):
+    """The donor finishes (and frees its slot) while two forks still read
+    its pages: tokens stay identical to sharing-off, every page drains by
+    refcount at the end, and nothing is freed while referenced."""
+    model, params = tiny_model
+    rng = np.random.default_rng(6)
+    prompts = _shared_prompts(TINY.vocab, 3, 16, 4, rng)
+    gens = [2, 10, 10]               # donor retires first
+    out_on, eng = _run(model, TINY, params, prompts, gens, sharing=True)
+    out_off, _ = _run(model, TINY, params, prompts, gens, sharing=False)
+    assert out_on == out_off
+    assert eng.stats["forks"] == 2
+    m = eng.cache_mgr
+    assert m.free_pages == m.num_pages       # all refcounts drained
+    assert not any(m.region_pinned(s) for s in range(eng.max_slots))
+
+
+def test_shared_pages_survive_donor_preemption(tiny_model):
+    """Page pressure evicts the youngest resident mid-run; recompute after
+    a fork (rewound cursor, re-fork against whatever chains survive) stays
+    token-identical to the unshared engine under the same pressure."""
+    model, params = tiny_model
+    rng = np.random.default_rng(7)
+    prompts = _shared_prompts(TINY.vocab, 4, 16, 4, rng)
+    gens = [12, 12, 12, 12]
+    out_on, eng = _run(model, TINY, params, prompts, gens, sharing=True,
+                       slots=3, num_pages=14, depth=0)
+    out_off, _ = _run(model, TINY, params, prompts, gens,
+                      sharing=False, slots=3, num_pages=14, depth=0)
+    assert out_on == out_off
+    assert eng.scheduler.stats["preempted"] >= 1
+    assert eng.stats["forks"] >= 3           # the preempted fork re-forked
+    m = eng.cache_mgr
+    assert m.free_pages == m.num_pages
+
+
+# ---------------------------------------------------------------------------
+# submit validation + the EngineConfig construction surface
+# ---------------------------------------------------------------------------
+
+def test_submit_rejects_oversized_prompt_both_modes(tiny_model):
+    model, params = tiny_model
+    long_prompt = np.zeros(32, np.int32)      # needs 33 rows > 24
+    for chunks in (None, (8, 16)):
+        eng = ServingEngine(model, TINY, params, config=EngineConfig(
+            max_slots=2, max_seq=24, prefill_chunks=chunks))
+        with pytest.raises(ValueError, match="rows but a slot holds"):
+            eng.submit(Request(uid="big", prompt=long_prompt,
+                               max_new_tokens=2))
+        assert eng.stats["requests"] == 0     # nothing enqueued
+
+
+def test_legacy_kwargs_warn_and_match_config(tiny_model):
+    model, params = tiny_model
+    rng = np.random.default_rng(8)
+    prompts = [rng.integers(0, TINY.vocab, n).astype(np.int32)
+               for n in (7, 11)]
+    fields = dict(max_slots=2, max_seq=32, depth=1, page_size=4,
+                  prefill_chunks=(4, 8))
+
+    def run(eng):
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p, max_new_tokens=5))
+        return {i: eng.run()[i].tolist() for i in range(len(prompts))}
+
+    with pytest.warns(DeprecationWarning, match="EngineConfig"):
+        legacy = ServingEngine(model, TINY, params, **fields)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")        # config path must not warn
+        modern = ServingEngine(model, TINY, params,
+                               config=EngineConfig(**fields))
+    assert legacy.config == modern.config == EngineConfig(**fields)
+    assert run(legacy) == run(modern)
+
+    with pytest.raises(TypeError, match="not both"):
+        ServingEngine(model, TINY, params, config=EngineConfig(),
+                      max_slots=2)
+
+
+def test_engineconfig_validation_and_replace():
+    cfg = EngineConfig(max_slots=4, prefill_chunks=(8, 16))
+    assert cfg.replace(depth=0).depth == 0
+    assert cfg.replace(depth=0) != cfg        # frozen value object
+    with pytest.raises(ValueError):
+        EngineConfig(prefix_sharing=True)     # needs prefill_chunks
+    with pytest.raises(ValueError):
+        EngineConfig(max_slots=0)
+    with pytest.raises(ValueError):
+        EngineConfig(donate="sometimes")
+    with pytest.raises(ValueError):
+        EngineConfig(prefill_chunks=(0, 8))
+
+
+def test_public_surface():
+    """The serving contract is __all__; engine internals stay importable
+    from their submodules but are no longer advertised."""
+    for name in ("EngineConfig", "ServingEngine", "PagedKVCacheManager",
+                 "AllocResult", "PrefixMatch", "DEFAULT_BUCKETS"):
+        assert name in serving.__all__
+        assert hasattr(serving, name)
+    for internal in ("cache_insert", "chunk_plan", "padded_len",
+                     "tail_plan"):
+        assert internal not in serving.__all__
+    from repro.runtime.serving.cache import cache_insert        # noqa: F401
+    from repro.runtime.serving.chunking import (chunk_plan,     # noqa: F401
+                                                tail_plan)
