@@ -1,6 +1,8 @@
-"""Cross-run trend gate: diff a benchmark JSON against the previous run.
+"""Cross-run trend gate: diff a benchmark JSON against the previous run,
+plus a rolling-window drift watch over the cached artifact history.
 
 ``python benchmarks/trend.py --current BENCH_smoke.json --previous prev.json``
+``python benchmarks/trend.py --current BENCH_smoke.json --history ci/bench/``
 
 ``run.py --json`` dumps every table/claim/note per run; CI keeps the
 previous PR's artifact and feeds both files here.  The gate is asymmetric
@@ -20,15 +22,26 @@ A claim that passed previously and fails now is always a hard failure
 (run.py already fails the run on any failing claim; this catches the
 cross-run direction explicitly in the diff output).
 
-A missing previous artifact is tolerated (exit 0): the first run on a
-branch, or an expired CI cache, just seeds the trend.
+The pairwise diff is blind to slow drift: a timing column can lose a few
+percent per PR and never trip a single-run warning.  ``--history DIR``
+adds the rolling window — the last ``--window`` ``BENCH_*.json``
+artifacts by mtime — and compares each timing column of the current run
+against the window **median**, which rides out single-run container
+spikes in a way the previous-run pair cannot.  Rolling drift is
+warn-only for the same reason single-run timing drift is: it flags
+"look here", it never gates.
+
+A missing previous artifact (or an empty history directory) is tolerated
+(exit 0): the first run on a branch, or an expired CI cache, just seeds
+the trend.
 """
 from __future__ import annotations
 
 import argparse
+import glob
 import json
 import os
-import sys
+import statistics
 
 # substrings marking a column as load-dependent timing (warn-only)
 _TIMING = ("_s", "_ms", "tokens_per_s", "ttft", "wall", "idle",
@@ -94,18 +107,92 @@ def diff(current: dict, previous: dict, *, tolerance: float):
     return regressions, warnings, improvements
 
 
+def load_history(history_dir: str, window: int, *, exclude=()):
+    """The last ``window`` ``BENCH_*.json`` artifacts under ``history_dir``
+    by mtime (newest first), parsed.  ``exclude`` paths (the current run's
+    artifact, if it already landed in the cache dir) are skipped, as is
+    anything unparseable — a truncated upload must not kill the watch."""
+    skip = {os.path.abspath(p) for p in exclude}
+    paths = [p for p in glob.glob(os.path.join(history_dir, "BENCH_*.json"))
+             if os.path.abspath(p) not in skip]
+    paths.sort(key=os.path.getmtime, reverse=True)
+    docs = []
+    for p in paths[:window]:
+        try:
+            with open(p) as f:
+                docs.append(json.load(f))
+        except (OSError, json.JSONDecodeError):
+            print(f"  (skipping unreadable artifact {p})")
+    return docs
+
+
+def rolling(current: dict, history: list, *, tolerance: float):
+    """Warn lines for timing columns drifting beyond ``tolerance`` against
+    the window median.  Median, not mean: one noisy run in the window must
+    not move the reference; warn-only, because the container's load swings
+    are exactly what the window exists to ride out."""
+    series: dict = {}
+    for doc in history:
+        for name, rows in doc.get("tables", {}).items():
+            for key, row in _rows_by_key(rows).items():
+                for col, val in row.items():
+                    v = _numeric(val)
+                    if v is not None and _is_timing(col):
+                        series.setdefault((name, key, col), []).append(v)
+    warnings = []
+    for name, rows in current.get("tables", {}).items():
+        for key, row in _rows_by_key(rows).items():
+            for col, val in row.items():
+                cur = _numeric(val)
+                if cur is None or not _is_timing(col):
+                    continue
+                hist = series.get((name, key, col))
+                if not hist:
+                    continue
+                med = statistics.median(hist)
+                delta = (cur - med) / max(abs(med), 1e-9)
+                if abs(delta) > tolerance:
+                    warnings.append(
+                        f"{name}[{key}].{col}: median-of-{len(hist)} "
+                        f"{med:g} -> {cur:g} ({delta:+.0%})")
+    return warnings
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--current", required=True,
                     help="this run's run.py --json artifact")
-    ap.add_argument("--previous", required=True,
+    ap.add_argument("--previous", default=None,
                     help="previous run's artifact (missing file tolerated)")
+    ap.add_argument("--history", default=None, metavar="DIR",
+                    help="directory of cached BENCH_*.json artifacts for "
+                         "the rolling-window timing watch (warn-only)")
+    ap.add_argument("--window", type=int, default=5,
+                    help="artifacts in the rolling window (default 5)")
     ap.add_argument("--tolerance", type=float, default=0.2,
                     help="relative drift allowed before flagging (0.2=20%%)")
     args = ap.parse_args(argv)
+    if args.previous is None and args.history is None:
+        ap.error("need --previous and/or --history")
 
     with open(args.current) as f:
         current = json.load(f)
+
+    rolled = []
+    if args.history is not None:
+        history = load_history(args.history, args.window,
+                               exclude=(args.current,))
+        rolled = rolling(current, history, tolerance=args.tolerance)
+        for line in rolled:
+            print("  warn (rolling median, not gated):", line)
+        if not history:
+            print(f"trend: no artifacts under {args.history}; "
+                  f"rolling window starts with this run")
+
+    if args.previous is None:
+        print(f"trend: rolling watch only "
+              f"({len(rolled)} timing drift(s), never gated)")
+        return 0
     if not os.path.exists(args.previous):
         print(f"trend: no previous artifact at {args.previous}; "
               f"seeding trend from {args.current}")
@@ -126,7 +213,8 @@ def main(argv=None):
               f"beyond {args.tolerance:.0%}")
         return 1
     print(f"trend: no gated regression vs previous "
-          f"({len(warnings)} timing drift(s) ignored)")
+          f"({len(warnings)} timing drift(s) ignored, "
+          f"{len(rolled)} rolling)")
     return 0
 
 

@@ -50,7 +50,33 @@ import numpy as np
 
 from repro.models import registry
 from repro.runtime.serving import (DEFAULT_BUCKETS, EngineConfig, GREEDY,
-                                   Request, SamplingParams, ServingEngine)
+                                   Request, SamplingParams, ServingEngine,
+                                   SpecConfig)
+
+
+def parse_speculative(text: str) -> SpecConfig:
+    """Parse ``--speculative draft=<arch>:k=<n>[:k-max=<n>][:adaptive=0|1]``
+    into a :class:`SpecConfig`.  ``draft`` is a registry arch name (built
+    reduced, sharing the target's vocab family)."""
+    fields: dict = {}
+    for part in text.split(":"):
+        key, sep, val = part.partition("=")
+        if not sep:
+            raise ValueError(f"--speculative: expected key=value, got {part!r}")
+        key = key.replace("-", "_")
+        if key == "draft":
+            fields[key] = val
+        elif key in ("k", "k_max", "window", "draft_seed"):
+            fields[key] = int(val)
+        elif key == "adaptive":
+            fields[key] = bool(int(val))
+        elif key in ("low", "high", "ema"):
+            fields[key] = float(val)
+        else:
+            raise ValueError(f"--speculative: unknown key {key!r}")
+    if "draft" not in fields:
+        raise ValueError("--speculative requires draft=<arch>")
+    return SpecConfig(**fields)
 
 
 def make_engine(bundle, params, *, config: EngineConfig = None,
@@ -113,6 +139,18 @@ def report_stats(eng: ServingEngine) -> None:
               f"prefill_rows={stats['prefill_rows']} "
               f"(pages: registered={ps['registered_pages']} "
               f"shared={ps['shared_pages']} max_ref={ps['max_page_ref']})")
+    if getattr(eng, "spec", None) is not None:
+        sp = eng.spec.stats
+        # acceptance-rate stats sit next to the sampler stats above: both
+        # report the per-request determinism surface (keys fold (seed,
+        # position); acceptance compares the target's own replayed draws)
+        print(f"speculative: k={eng.spec.k} "
+              f"accepted={sp['accepted']}/{sp['proposed']} proposals "
+              f"(rate={eng.spec.acceptance_rate:.3f}) "
+              f"rounds={sp['rounds']} resamples={sp['resamples']} "
+              f"k_changes={sp['k_changes']} "
+              f"verify_compiles={stats['spec_verify_compiles']} "
+              f"draft_steps={stats['spec_draft_steps']}")
     if ttft:
         print(f"ttft_s: mean={np.mean(ttft):.4f} "
               f"p50={_percentile(ttft, 50):.4f} "
@@ -195,6 +233,12 @@ def main(argv=None):
     p.add_argument("--sampling-mix", type=float, default=1.0,
                    help="fraction of requests that sample (evenly spread); "
                         "the rest decode greedily")
+    p.add_argument("--speculative", default=None, metavar="SPEC",
+                   help="speculative decoding: draft=<arch>:k=<n>"
+                        "[:k-max=<n>][:adaptive=0|1] — a reduced registry "
+                        "arch proposes k tokens/round, the target verifies "
+                        "them in one chunk-shaped step; output streams stay "
+                        "bit-identical to plain decode")
     p.add_argument("--reduced", action="store_true", default=True)
     args = p.parse_args(argv)
 
@@ -254,7 +298,9 @@ def main(argv=None):
         num_pages=args.pages, prefill_chunks=chunks,
         prefill_budget=args.prefill_budget,
         prefix_sharing=args.prefix_sharing, donate=donate,
-        base_seed=args.seed))
+        base_seed=args.seed,
+        speculative=(parse_speculative(args.speculative)
+                     if args.speculative else None)))
     plan = sampling_plan(args.requests, temperature=args.temperature,
                          top_k=args.top_k, top_p=args.top_p,
                          min_p=args.min_p, seed=args.seed,

@@ -328,8 +328,15 @@ def attention_chunk(p: dict, cfg, x: jax.Array, slot_kv: dict,
     q, k, v = _project_qkv(p, cfg, x, positions, rules)
     k_rows = k.astype(slot_kv["k"].dtype)
     v_rows = v.astype(slot_kv["v"].dtype)
-    ck = jax.lax.dynamic_update_slice(slot_kv["k"], k_rows, (0, start, 0, 0))
-    cv = jax.lax.dynamic_update_slice(slot_kv["v"], v_rows, (0, start, 0, 0))
+    # Scatter, not dynamic_update_slice: a speculative verify chunk may
+    # overrun the slot's last rows (start + C > Smax), and DUS would CLAMP
+    # the start so the window fits — shifting every patched row down and
+    # corrupting the view's committed prefix.  Scatter drops the overflow
+    # rows instead and lands each in-bounds row at its true position, so
+    # every draw a request can still commit (q-pos < Smax) stays bit-exact.
+    rows_idx = start + jnp.arange(c)
+    ck = slot_kv["k"].at[:, rows_idx].set(k_rows)
+    cv = slot_kv["v"].at[:, rows_idx].set(v_rows)
     prefix = jnp.full((b,), start, jnp.int32)
     o = ops.flash_prefill_chunk(q, ck, cv, prefix=prefix, window=window)
     out = _dot(o.reshape(b, c, -1), p["wo"], cfg.adtype)

@@ -590,11 +590,26 @@ class LM:
             raise NotImplementedError(
                 f"chunked prefill not supported for family "
                 f"{self.cfg.family!r}")
+        h, new_cache = self._chunk_hidden(params, tokens, cache, slot, start,
+                                          last_idx + 1, share_src=share_src,
+                                          share_len=share_len)
+        last = lax.dynamic_slice_in_dim(h, last_idx, 1, axis=1)[:, 0]
+        logits = jnp.dot(last, self.head(params),
+                         preferred_element_type=jnp.float32)
+        logits = lanes.constrain(logits, self.rules, "batch", "vocab_tp")
+        return logits, new_cache
+
+    def _chunk_hidden(self, params, tokens, cache, slot, start, nvalid,
+                      share_src=None, share_len=None):
+        """Shared chunk-scan body of :meth:`prefill_chunk` and
+        :meth:`verify_chunk`: embed the chunk, run every layer's chunk hook
+        against the slot's read-only arena view, write the emissions back
+        with one ``chunk_scatter``, and return the final-norm hidden states
+        for *all* C rows (the caller picks which rows become logits)."""
         cfg = self.cfg
         b, c = tokens.shape
         x = L.embed_lookup(params["embed"], tokens, self.rules)
         positions = jnp.broadcast_to(start + jnp.arange(c), (b, c))
-        nvalid = last_idx + 1
         layer_xs = self._layer_xs_fn(cfg) if self._layer_xs_fn else None
         if share_src is None:
             slot_view = self._slot_view(cache, slot)
@@ -617,11 +632,44 @@ class LM:
             else (params["layers"], slot_view, layer_xs)
         x, emits = lax.scan(block, x, xs)
         new_cache = self._chunk_scatter(cache, emits, slot, start)
-        h = L.rmsnorm(params["final_norm"], x, cfg.rms_eps)
-        last = lax.dynamic_slice_in_dim(h, last_idx, 1, axis=1)[:, 0]
-        logits = jnp.dot(last, self.head(params),
+        return L.rmsnorm(params["final_norm"], x, cfg.rms_eps), new_cache
+
+    def verify_chunk(self, params, tokens, cache, slot, start):
+        """Speculative-verify driver: run C already-proposed tokens through
+        slot ``slot`` exactly like a prompt chunk, but emit the logits of
+        *every* row — row j (predicting absolute position ``start + 1 + j``)
+        is what the target model would have produced decoding that position
+        one token at a time, bit-identically: the chunk path and the decode
+        path share the same blockwise online-softmax attention over the
+        same mask set (``ops.flash_prefill_chunk`` row j at q-position
+        ``start + j`` attends exactly the keys ``ops.flash_decode`` at
+        ``pos = start + j`` does), so the verify pass *is* a replay of k
+        sequential decode steps at chunk cost.
+
+        tokens: (B=1, C) — the slot's current token followed by the first
+        C-1 draft proposals; never padded, so ``nvalid = C``.  The chunk's
+        K/V rows are scattered into rows [start, start + C) of the slot —
+        rows past the accepted prefix hold rejected-token K/V, which is
+        dead by construction: the next round's chunk starts at the rewound
+        position and overwrites them before any row past ``pos`` is ever
+        attended (causal masking reads only rows < the query position, and
+        committable positions are bounded by the scheduler's
+        prompt+max_new admission check).  Rollback therefore costs nothing
+        on device — it is the host rewinding its position cursor.
+
+        Returns (logits (B, C, V) f32, new_cache).
+        """
+        if not self.supports_chunked_prefill:
+            raise NotImplementedError(
+                f"speculative verify not supported for family "
+                f"{self.cfg.family!r} (needs the chunked-prefill hooks)")
+        b, c = tokens.shape
+        h, new_cache = self._chunk_hidden(params, tokens, cache, slot, start,
+                                          jnp.int32(c))
+        logits = jnp.dot(h, self.head(params),
                          preferred_element_type=jnp.float32)
-        logits = lanes.constrain(logits, self.rules, "batch", "vocab_tp")
+        logits = lanes.constrain(logits, self.rules, "batch", None,
+                                 "vocab_tp")
         return logits, new_cache
 
     def _prefill_layer(self, lp, cfg, x, cache_l, positions, extra):

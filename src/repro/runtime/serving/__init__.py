@@ -21,11 +21,13 @@ from repro.runtime.serving.engine import ServingEngine
 from repro.runtime.serving.request import Request, RequestState, Status
 from repro.runtime.serving.sampling import GREEDY, SamplingParams
 from repro.runtime.serving.scheduler import Scheduler
+from repro.runtime.serving.speculative import SpecConfig, SpecController
 
 # kept importable for compatibility, deliberately outside __all__
 _internal = (cache_insert, chunk_plan, padded_len, tail_plan)
 
 __all__ = ["EngineConfig", "ServingEngine",
+           "SpecConfig", "SpecController",
            "PagedKVCacheManager", "AllocResult", "PrefixMatch",
            "DEFAULT_BUCKETS",
            "Request", "RequestState", "Status", "Scheduler",

@@ -100,6 +100,7 @@ class _PrefixEntry:
     src_slot: int        # arena region the page physically lives in
     idx: int             # page index within the prefix (0-based)
     snapshot: Optional[list] = None
+    held: bool = False   # the index itself holds a reference (chain cap)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,11 +141,27 @@ class PagedKVCacheManager:
     reuse) and returned on :meth:`free` when their refcount drops to zero.
     """
 
-    def __init__(self, num_pages: int, page_size: int):
+    def __init__(self, num_pages: int, page_size: int, *,
+                 max_chains: Optional[int] = None):
+        """``max_chains`` (optional): retention policy for registered
+        prefix chains.  ``None`` (the default) keeps the original
+        lifetime — a chain's pages return to the pool with their last
+        holder, so the index only ever serves co-resident traffic.  An
+        integer cap makes the index itself hold one reference per
+        registered page: chains then *outlive* their last holder (a
+        departed donor's region stays pinned, its pages stay resident and
+        forkable — the first step toward cross-request dedup), and when
+        more than ``max_chains`` regions host registered pages the
+        least-recently-*forked* chain is evicted — its index references
+        drop, and pages with no remaining holder return to the pool."""
         if num_pages < 1 or page_size < 1:
             raise ValueError((num_pages, page_size))
+        if max_chains is not None and max_chains < 1:
+            raise ValueError(f"max_chains must be >= 1 or None, "
+                             f"got {max_chains}")
         self.num_pages = num_pages
         self.page_size = page_size
+        self.max_chains = max_chains
         self._free: list[int] = list(range(num_pages - 1, -1, -1))
         self._table: dict[int, list[int]] = {}     # slot -> owned page ids
         self._length: dict[int, int] = {}          # slot -> token count
@@ -155,8 +172,14 @@ class PagedKVCacheManager:
         # arena regions hosting live *registered* pages (slot id -> pages);
         # a region with entries here and no occupant is pinned
         self._hosted: dict[int, set[int]] = {}
+        # chain LRU clock: region -> tick of its last fork/registration.
+        # A deterministic counter, not wall time — eviction order must
+        # replay identically across runs.
+        self._chain_tick: dict[int, int] = {}
+        self._tick = 0
         self.stats = {"forks": 0, "shared_pages": 0, "max_page_ref": 0,
-                      "peak_pages_used": 0, "registered_pages": 0}
+                      "peak_pages_used": 0, "registered_pages": 0,
+                      "evicted_chains": 0}
 
     # -- queries -------------------------------------------------------------
     def pages_for(self, length: int) -> int:
@@ -249,6 +272,8 @@ class PagedKVCacheManager:
                 self._ref[page] = n
                 retained.append(page)
         self._length.pop(slot, None)
+        # the departing holder may have orphaned a retained chain
+        self._evict_lru(keep=-1)
         return AllocResult(True, freed=tuple(freed), retained=tuple(retained))
 
     # -- prefix index --------------------------------------------------------
@@ -277,16 +302,85 @@ class PagedKVCacheManager:
             ent = self._index.get(key)
             if ent is None:
                 ent = _PrefixEntry(key=key, page=table[i], src_slot=slot,
-                                   idx=i)
+                                   idx=i, held=self.max_chains is not None)
                 self._index[key] = ent
                 self._entry_of_page[table[i]] = ent
                 self._hosted.setdefault(slot, set()).add(table[i])
+                if ent.held:
+                    # the index's own reference: the page survives its
+                    # last slot holder until the chain is evicted
+                    self._ref[table[i]] = self._ref.get(table[i], 0) + 1
                 new += 1
             if (snapshot is not None and ent.src_slot == slot
                     and (i + 1) * self.page_size == upto):
                 ent.snapshot = snapshot
         self.stats["registered_pages"] += new
+        if new:
+            self._touch_chain(slot)
+            self._evict_lru(keep=slot)
         return new
+
+    # -- chain retention (LRU by last fork) ----------------------------------
+    def _touch_chain(self, src_slot: int) -> None:
+        self._tick += 1
+        self._chain_tick[src_slot] = self._tick
+
+    def _evictable(self, src_slot: int) -> bool:
+        """A chain is an eviction candidate only when it is *orphaned*:
+        its region has no occupant and every registered page's sole
+        remaining reference is the index hold.  Chains with live holders
+        (the donor still resident, or forks still sharing pages) occupy
+        no extra memory — they are in use, not retained — and evicting
+        one would unpin a region whose rows other slots still read."""
+        pages = self._hosted.get(src_slot, ())
+        return (bool(pages) and src_slot not in self._table
+                and all(self._entry_of_page[p].held
+                        and self._ref.get(p, 0) == 1 for p in pages))
+
+    def _evict_lru(self, keep: int) -> None:
+        """Enforce ``max_chains``: while more regions host chains than the
+        cap allows, evict the least-recently-forked *orphaned* chain
+        (never ``keep``, the one just touched).  If every excess chain is
+        live, nothing is evicted — live chains cost nothing extra."""
+        if self.max_chains is None:
+            return
+        while len(self._hosted) > self.max_chains:
+            victims = [s for s in self._hosted
+                       if s != keep and self._evictable(s)]
+            if not victims:
+                return
+            self.evict_chain(min(
+                victims, key=lambda s: self._chain_tick.get(s, 0)))
+
+    def reclaim_orphan(self) -> bool:
+        """Admission pressure: evict the least-recently-forked *orphaned*
+        chain so its pages/region go to a real occupant.  Retained chains
+        are a cache, not a reservation — they always yield to admissions
+        (the scheduler calls this when allocation fails, preserving the
+        progress guarantee under a chain cap).  True iff one was evicted;
+        with no cap configured there are never orphaned chains and this is
+        a no-op."""
+        victims = [s for s in self._hosted if self._evictable(s)]
+        if not victims:
+            return False
+        return bool(self.evict_chain(min(
+            victims, key=lambda s: self._chain_tick.get(s, 0))))
+
+    def evict_chain(self, src_slot: int) -> AllocResult:
+        """Drop an orphaned chain: unregister every index entry hosted by
+        ``src_slot``'s region, release the index's references, return the
+        pages to the pool (unpinning the region).  Refused if the chain
+        is still in use (see :meth:`_evictable`)."""
+        if not self._evictable(src_slot):
+            return AllocResult(False, reason="chain-in-use")
+        pages = sorted(self._hosted.get(src_slot, ()),
+                       key=lambda p: self._entry_of_page[p].idx)
+        for page in reversed(pages):
+            self._unregister(page)
+            self._ref.pop(page, None)
+            self._free.append(page)
+        self.stats["evicted_chains"] += 1
+        return AllocResult(True, freed=tuple(reversed(pages)))
 
     def _unregister(self, page: int) -> None:
         ent = self._entry_of_page.pop(page, None)
@@ -298,6 +392,7 @@ class PagedKVCacheManager:
             hosted.discard(page)
             if not hosted:
                 del self._hosted[ent.src_slot]
+                self._chain_tick.pop(ent.src_slot, None)
 
     def lookup(self, tokens, limit: int, *,
                require_snapshot: bool = False) -> Optional[PrefixMatch]:
@@ -381,6 +476,8 @@ class PagedKVCacheManager:
         ref = max(self._ref[p] for p in shared)
         if ref > self.stats["max_page_ref"]:
             self.stats["max_page_ref"] = ref
+        self._touch_chain(match.src_slot)
+        self._evict_lru(keep=match.src_slot)
         return AllocResult(True, shared=tuple(shared),
                            freed=tuple(freed), retained=tuple(retained),
                            shared_len=match.shared_len,

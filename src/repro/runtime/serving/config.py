@@ -20,6 +20,7 @@ import dataclasses
 from typing import Any, Optional
 
 from repro.runtime.serving.chunking import validate_buckets
+from repro.runtime.serving.speculative import SpecConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,8 +40,17 @@ class EngineConfig:
     ``prefix_sharing``  hash-cons prompt prefixes into refcounted shared
                         pages with copy-on-write forks (requires
                         ``prefill_chunks``)
+    ``prefix_chain_cap``keep up to this many registered prefix chains
+                        alive past their last holder, evicting LRU by
+                        last-fork time; None = chains die with their last
+                        holder (requires ``prefix_sharing``)
     ``donate``          arena buffer donation: "auto" | True | False
     ``base_seed``       run-level PRNG seed for sampled requests
+    ``speculative``     draft-verify decoding (:class:`SpecConfig`); None
+                        = plain decode.  Mutually exclusive with
+                        ``prefix_sharing`` (the verify chunk would need
+                        the composed share view threaded through a second
+                        arena — unsupported, rejected here)
     """
     max_slots: int = 8
     max_seq: int = 256
@@ -50,8 +60,10 @@ class EngineConfig:
     prefill_chunks: Optional[tuple[int, ...]] = None
     prefill_budget: Optional[int] = None
     prefix_sharing: bool = False
+    prefix_chain_cap: Optional[int] = None
     donate: Any = "auto"
     base_seed: int = 0
+    speculative: Optional[SpecConfig] = None
 
     def __post_init__(self):
         for name in ("max_slots", "max_seq", "page_size"):
@@ -78,6 +90,25 @@ class EngineConfig:
                 "EngineConfig.prefix_sharing requires chunked prefill "
                 "(prefill_chunks): forks resume ingestion at the divergence "
                 "boundary, which monolithic prefill cannot express")
+        if self.prefix_chain_cap is not None:
+            if not self.prefix_sharing:
+                raise ValueError(
+                    "EngineConfig.prefix_chain_cap requires prefix_sharing")
+            if self.prefix_chain_cap < 1:
+                raise ValueError(
+                    f"EngineConfig.prefix_chain_cap must be >= 1 or None, "
+                    f"got {self.prefix_chain_cap}")
+        if self.speculative is not None:
+            if not isinstance(self.speculative, SpecConfig):
+                raise ValueError(
+                    f"EngineConfig.speculative must be a SpecConfig or "
+                    f"None, got {type(self.speculative).__name__}")
+            if self.prefix_sharing:
+                raise ValueError(
+                    "EngineConfig.speculative is unsupported with "
+                    "prefix_sharing: the verify chunk would need the "
+                    "composed share view threaded through the draft arena "
+                    "as well")
         if self.donate not in ("auto", True, False):
             raise ValueError(
                 f"EngineConfig.donate must be 'auto', True or False, "

@@ -95,6 +95,7 @@ from repro.runtime.serving.cache import (PagedKVCacheManager, PrefixMatch,
 from repro.runtime.serving.config import EngineConfig
 from repro.runtime.serving.request import Request, RequestState, Status
 from repro.runtime.serving.scheduler import Scheduler
+from repro.runtime.serving.speculative import SpecController
 
 
 # Buffer-donation pay-off threshold.  Donation removes the output-copy of
@@ -230,6 +231,69 @@ def _compiled_decode_greedy_shared(model, donate):
         return tokens, cache, pos, active, samp, share, sampled
     return jax.jit(step,
                    donate_argnums=(1, 2, 3, 4, 5, 6) if donate else ())
+
+
+@_per_model
+def _compiled_draft_propose(model, donate):
+    """One draft micro-step of a speculative round: decode + sample over
+    the whole slot batch, exactly the decode-step body but donating ONLY
+    the draft arena — tokens/pos are round-local values the engine rebuilds
+    from host state, and ``samp`` (the *target's* per-slot sampling
+    vectors) is shared across every micro-step and verify call of the
+    round, so neither may be consumed.  The draft samples with the same
+    (seed, position) key-fold as the target: proposal j+1 draws at
+    ``pos + j + 1`` with the slot's seed, the exact key the target's
+    Gumbel replay uses at that position — the Gumbel noise is shared and
+    only the logits differ (the coupling that makes acceptance approach 1
+    as temperature grows)."""
+    def step(params, tokens, cache, pos, samp):
+        sampled, cache = model.decode_and_sample(params, tokens, cache,
+                                                 pos, samp)
+        return sampled, cache
+    return jax.jit(step, donate_argnums=(2,) if donate else ())
+
+
+@_per_model
+def _compiled_draft_propose_greedy(model, donate):
+    """Argmax twin of :func:`_compiled_draft_propose` for rounds whose
+    RUNNING slots are all greedy — proposals are the draft's argmax, to be
+    matched against the target's argmax."""
+    def step(params, tokens, cache, pos, samp):
+        del samp
+        logits, cache = model.decode_step(params, tokens, cache, pos)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+    return jax.jit(step, donate_argnums=(2,) if donate else ())
+
+
+@_per_model
+def _compiled_verify(model, donate):
+    """The speculative verify step: one chunk-shaped pass over a slot's
+    current token + k-1 proposals (``model.verify_chunk``), then the
+    Gumbel replay (``sampling.verify_draws``) — the target's deterministic
+    draw at every one of the k positions, inside the same executable so
+    the (C, V) logits never leave the device.  Donates the target arena
+    (the chunk's K/V rows are scattered in place); ``slot``/``start`` are
+    traced, so the only compile key is the chunk length C = k — one
+    executable per adaptive-k ladder rung."""
+    def step(params, cache, tokens, slot, start, samp):
+        logits, cache = model.verify_chunk(params, tokens, cache, slot,
+                                           start)
+        draws = sampling.verify_draws(logits[0], slot, start, samp)
+        return draws, cache
+    return jax.jit(step, donate_argnums=(1,) if donate else ())
+
+
+@_per_model
+def _compiled_verify_greedy(model, donate):
+    """Argmax twin of :func:`_compiled_verify`: a greedy slot's acceptance
+    rule is exact match against the target's argmax at each position, so
+    the verify draws are a plain per-row argmax — no sampling transform."""
+    def step(params, cache, tokens, slot, start, samp):
+        del samp
+        logits, cache = model.verify_chunk(params, tokens, cache, slot,
+                                           start)
+        return jnp.argmax(logits[0], axis=-1).astype(jnp.int32), cache
+    return jax.jit(step, donate_argnums=(1,) if donate else ())
 
 
 @_per_model
@@ -405,7 +469,9 @@ class ServingEngine:
         num_pages = config.num_pages
         if num_pages is None:       # default: pool sized to the full arena
             num_pages = max_slots * -(-max_seq // config.page_size)
-        self.cache_mgr = PagedKVCacheManager(num_pages, config.page_size)
+        self.cache_mgr = PagedKVCacheManager(
+            num_pages, config.page_size,
+            max_chains=config.prefix_chain_cap)
         self.scheduler = Scheduler(max_slots, self.cache_mgr,
                                    prefix_extra=self.prefix_extra,
                                    max_len=max_seq,
@@ -470,6 +536,39 @@ class ServingEngine:
                 getattr(model, "has_recurrent_state", False))
             self._extract_state = _compiled_extract_state(model, False)
             self._splice_state = _compiled_splice_state(model, self.donate)
+        # speculative decoding: a draft LM in a second slot-major arena
+        # sharing the target's slot indices.  Rounds are synchronous (each
+        # round's proposals depend on the last round's committed tokens, so
+        # the dispatch-queue depth lag cannot apply); the dispatch queue
+        # carries only non-speculative traffic.
+        self.spec: Optional[SpecController] = None
+        if config.speculative is not None:
+            if self.prefix_extra:
+                raise ValueError("speculative decoding with prefix_extra "
+                                 "(VLM patch tokens) is unsupported")
+            self.spec = SpecController(cfg, config.speculative)
+            dm = self.spec.draft_model
+            if not (getattr(model, "supports_chunked_prefill", False)
+                    and getattr(model, "inplace_arena_decode", False)
+                    and getattr(dm, "inplace_arena_decode", False)
+                    and getattr(dm, "supports_chunked_prefill", False)):
+                raise ValueError(
+                    "speculative decoding needs the chunked-prefill and "
+                    "arena-decode hooks on both target and draft")
+            self._draft_params = jax.jit(dm.init)(
+                jax.random.PRNGKey(config.speculative.draft_seed))
+            self._draft_cache = dm.init_cache(max_slots, max_seq)
+            self._draft_one_cache = dm.init_cache(1, max_seq)
+            self._draft_prefill_fn = _compiled_prefill(dm)
+            if prefill_chunks is not None:
+                self._draft_chunk_fn = _compiled_prefill_chunk(
+                    dm, self.donate)
+            self._draft_propose = _compiled_draft_propose(dm, self.donate)
+            self._draft_propose_greedy = _compiled_draft_propose_greedy(
+                dm, self.donate)
+            self._verify = _compiled_verify(model, self.donate)
+            self._verify_greedy = _compiled_verify_greedy(model, self.donate)
+            self._verify_shapes: set = set()
         # decode-state buffers are donated into each step, so the queue
         # tracks the never-donated readback copy (out[-1]) for backpressure
         self._queue = DispatchQueue(self._submit_decode, depth=self.depth,
@@ -494,6 +593,16 @@ class ServingEngine:
                       "forks": 0, "shared_prompt_tokens": 0,
                       "prefix_hits": 0, "prefix_deferrals": 0,
                       "host_blocked_s": 0.0, "ttft_s": {}}
+        if self.spec is not None:
+            # speculative counters: rounds = verify rounds (the spec
+            # analogue of decode_steps), draft_steps = draft micro-steps,
+            # verify_calls = per-slot verify executions, verify_compiles =
+            # distinct verify-chunk shapes touched (bounded by the
+            # adaptive-k ladder).  Acceptance bookkeeping — per-request
+            # accepted/proposed — lives on ``self.spec.stats``.
+            self.stats.update({"spec_rounds": 0, "spec_draft_steps": 0,
+                               "spec_verify_calls": 0,
+                               "spec_verify_compiles": 0})
 
     def _submit_decode(self, state):
         if self._use_sampling:
@@ -583,6 +692,17 @@ class ServingEngine:
             self._note_prefill_shape(("prefill", int(prompt.shape[1])))
             self._cache = self._insert(self._cache, one_cache,
                                        jnp.int32(st.slot))
+            if self.spec is not None:
+                # mirror the prompt into the draft arena (logits discarded)
+                # so both caches agree on rows [0, prompt_len) — the
+                # lockstep invariant every spec round relies on.  A
+                # preemption recompute re-runs both, so the caches can
+                # never drift apart.
+                _, draft_one = self._draft_prefill_fn(
+                    self._draft_params, prompt, self._draft_one_cache, {})
+                self._draft_cache = self._insert(self._draft_cache,
+                                                 draft_one,
+                                                 jnp.int32(st.slot))
             self._activate_slot(st, logits)
 
     def _activate_slot(self, st: RequestState, logits) -> None:
@@ -819,6 +939,14 @@ class ServingEngine:
             logits, self._cache = self._chunk_fn(
                 self.params, self._cache, jnp.asarray(chunk)[None, :],
                 jnp.int32(st.slot), jnp.int32(start), jnp.int32(last_idx))
+        if self.spec is not None:
+            # lockstep draft ingestion: the identical chunk goes into the
+            # draft arena (same slot, same rows; logits discarded), so a
+            # slot finishing prefill has BOTH caches live on [0, prompt_len)
+            _, self._draft_cache = self._draft_chunk_fn(
+                self._draft_params, self._draft_cache,
+                jnp.asarray(chunk)[None, :], jnp.int32(st.slot),
+                jnp.int32(start), jnp.int32(last_idx))
         self.stats["prefill_chunks"] += 1
         self.stats["prefill_rows"] += size
         self._note_prefill_shape(("chunk", size))
@@ -834,13 +962,110 @@ class ServingEngine:
         self._slot_gen[st.slot] += 1
         self._activate_slot(st, logits)
 
+    # -- speculative rounds ---------------------------------------------------
+    def _spec_round(self) -> None:
+        """One draft-propose / chunk-verify / commit round over the RUNNING
+        slots — the speculative replacement for a decode-step submission.
+
+        Per round: (1) the draft runs k batched micro-steps over the whole
+        slot batch, feeding each slot's current token then its own
+        proposals, writing draft K/V at rows [pos, pos+k) and drawing
+        proposal j+1 with the slot's (seed, pos+j+1) key; (2) the target
+        verifies each slot with ONE chunk-shaped call over
+        ``[current, d_1..d_{k-1}]`` at rows [pos, pos+k), whose logits rows
+        are bit-identical to k sequential decode steps, and draws the
+        Gumbel replay at all k positions inside the executable; (3) the
+        host accepts the longest leading proposal run matching the target's
+        draws and commits those tokens plus — on a rejection — the draw at
+        the first mismatch (the resample).  Rollback is pure cursor
+        arithmetic: rejected rows in both arenas are dead (never attended
+        before the next round's chunk overwrites them), so the committed
+        stream is the target's own stream verbatim — bit-identical to
+        non-speculative decode for every (seed, temperature).
+
+        The round is synchronous (its commits feed the next round's
+        proposals), but all device work — k draft steps + per-slot
+        verifies — is launched before the single host sync that reads the
+        proposal and draw vectors together.
+        """
+        running = [st for st in self.scheduler.running.values()
+                   if st.status == Status.RUNNING]
+        if not running:
+            return
+        k = self.spec.k
+        tok0 = np.zeros((self.max_slots,), np.int32)
+        pos0 = np.full((self.max_slots,), PARKED_POS, np.int32)
+        for st in running:
+            # the slot's current (committed, not yet cached) token and the
+            # arena row it will occupy; non-RUNNING slots park at the
+            # sentinel so every draft scatter for them is dropped —
+            # PREFILLING slots' freshly-ingested rows stay untouched
+            tok0[st.slot] = st.generated[-1]
+            pos0[st.slot] = (st.prompt_len + self.prefix_extra
+                             + len(st.generated) - 1)
+        all_greedy = all(st.request.sampling.is_greedy for st in running)
+        draft_fn = (self._draft_propose_greedy if all_greedy
+                    else self._draft_propose)
+        toks = jnp.asarray(tok0)
+        base = jnp.asarray(pos0)
+        proposals = []
+        for j in range(k):
+            toks, self._draft_cache = draft_fn(
+                self._draft_params, toks, self._draft_cache, base + j,
+                self._samp)
+            proposals.append(toks)
+        self.stats["spec_draft_steps"] += k
+        # one host sync for the round's proposals (they shape the verify
+        # chunks); the per-slot verify calls then launch back-to-back and
+        # their draw vectors are read after all are in flight
+        t0 = time.perf_counter()
+        props = np.stack([np.asarray(p) for p in proposals])     # (k, B)
+        self.stats["host_blocked_s"] += time.perf_counter() - t0
+        reads = []
+        for st in running:
+            slot = st.slot
+            chunk = np.concatenate(
+                [[tok0[slot]], props[:k - 1, slot]]).astype(np.int32)
+            vfn = (self._verify_greedy if st.request.sampling.is_greedy
+                   else self._verify)
+            draws, self._cache = vfn(
+                self.params, self._cache, jnp.asarray(chunk)[None, :],
+                jnp.int32(slot), jnp.int32(pos0[slot]), self._samp)
+            reads.append((st, slot, draws))
+        self._verify_shapes.add(k)
+        self.stats["spec_verify_calls"] += len(reads)
+        self.stats["spec_verify_compiles"] = len(self._verify_shapes)
+        outcomes = []
+        for st, slot, draws in reads:
+            if st.status != Status.RUNNING or st.slot != slot:
+                continue    # preempted by an earlier commit this round:
+                #             its generated stream was rewound, recompute
+                #             replays it — this round's draws are void
+            t0 = time.perf_counter()
+            draws = np.asarray(draws)
+            self.stats["host_blocked_s"] += time.perf_counter() - t0
+            a, committed = sampling.accept_tokens(props[:, slot], draws)
+            n, _ = self.scheduler.on_tokens(slot, committed)
+            self.stats["tokens_out"] += n
+            outcomes.append((st.request.uid, a, k))
+        self.spec.observe_round(outcomes)
+        self.stats["spec_rounds"] += 1
+        self.stats["decode_steps"] += 1
+        if not all_greedy:
+            self.stats["sampled_steps"] += 1
+
     # -- the continuous-batching loop ----------------------------------------
     def step(self) -> None:
         """One engine iteration: retire lagged outputs, admit, ingest
-        prompt chunks, decode."""
+        prompt chunks, decode — or, under ``EngineConfig.speculative``, run
+        one synchronous draft-propose/verify/commit round instead of
+        submitting a decode step."""
         self._drain_pending(limit=self.depth)
         self._admit()
         self._advance_prefill()
+        if self.spec is not None:
+            self._spec_round()
+            return
         running = [st for st in self.scheduler.running.values()
                    if st.status == Status.RUNNING]
         if not running:

@@ -135,6 +135,66 @@ def sample_first(logits, seed: int, q: int, sp: SamplingParams):
 
 
 # ---------------------------------------------------------------------------
+# speculative verify: the Gumbel replay
+# ---------------------------------------------------------------------------
+
+def verify_draws(logits, slot, start, samp):
+    """The target model's deterministic draws at every verify position —
+    the *Gumbel replay* at the heart of the speculative acceptance rule.
+
+    ``logits``: (C, V) f32 — one slot's verify-chunk rows; row j predicts
+    absolute cache position ``start + 1 + j``.  ``slot``/``start``: traced
+    scalars; ``samp``: the engine's per-slot sampling vectors, from which
+    the slot's scalars are broadcast over the C positions.  Each row draws
+    with the key ``fold_in(fold_in(PRNGKey(0), seed), start + 1 + j)`` —
+    exactly the key non-speculative decode folds at that position — and the
+    chunk-path logits are bit-identical to the decode-path logits (see
+    ``LM.verify_chunk``), so every returned draw equals the token the
+    engine would have sampled decoding one position at a time.  Acceptance
+    (:func:`accept_tokens`) is therefore *exact-match against the target's
+    own stream*: accepted proposals are the target's tokens verbatim, and
+    the first mismatch position's draw IS the rejection resample — no
+    separate residual-distribution draw, no PRNG state to reconcile.
+    Greedy slots (temp <= 0) short-circuit inside ``sample_step`` to the
+    bit-exact argmax, so greedy verify is pure token match.
+    """
+    c = logits.shape[0]
+    q = start + 1 + jnp.arange(c, dtype=jnp.int32)
+
+    def rep(v):
+        return jnp.broadcast_to(v[slot], (c,))
+
+    return L.sample_step(logits, rep(samp["seed"]), q, rep(samp["temp"]),
+                         rep(samp["top_k"]), rep(samp["top_p"]),
+                         rep(samp["min_p"]))
+
+
+def accept_tokens(proposed, draws) -> tuple[int, list[int]]:
+    """Leading-prefix acceptance + rollback resample, host-side.
+
+    ``proposed``: the k draft proposals d_1..d_k for one slot;
+    ``draws``: the target's verify draws t_1..t_k at the same positions
+    (:func:`verify_draws`).  Acceptance length ``a`` is the longest leading
+    run with d_j == t_j.  Commits d_1..d_a plus — when a < k — the
+    target's draw at the first rejected position (the resample; the
+    rollback is the caller rewinding its position cursor by k - a - 1
+    rows).  On full acceptance exactly k tokens commit and the *next*
+    round's verify chunk opens with d_k, preserving the invariant that
+    both caches hold rows [0, pos) and never lead the committed stream.
+    Returns ``(a, committed)`` with 1 <= len(committed) <= k.
+    """
+    proposed = np.asarray(proposed)
+    draws = np.asarray(draws)
+    k = proposed.shape[0]
+    neq = np.nonzero(proposed != draws)[0]
+    a = int(neq[0]) if neq.size else k
+    committed = [int(t) for t in proposed[:a]]
+    if a < k:
+        committed.append(int(draws[a]))
+    return a, committed
+
+
+# ---------------------------------------------------------------------------
 # numpy reference (test oracle)
 # ---------------------------------------------------------------------------
 

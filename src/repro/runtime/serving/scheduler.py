@@ -107,14 +107,21 @@ class Scheduler:
             # region is pinned (it hosts live shared prefix pages of a
             # departed donor) is skipped — another region serves just as
             # well; only page exhaustion blocks the head of the line.
+            # Under a prefix chain cap, *orphaned* retained chains (held
+            # only by the index) yield to admissions: when every candidate
+            # is refused, reclaim the LRU orphan and retry — finite chains,
+            # so this terminates, and live shared pages are never touched.
             slot = None
-            for cand in sorted(self._free_slots):
-                res = self.cache.allocate(cand, need)
-                if res:
-                    slot = cand
+            while slot is None:
+                for cand in sorted(self._free_slots):
+                    res = self.cache.allocate(cand, need)
+                    if res:
+                        slot = cand
+                        break
+                    if res.reason != "region-pinned":
+                        break              # no pages yet
+                if slot is None and not self.cache.reclaim_orphan():
                     break
-                if res.reason != "region-pinned":
-                    break                  # no pages yet
             if slot is None:
                 break                      # head-of-line blocks
             self._free_slots.remove(slot)
@@ -166,6 +173,31 @@ class Scheduler:
             if victim is st:
                 break
         return departures
+
+    def on_tokens(self, slot: int,
+                  tokens) -> tuple[int, list[tuple[int, RequestState]]]:
+        """Commit a speculative round's accepted tokens for ``slot`` in
+        order, stopping the moment the request departs — EOS or
+        max_new_tokens retires it, and a page-growth preemption (of *this*
+        slot; preempting another slot keeps this commit going) rewinds it
+        to WAITING for a deterministic recompute.  Tokens past the
+        departure are dropped: the request's stream ends exactly where
+        non-speculative decode would have ended it.  Returns
+        ``(n_committed, departures)`` — departures aggregated across every
+        committed token, same contract as :meth:`on_token`.
+        """
+        st = self.running.get(slot)
+        departures: list[tuple[int, RequestState]] = []
+        n = 0
+        for token in tokens:
+            if st is None or st.slot != slot \
+                    or st.status != Status.RUNNING:
+                break
+            departures.extend(self.on_token(slot, int(token)))
+            n += 1
+            if self.running.get(slot) is not st:
+                break
+        return n, departures
 
     def _finish(self, st: RequestState,
                 reason: str) -> tuple[int, RequestState]:

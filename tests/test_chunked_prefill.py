@@ -13,6 +13,7 @@ from repro.models import registry
 from repro.runtime.serving import (PagedKVCacheManager, Request,
                                    ServingEngine, Scheduler, Status,
                                    cache_insert, chunk_plan, padded_len)
+from repro.runtime.serving.chunking import tail_plan
 
 # ---------------------------------------------------------------------------
 # chunk planner (pure host arithmetic)
@@ -57,6 +58,50 @@ def test_chunk_plan_boundary_lengths_have_no_allpad_chunk(plen):
     assert sum(plan[:-1]) < plen <= sum(plan)
     if plen % min(buckets) == 0:            # exact cover: zero padding
         assert sum(plan) == plen
+
+
+def test_tail_plan_empty_tail_raises():
+    """share_len == prompt_len would mean a fork ingests nothing and has
+    no row to produce its first logits from — the planner must refuse,
+    matching the engine's fork cap (lookup limit = prompt_len - 1)."""
+    with pytest.raises(ValueError):
+        tail_plan(32, 32, (8, 16, 32))
+    with pytest.raises(ValueError):
+        tail_plan(32, 33, (8, 16, 32))          # past the prompt
+    with pytest.raises(ValueError):
+        tail_plan(32, -1, (8, 16, 32))
+    # share_len == 0 degenerates to the full-prompt plan, not an error
+    assert tail_plan(32, 0, (8, 16, 32)) == chunk_plan(32, (8, 16, 32))
+
+
+@pytest.mark.parametrize("share", [1, 3, 5, 7, 9, 15, 17, 31])
+def test_tail_plan_page_unaligned_share_len(share):
+    """The planner is pure arithmetic over ``prompt_len - shared_len`` —
+    it accepts page-unaligned share lengths (alignment is the *cache
+    manager's* contract, enforced at lookup: matches cover whole pages)
+    and still satisfies the chunk_plan invariants on the tail."""
+    buckets = (8, 16, 32)
+    plen = 33
+    plan = tail_plan(plen, share, buckets)
+    tail = plen - share
+    assert all(c in buckets for c in plan)
+    assert sum(plan) >= tail
+    assert sum(plan) - tail < min(buckets)      # pad < smallest bucket
+    assert sum(plan[:-1]) < tail                # no all-pad trailing chunk
+
+
+@pytest.mark.parametrize("tail", [1, 2, 7])
+def test_tail_plan_tail_shorter_than_smallest_bucket(tail):
+    """A fork diverging just before the prompt's end leaves a sub-bucket
+    tail: one smallest-bucket chunk, mostly padding — never zero chunks,
+    never a bucket the set doesn't contain."""
+    buckets = (8, 16, 32)
+    plen = 64
+    plan = tail_plan(plen, plen - tail, buckets)
+    assert plan == [min(buckets)]
+    # and the engine-facing row bound holds: shared rows + padded tail
+    rows = (plen - tail) + sum(plan)
+    assert rows - plen < min(buckets)
 
 
 def test_chunk_plan_boundary_engine_runs_one_chunk_per_bucket(tiny_model):

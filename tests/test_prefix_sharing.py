@@ -352,6 +352,135 @@ def test_engineconfig_validation_and_replace():
         EngineConfig(prefill_chunks=(0, 8))
 
 
+# ---------------------------------------------------------------------------
+# chain retention: the max_chains LRU eviction hook
+# ---------------------------------------------------------------------------
+
+def test_chain_cap_outlives_last_holder_and_serves_forks():
+    """With a cap, the index holds its own page references: a registered
+    chain survives its donor's departure with no forks, keeps its region
+    pinned, and serves later lookups/forks."""
+    m = PagedKVCacheManager(num_pages=12, page_size=4, max_chains=2)
+    tokens = np.arange(8, dtype=np.int32)
+    assert m.allocate(0, 8)
+    assert m.register_prefix(0, tokens, 8) == 2
+    assert all(m.refcount(p) == 2 for p in m.page_table(0))  # slot + index
+    pages = m.page_table(0)
+
+    m.free(0)                       # last holder leaves; the hold remains
+    assert m.free_pages == 12 - 2   # pages stay resident
+    assert m.region_pinned(0)
+    assert all(m.refcount(p) == 1 for p in pages)
+
+    match = m.lookup(tokens, 8)
+    assert match and match.shared_len == 8
+    assert m.allocate(1, 12)
+    assert m.fork(1, match)
+    assert all(m.refcount(p) == 2 for p in pages)  # index + fork
+    # the fork's departure orphans the chain again — still under the cap,
+    # so it stays retained
+    m.free(1)
+    assert m.lookup(tokens, 8) and m.region_pinned(0)
+    assert m.stats["evicted_chains"] == 0
+
+
+def test_chain_cap_evicts_lru_by_fork_order():
+    """Three orphaned chains, cap 2: the least-recently-forked one is
+    evicted — its pages pool, its region unpins, the index forgets it."""
+    m = PagedKVCacheManager(num_pages=16, page_size=4, max_chains=2)
+    ta = np.arange(8, dtype=np.int32)
+    tb = np.arange(8, dtype=np.int32) + 20
+    tc = np.arange(8, dtype=np.int32) + 40
+    assert m.allocate(0, 8)
+    m.register_prefix(0, ta, 8)
+    m.free(0)
+    assert m.allocate(1, 8)
+    m.register_prefix(1, tb, 8)
+    m.free(1)
+    # a fork touches chain a: b becomes the LRU chain
+    assert m.allocate(2, 12)
+    assert m.fork(2, m.lookup(ta, 8))
+    m.free(2)
+    # third chain exceeds the cap -> b (least recently forked) is evicted
+    assert m.allocate(3, 8)
+    m.register_prefix(3, tc, 8)
+    assert m.stats["evicted_chains"] == 1
+    assert m.lookup(tb, 8) is None
+    assert not m.region_pinned(1)
+    assert m.lookup(ta, 8) and m.lookup(tc, 8)
+    # evicted pages actually pooled: 2 chains x 2 pages + occupant 3's own
+    assert m.free_pages == 16 - 4
+
+
+def test_chain_cap_never_evicts_live_chains():
+    """Chains with an occupant or live forks are in use, not retained —
+    the cap skips them even when exceeded, and direct eviction refuses."""
+    m = PagedKVCacheManager(num_pages=16, page_size=4, max_chains=1)
+    ta = np.arange(8, dtype=np.int32)
+    tb = np.arange(8, dtype=np.int32) + 20
+    assert m.allocate(0, 8)
+    m.register_prefix(0, ta, 8)            # donor still resident
+    assert m.allocate(1, 8)
+    m.register_prefix(1, tb, 8)            # cap exceeded, but a is live
+    res = m.evict_chain(0)
+    assert not res and res.reason == "chain-in-use"
+    assert m.lookup(ta, 8) and m.lookup(tb, 8)
+    # donor 0 departs but a fork keeps chain a alive: still not evictable
+    assert m.allocate(2, 12)
+    assert m.fork(2, m.lookup(ta, 8))
+    m.free(0)
+    assert not m.evict_chain(0)
+    assert m.lookup(ta, 8)
+    # the fork drains -> chain a is orphaned and over-cap -> auto-evicted
+    m.free(2)
+    assert m.stats["evicted_chains"] == 1
+    assert m.lookup(ta, 8) is None and m.lookup(tb, 8)
+
+
+def test_chain_cap_validation():
+    with pytest.raises(ValueError):
+        PagedKVCacheManager(num_pages=4, page_size=4, max_chains=0)
+    with pytest.raises(ValueError):
+        EngineConfig(prefix_chain_cap=2)   # requires prefix_sharing
+    with pytest.raises(ValueError):
+        EngineConfig(prefill_chunks=(8, 16), prefix_sharing=True,
+                     prefix_chain_cap=0)
+    cfg = EngineConfig(prefill_chunks=(8, 16), prefix_sharing=True,
+                       prefix_chain_cap=2)
+    assert cfg.prefix_chain_cap == 2
+
+
+def test_chain_cap_engine_chain_survives_donor(tiny_model):
+    """Engine-level: with prefix_chain_cap, a donor's chain outlives its
+    retirement and a *later* arrival (admitted after the donor finished)
+    still forks onto it; outputs equal the sharing-off baseline."""
+    model, params = tiny_model
+    rng = np.random.default_rng(9)
+    head = rng.integers(0, TINY.vocab, 16).astype(np.int32)
+    tails = [rng.integers(0, TINY.vocab, 6).astype(np.int32)
+             for _ in range(2)]
+    prompts = [np.concatenate([head, t]) for t in tails]
+    # 11 pages of 4: request 0 reserves 6 and peaks at 7, so request 1
+    # (needing 6) is admitted only after request 0 retires — without the
+    # cap its chain would be gone by then (no co-resident holder)
+    base = EngineConfig(max_slots=2, max_seq=64, page_size=4, num_pages=11,
+                        prefill_chunks=(8, 16))
+
+    def run(cfg):
+        eng = ServingEngine(model, TINY, params, config=cfg)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p, max_new_tokens=6))
+        return eng.run(max_steps=500), eng
+
+    want, _ = run(base)
+    got, eng = run(base.replace(prefix_sharing=True, prefix_chain_cap=2))
+    for i in range(2):
+        np.testing.assert_array_equal(want[i], got[i])
+    # the second request really forked onto the retired donor's chain
+    assert eng.cache_mgr.stats["forks"] >= 1
+    assert eng.cache_mgr.stats["evicted_chains"] == 0
+
+
 def test_public_surface():
     """The serving contract is __all__; engine internals stay importable
     from their submodules but are no longer advertised."""

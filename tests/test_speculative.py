@@ -1,0 +1,226 @@
+"""Speculative decoding: draft-propose / chunk-verify / deterministic
+rollback.
+
+Host-logic level: SpecConfig validation + the power-of-two ladder, the
+controller's family/vocab gating and adaptive-k walk, the acceptance rule
+(``accept_tokens``), and the scheduler's multi-token commit
+(``on_tokens``).  Engine level: the load-bearing contract — output streams
+BIT-IDENTICAL to non-speculative decode for greedy and sampled traffic, in
+both prefill modes, under preemption/recompute and donation — plus the
+one-verify-executable-per-bucket compile bound and the adaptive backoff on
+adversarial (zero-acceptance) traffic.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.models import registry
+from repro.runtime.serving import (EngineConfig, Request, Scheduler,
+                                   PagedKVCacheManager, ServingEngine,
+                                   SpecConfig, SpecController)
+from repro.runtime.serving.sampling import SamplingParams, accept_tokens
+
+TGT = ArchConfig(name="tiny-spec-target", family="dense", n_layers=2,
+                 d_model=32, n_heads=4, n_kv_heads=2, d_ff=64, vocab=97,
+                 head_dim=8, param_dtype="float32", act_dtype="float32",
+                 max_seq=64)
+DFT = ArchConfig(name="tiny-spec-draft", family="dense", n_layers=1,
+                 d_model=16, n_heads=2, n_kv_heads=1, d_ff=32, vocab=97,
+                 head_dim=8, param_dtype="float32", act_dtype="float32",
+                 max_seq=64)
+SSM = ArchConfig(name="tiny-spec-ssm", family="ssm", n_layers=2, d_model=32,
+                 n_heads=4, n_kv_heads=2, d_ff=64, vocab=97,
+                 ssm=SSMConfig(d_state=8, headdim=8, chunk=16),
+                 param_dtype="float32", act_dtype="float32",
+                 subquadratic=True, max_seq=64)
+
+
+# ---------------------------------------------------------------------------
+# config + controller (pure host logic)
+# ---------------------------------------------------------------------------
+
+def test_specconfig_validation_and_ladder():
+    with pytest.raises(ValueError):
+        SpecConfig(draft=DFT, k=0)
+    with pytest.raises(ValueError):
+        SpecConfig(draft=DFT, k=4, k_max=2)          # ceiling below start
+    with pytest.raises(ValueError):
+        SpecConfig(draft=DFT, low=0.9, high=0.5)
+    with pytest.raises(ValueError):
+        SpecConfig(draft=DFT, window=0)
+    with pytest.raises(ValueError):
+        SpecConfig(draft=DFT, ema=1.0)
+    assert SpecConfig(draft=DFT, k=3, k_max=8).ladder() == (1, 2, 3, 4, 8)
+    assert SpecConfig(draft=DFT, k=4, k_max=4).ladder() == (1, 2, 4)
+
+
+def test_engineconfig_speculative_validation():
+    spec = SpecConfig(draft=DFT)
+    assert EngineConfig(speculative=spec).speculative is spec
+    with pytest.raises(ValueError):
+        EngineConfig(speculative="draft")            # not a SpecConfig
+    with pytest.raises(ValueError):                  # mutually exclusive
+        EngineConfig(prefill_chunks=(8, 16), prefix_sharing=True,
+                     speculative=spec)
+
+
+def test_controller_gates_families_and_vocab():
+    SpecController(TGT, SpecConfig(draft=DFT))       # dense/dense: fine
+    with pytest.raises(ValueError, match="family"):
+        SpecController(SSM, SpecConfig(draft=DFT))   # recurrent target
+    with pytest.raises(ValueError, match="family"):
+        SpecController(TGT, SpecConfig(draft=SSM))   # recurrent draft
+    import dataclasses
+    with pytest.raises(ValueError, match="vocab"):
+        SpecController(TGT, SpecConfig(draft=dataclasses.replace(
+            DFT, name="other-vocab", vocab=96)))
+
+
+def test_controller_adaptive_walk():
+    ctl = SpecController(TGT, SpecConfig(draft=DFT, k=4, k_max=8, window=2,
+                                         low=0.4, high=0.85, ema=0.5))
+    assert ctl.k == 4
+    # two all-reject rounds: EMA 0 < low -> step down the ladder
+    for _ in range(2):
+        ctl.observe_round([("a", 0, 4)])
+    assert ctl.k == 2
+    for _ in range(2):
+        ctl.observe_round([("a", 0, 2)])
+    assert ctl.k == 1
+    ctl.observe_round([("a", 0, 1)])
+    ctl.observe_round([("a", 0, 1)])
+    assert ctl.k == 1                                # floor: never below 1
+    # sustained full acceptance climbs back up (EMA must cross high=0.85)
+    for _ in range(10):
+        ctl.observe_round([("a", ctl.k, ctl.k)])
+    assert ctl.k > 1
+    assert ctl.stats["k_changes"] >= 3
+    assert 0.0 < ctl.acceptance_rate < 1.0
+    assert ctl.stats["per_request"]["a"][1] == ctl.stats["proposed"]
+
+    pinned = SpecController(TGT, SpecConfig(draft=DFT, k=4, adaptive=False,
+                                            window=1))
+    for _ in range(5):
+        pinned.observe_round([("a", 0, 4)])
+    assert pinned.k == 4 and pinned.stats["k_changes"] == 0
+
+
+def test_accept_tokens_rule():
+    # full acceptance: no resample appended, a == k
+    a, committed = accept_tokens(np.array([5, 6, 7]), np.array([5, 6, 7]))
+    assert (a, committed) == (3, [5, 6, 7])
+    # first mismatch cuts the run; the target's own draw replaces it
+    a, committed = accept_tokens(np.array([5, 6, 7]), np.array([5, 9, 7]))
+    assert (a, committed) == (1, [5, 9])
+    a, committed = accept_tokens(np.array([5, 6]), np.array([1, 6]))
+    assert (a, committed) == (0, [1])                # always >= 1 token
+
+
+def test_scheduler_on_tokens_commits_until_departure():
+    s = Scheduler(1, PagedKVCacheManager(64, 4))
+    s.submit(Request(uid="a", prompt=np.arange(4, dtype=np.int32),
+                     max_new_tokens=3, eos_id=42))
+    (st,) = s.schedule()
+    n, deps = s.on_tokens(0, [7, 8])
+    assert (n, deps) == (2, []) and st.generated == [7, 8]
+    # eos retires mid-commit; the trailing token is dropped
+    n, deps = s.on_tokens(0, [42, 9])
+    assert n == 1 and deps == [(0, st)]
+    assert st.generated == [7, 8, 42] and st.finish_reason == "eos"
+    # departed slot: nothing committed
+    assert s.on_tokens(0, [1, 2]) == (0, [])
+
+
+# ---------------------------------------------------------------------------
+# engine: the determinism contract
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def target_model():
+    model = registry.build_model(TGT)
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _run(model, params, cfg, prompts, samplings, max_new=12):
+    eng = ServingEngine(model, TGT, params, config=cfg)
+    for i, (p, sp) in enumerate(zip(prompts, samplings)):
+        kw = {"sampling": sp} if sp is not None else {}
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=max_new, **kw))
+    out = eng.run(max_steps=3000)
+    return out, eng
+
+
+@pytest.mark.parametrize("chunks", [None, (8, 16)],
+                         ids=["monolithic", "chunked"])
+def test_spec_streams_bit_identical_mixed_traffic(target_model, chunks):
+    """Greedy and sampled requests in one batch, both prefill modes: the
+    speculative engine's streams equal the plain engine's token-for-token."""
+    model, params = target_model
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 97, n).astype(np.int32) for n in (5, 9, 7)]
+    samplings = [None,
+                 SamplingParams(temperature=1.3, top_k=20, seed=11),
+                 SamplingParams(temperature=0.9, top_p=0.95, seed=12)]
+    base = EngineConfig(max_slots=2, max_seq=64, prefill_chunks=chunks)
+    spec = base.replace(speculative=SpecConfig(draft=DFT, k=3,
+                                               adaptive=False))
+    want, _ = _run(model, params, base, prompts, samplings)
+    got, eng = _run(model, params, spec, prompts, samplings)
+    for i in range(len(prompts)):
+        np.testing.assert_array_equal(want[i], got[i])
+    assert eng.stats["spec_rounds"] > 0
+    # fixed k -> exactly one verify executable
+    assert eng.stats["spec_verify_compiles"] == 1
+
+
+def test_spec_bit_identical_under_preemption_and_donation(target_model):
+    """Hot-temperature traffic (high acceptance via the shared Gumbel
+    noise) on an undersized page pool with donation forced on: preemption
+    + recompute mid-speculation must not perturb a single token."""
+    model, params = target_model
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, 97, n).astype(np.int32) for n in (5, 9, 7)]
+    hot = SamplingParams(temperature=8.0, seed=7)
+    samplings = [hot, hot, hot]
+    base = EngineConfig(max_slots=2, max_seq=64, page_size=4)
+    spec = base.replace(num_pages=10, donate=True,
+                        speculative=SpecConfig(draft=DFT, k=4,
+                                               adaptive=False))
+    want, _ = _run(model, params, base, prompts, samplings, max_new=20)
+    got, eng = _run(model, params, spec, prompts, samplings, max_new=20)
+    for i in range(len(prompts)):
+        np.testing.assert_array_equal(want[i], got[i])
+    assert eng.scheduler.stats["preempted"] > 0     # pressure actually hit
+    # Gumbel coupling: an uncorrelated draft still lands most proposals
+    assert eng.spec.acceptance_rate > 0.3
+    assert eng.spec.stats["rounds"] < 20 * 3        # fewer rounds than tokens
+
+
+def test_spec_adaptive_backoff_stays_bit_identical(target_model):
+    """Adversarial traffic (greedy vs an uncorrelated draft: acceptance
+    ~0) walks k down to 1 — and the stream still equals plain decode."""
+    model, params = target_model
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, 97, n).astype(np.int32) for n in (6, 10)]
+    samplings = [None, None]
+    base = EngineConfig(max_slots=2, max_seq=64)
+    spec = base.replace(speculative=SpecConfig(draft=DFT, k=4, window=2))
+    want, _ = _run(model, params, base, prompts, samplings, max_new=16)
+    got, eng = _run(model, params, spec, prompts, samplings, max_new=16)
+    for i in range(len(prompts)):
+        np.testing.assert_array_equal(want[i], got[i])
+    assert eng.spec.k == 1                          # backed all the way off
+    assert eng.spec.stats["k_changes"] >= 2
+    # every verify shape came from the ladder
+    assert eng.stats["spec_verify_compiles"] <= len(spec.speculative.ladder())
+
+
+def test_spec_rejects_prefix_sharing_and_bad_models(target_model):
+    model, params = target_model
+    ssm_model = registry.build_model(SSM)
+    ssm_params = jax.jit(ssm_model.init)(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="family"):
+        ServingEngine(ssm_model, SSM, ssm_params, config=EngineConfig(
+            speculative=SpecConfig(draft=DFT)))
