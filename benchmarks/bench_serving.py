@@ -37,8 +37,9 @@ from jax import lax
 from repro.configs.base import ArchConfig, tiny_family_configs
 from repro.core import hlo_analysis
 from repro.models import registry
-from repro.runtime.serving import (EngineConfig, Request, SamplingParams,
-                                   ServingEngine, SpecConfig)
+from repro.runtime.serving import (EngineConfig, FaultPlan, FaultSpec,
+                                   Request, SamplingParams, ServingEngine,
+                                   SpecConfig, Status)
 from repro.runtime.serving.chunking import chunk_plan, tail_plan
 
 CFG = ArchConfig(name="bench-serve-tiny", family="dense", n_layers=2,
@@ -182,6 +183,7 @@ def run(report, smoke: bool = False):
     _family_sweep(report, smoke=smoke)
     _sampling_sweep(report, model, params, smoke=smoke)
     _speculative_sweep(report, smoke=smoke)
+    _fault_sweep(report, model, params, smoke=smoke)
 
 
 # ---------------------------------------------------------------------------
@@ -950,3 +952,136 @@ def _family_sweep(report, *, smoke: bool):
                 "rows/arena contract holds for every family: K/V chunk "
                 "rows + O(slot) recurrent state per chunk, whole-arena "
                 "aliasing per decode step (dense bounds in serving_memory)")
+
+
+# ---------------------------------------------------------------------------
+# fault sweep: injected-fault overhead, quarantine blast radius, deadlines
+# ---------------------------------------------------------------------------
+
+def _fault_run(model, params, prompts, gen, *, slots, max_seq, plan=None,
+               deadlines=None):
+    eng = ServingEngine(model, CFG, params, config=EngineConfig(
+        max_slots=slots, max_seq=max_seq, depth=2, page_size=8,
+        prefill_chunks=(8, 16), faults=plan))
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=gen,
+                           deadline_ms=(deadlines or {}).get(i)))
+    t0 = time.perf_counter()
+    out = eng.run()
+    dt = time.perf_counter() - t0
+    return out, dt, eng
+
+
+def _fault_sweep(report, model, params, *, smoke: bool):
+    """Robustness gates: a 1%-rate dispatch-fault plan (chunk/decode —
+    faults that cost *steps*, never tokens) must keep >= 95% of clean
+    tokens/s with every stream bit-identical; a logits-poison plan must
+    quarantine exactly its victim and leave survivors bit-identical; a
+    deadline must depart its request within ~one engine step of expiry
+    with every page reclaimed."""
+    rng = np.random.default_rng(13)
+    if smoke:
+        lens, gen, slots = [10, 18, 14, 26, 9, 21], 24, 3
+    else:
+        lens, gen, slots = [10, 18, 14, 26, 9, 21, 34, 13, 29, 22], 32, 4
+    prompts = [rng.integers(0, CFG.vocab, n).astype(np.int32) for n in lens]
+    max_seq = ((max(lens) + gen) // 8 + 2) * 8
+    # transient dispatch faults: each fire drops exactly one dispatch (a
+    # decode step or a prefill-chunk ingest) and retries — steps, never
+    # tokens.  alloc faults are a different regime (admission backoff +
+    # preemption recompute, worth whole recomputed sequences, not steps)
+    # and are gated at the engine level by tests/test_faults.py
+    plan = FaultPlan.of(seed=12, chunk=0.01, decode=0.01)
+
+    # interleaved pairs, same discipline as the dispatch sweep: container
+    # load noise is one-sided and drifts, so alternate the modes.  The
+    # throughput *gate* is the deterministic step-count ratio (tokens are
+    # bit-identical and the fault interleaving replays exactly, so extra
+    # engine steps ARE the fault overhead); best-of wall tokens/s is
+    # reported alongside but not gated — the timeshared CI container
+    # swings paired ~50 ms walls far more than the 5% margin under test
+    variants = {"clean": None, "faults(1%)": plan}
+    best = {}
+    for label, p in variants.items():           # warm the jit caches
+        best[label] = (0.0, _fault_run(model, params, prompts, gen,
+                                       slots=slots, max_seq=max_seq,
+                                       plan=p))
+    for _ in range(2):
+        for label, p in variants.items():
+            out, dt, eng = _fault_run(model, params, prompts, gen,
+                                      slots=slots, max_seq=max_seq, plan=p)
+            tps = sum(o.size for o in out.values()) / dt
+            if tps > best[label][0]:
+                best[label] = (tps, (out, dt, eng))
+    clean_tps, (clean_out, _, clean_eng) = best["clean"]
+    fault_tps, (fault_out, fault_dt, fault_eng) = best["faults(1%)"]
+    clean_steps, fault_steps = clean_eng._tick, fault_eng._tick
+    dispatch_identical = all(
+        np.array_equal(clean_out[i], fault_out[i])
+        for i in range(len(prompts)))
+
+    # quarantine run: poison one resident's logits, survivors must not move
+    qplan = FaultPlan.of(seed=5, logits=FaultSpec(1.0, max_fires=1))
+    q_out, _, q_eng = _fault_run(model, params, prompts, gen, slots=slots,
+                                 max_seq=max_seq, plan=qplan)
+    q_failed = [i for i, st in q_eng._results.items()
+                if st.status == Status.FAILED]
+    survivors_identical = all(
+        np.array_equal(clean_out[i], q_out[i])
+        for i in range(len(prompts)) if i not in q_failed)
+
+    # deadline probe: expire request 0 mid-decode, measure the overrun
+    # against the engine's own mean step wall time
+    step_s = fault_dt / max(1, fault_eng._tick)
+    deadline_ms = max(5.0 * step_s * 1e3, 5.0)
+    d_out, _, d_eng = _fault_run(model, params, prompts, gen, slots=slots,
+                                 max_seq=max_seq,
+                                 deadlines={0: deadline_ms})
+    overrun = d_eng.stats["deadline_overrun_s"].get(0)
+    d_step_s = max(step_s, 1e-9)
+    reclaimed = all(e.cache_mgr.free_pages == e.cache_mgr.num_pages
+                    for e in (fault_eng, q_eng, d_eng))
+
+    report.table("serving_fault_sweep", [
+        {"mode": "clean", "tokens_per_s": round(clean_tps, 1),
+         "steps": clean_steps},
+        {"mode": "faults(1%)", "tokens_per_s": round(fault_tps, 1),
+         "steps": fault_steps,
+         "fired": dict(fault_eng.stats["faults"])},
+        {"mode": "quarantine", "poisoned": q_eng.stats["poisoned"],
+         "quarantined": q_eng.stats["quarantined"],
+         "failed": len(q_failed)},
+        {"mode": "deadline",
+         "deadline_ms": round(deadline_ms, 2),
+         "overrun_ms": (None if overrun is None
+                        else round(overrun * 1e3, 2)),
+         "timed_out": d_eng.stats["timed_out"]}])
+    report.claims("serving_faults", {
+        "1% dispatch faults keep >= 95% of clean tokens/s": (
+            fault_steps <= int(1.05 * clean_steps) and dispatch_identical,
+            f"steps={fault_steps} vs clean={clean_steps} "
+            f"(identical tokens, so the step ratio is the throughput "
+            f"ratio at equal step cost); wall best-of "
+            f"fault={fault_tps:.1f} vs clean={clean_tps:.1f} tok/s"),
+        "dispatch faults cost steps, never tokens (bit-identical)": (
+            dispatch_identical and fault_eng._injector.total_fired() > 0,
+            f"{len(prompts)} streams compared, "
+            f"fired={dict(fault_eng.stats['faults'])}"),
+        "quarantine blast radius is one slot, survivors bit-identical": (
+            len(q_failed) == 1 and survivors_identical,
+            f"failed={q_failed}, "
+            f"quarantined={q_eng.stats['quarantined']}"),
+        "timed-out request departs within ~one step of its deadline": (
+            overrun is not None
+            and overrun <= max(2.5 * d_step_s, 0.05)
+            and d_out[0].size < gen,
+            f"overrun={0 if overrun is None else overrun * 1e3:.1f}ms vs "
+            f"mean step={d_step_s * 1e3:.1f}ms"),
+        "all pages reclaimed after every faulted drain": (
+            reclaimed, "refcounts zero across fault/quarantine/deadline "
+            "runs"),
+    })
+    report.note("serving_faults",
+                f"fault firing is a pure function of (seed, site, consult "
+                f"counter): plan seed {plan.seed} replays "
+                f"{fault_eng._injector.total_fired()} fires exactly")

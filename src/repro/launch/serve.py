@@ -39,6 +39,17 @@ Sampling knobs (per-slot stochastic decode inside the compiled step):
   * ``--sampling-mix f`` samples only a fraction ``f`` of the requests
     (evenly spread), the rest stay greedy — the mixed traffic shape the
     bench sweep measures.
+
+Robustness knobs (the failure model; see serving/README.md):
+
+  * ``--deadline-ms`` gives every request a wall-clock deadline; expiry
+    departs it ``TIMED_OUT`` with its partial output (a clean prefix of
+    the fault-free stream).
+  * ``--fault-plan site:rate[:seed],...`` turns on deterministic fault
+    injection (sites: alloc/chunk/decode/logits/draft).  Same plan + same
+    traffic ⟹ the identical failure interleaving, replayable bit-exactly.
+  * ``--health`` enables the degradation ladder; rung transitions and the
+    fault/quarantine counters are printed after the run.
 """
 from __future__ import annotations
 
@@ -50,8 +61,9 @@ import numpy as np
 
 from repro.models import registry
 from repro.runtime.serving import (DEFAULT_BUCKETS, EngineConfig, GREEDY,
-                                   Request, SamplingParams, ServingEngine,
-                                   SpecConfig)
+                                   HealthConfig, Request, SamplingParams,
+                                   ServingEngine, SpecConfig,
+                                   parse_fault_plan)
 
 
 def parse_speculative(text: str) -> SpecConfig:
@@ -156,6 +168,20 @@ def report_stats(eng: ServingEngine) -> None:
               f"p50={_percentile(ttft, 50):.4f} "
               f"p90={_percentile(ttft, 90):.4f} "
               f"max={max(ttft):.4f} (n={len(ttft)})")
+    if eng._injector is not None or eng.health is not None:
+        # robustness line: what the fault plan did and where the ladder
+        # ended up — the serve-side view of the failure model
+        fired = dict(stats.get("faults", {}))
+        overruns = stats.get("deadline_overrun_s", {})
+        print(f"robustness: health={stats.get('health', 'n/a')} "
+              f"transitions={stats.get('health_transitions', 0)} "
+              f"faults={fired} poisoned={stats['poisoned']} "
+              f"quarantined={stats['quarantined']} "
+              f"timed_out={stats['timed_out']} failed={stats['failed']} "
+              f"deadline_overruns={len(overruns)}")
+        if eng.health is not None and eng.health.transitions:
+            for step, frm, to, why in eng.health.transitions:
+                print(f"  health step {step}: {frm} -> {to} ({why})")
 
 
 def generate(bundle, params, prompts: np.ndarray, *, gen_tokens: int,
@@ -239,6 +265,22 @@ def main(argv=None):
                         "arch proposes k tokens/round, the target verifies "
                         "them in one chunk-shaped step; output streams stay "
                         "bit-identical to plain decode")
+    p.add_argument("--deadline-ms", type=float, default=None,
+                   help="per-request wall-clock deadline; a request still "
+                        "in flight past it departs TIMED_OUT with its "
+                        "partial output")
+    p.add_argument("--fault-plan", default=None, metavar="PLAN",
+                   help="deterministic fault injection: comma-separated "
+                        "site:rate[:seed] entries over sites "
+                        "alloc/chunk/decode/logits/draft, e.g. "
+                        "'alloc:0.05,logits:0.01:7'; seeded by --seed "
+                        "unless overridden per site — reruns replay the "
+                        "identical failure interleaving")
+    p.add_argument("--health", action="store_true",
+                   help="enable the degradation ladder (HEALTHY -> "
+                        "DEGRADED -> SHEDDING -> DRAINING) over default "
+                        "HealthConfig thresholds; transitions are printed "
+                        "with the stats")
     p.add_argument("--reduced", action="store_true", default=True)
     args = p.parse_args(argv)
 
@@ -300,7 +342,10 @@ def main(argv=None):
         prefix_sharing=args.prefix_sharing, donate=donate,
         base_seed=args.seed,
         speculative=(parse_speculative(args.speculative)
-                     if args.speculative else None)))
+                     if args.speculative else None),
+        faults=(parse_fault_plan(args.fault_plan, seed=args.seed)
+                if args.fault_plan else None),
+        health=HealthConfig() if args.health else None))
     plan = sampling_plan(args.requests, temperature=args.temperature,
                          top_k=args.top_k, top_p=args.top_p,
                          min_p=args.min_p, seed=args.seed,
@@ -309,6 +354,7 @@ def main(argv=None):
         eng.submit(Request(
             uid=i, prompt=prompts[i],
             max_new_tokens=args.gen, sampling=plan[i],
+            deadline_ms=args.deadline_ms,
             extras={k: v[i] for k, v in extras.items()}))
 
     t0 = time.perf_counter()

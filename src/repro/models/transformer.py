@@ -717,7 +717,7 @@ class LM:
         return logits, new_cache
 
     def decode_and_sample(self, params, token_t, cache, pos, samp,
-                          share=None):
+                          share=None, with_flags=False):
         """One decode step + on-device sampling: the serving engine's
         compiled step body, shared by every LM family (all on the
         rows/arena decode path via their ``layer_decode_rows`` /
@@ -732,11 +732,20 @@ class LM:
         function of the request's seed and the absolute position, never of
         batch composition or donation generation.  Slots with
         ``temp <= 0`` take the bit-exact argmax path.
+
+        ``with_flags``: additionally return a (B,) bool per-slot health
+        flag — True iff the slot's logits row is entirely finite — as
+        ``(tok, ok, new_cache)``.  The serving engine's quarantine path
+        reads it off the step's readback to depart a NaN/Inf-poisoned slot
+        without ever shipping the (B, V) logits to the host.
         """
         logits, new_cache = self.decode_step(params, token_t, cache, pos,
                                              share=share)
         tok = L.sample_step(logits, samp["seed"], pos + 1, samp["temp"],
                             samp["top_k"], samp["top_p"], samp["min_p"])
+        if with_flags:
+            ok = jnp.isfinite(logits).all(axis=-1)
+            return tok, ok, new_cache
         return tok, new_cache
 
     def _decode_rows(self, params, cfg, x_t, cache, pos, layer_xs,

@@ -18,9 +18,13 @@ from repro.runtime.serving.chunking import (DEFAULT_BUCKETS, chunk_plan,
                                             padded_len, tail_plan)
 from repro.runtime.serving.config import EngineConfig
 from repro.runtime.serving.engine import ServingEngine
+from repro.runtime.serving.faults import (FaultInjector, FaultPlan,
+                                          FaultSpec, parse_fault_plan)
+from repro.runtime.serving.health import (HealthConfig, HealthMonitor,
+                                          HealthState)
 from repro.runtime.serving.request import Request, RequestState, Status
 from repro.runtime.serving.sampling import GREEDY, SamplingParams
-from repro.runtime.serving.scheduler import Scheduler
+from repro.runtime.serving.scheduler import AdmissionRejected, Scheduler
 from repro.runtime.serving.speculative import SpecConfig, SpecController
 
 # kept importable for compatibility, deliberately outside __all__
@@ -28,6 +32,9 @@ _internal = (cache_insert, chunk_plan, padded_len, tail_plan)
 
 __all__ = ["EngineConfig", "ServingEngine",
            "SpecConfig", "SpecController",
+           "FaultPlan", "FaultSpec", "FaultInjector", "parse_fault_plan",
+           "HealthConfig", "HealthMonitor", "HealthState",
+           "AdmissionRejected",
            "PagedKVCacheManager", "AllocResult", "PrefixMatch",
            "DEFAULT_BUCKETS",
            "Request", "RequestState", "Status", "Scheduler",

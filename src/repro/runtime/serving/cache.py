@@ -142,7 +142,8 @@ class PagedKVCacheManager:
     """
 
     def __init__(self, num_pages: int, page_size: int, *,
-                 max_chains: Optional[int] = None):
+                 max_chains: Optional[int] = None,
+                 fault: Optional[Any] = None):
         """``max_chains`` (optional): retention policy for registered
         prefix chains.  ``None`` (the default) keeps the original
         lifetime — a chain's pages return to the pool with their last
@@ -153,7 +154,15 @@ class PagedKVCacheManager:
         forkable — the first step toward cross-request dedup), and when
         more than ``max_chains`` regions host registered pages the
         least-recently-*forked* chain is evicted — its index references
-        drop, and pages with no remaining holder return to the pool."""
+        drop, and pages with no remaining holder return to the pool.
+
+        ``fault`` (optional): a deterministic fault hook — a callable
+        ``fault(site: str) -> bool`` (the engine binds a
+        :class:`~repro.runtime.serving.faults.FaultInjector`).  When
+        ``fault("alloc")`` fires, :meth:`allocate` / :meth:`extend` refuse
+        with ``reason="fault-injected"`` and the normal recovery machinery
+        (admission backoff, youngest-preemption) takes over — the manager
+        itself stays decoupled from the injector type."""
         if num_pages < 1 or page_size < 1:
             raise ValueError((num_pages, page_size))
         if max_chains is not None and max_chains < 1:
@@ -162,6 +171,7 @@ class PagedKVCacheManager:
         self.num_pages = num_pages
         self.page_size = page_size
         self.max_chains = max_chains
+        self._fault = fault
         self._free: list[int] = list(range(num_pages - 1, -1, -1))
         self._table: dict[int, list[int]] = {}     # slot -> owned page ids
         self._length: dict[int, int] = {}          # slot -> token count
@@ -204,6 +214,13 @@ class PagedKVCacheManager:
     def refcount(self, page: int) -> int:
         return self._ref.get(page, 0)
 
+    def hosts_registered(self, slot: int) -> bool:
+        """True if ``slot``'s arena region physically hosts registered
+        prefix pages (whether or not the slot is occupied) — the fault
+        injector's logits-poison site skips such regions so a fault's
+        blast radius never crosses a share view."""
+        return bool(self._hosted.get(slot))
+
     def region_pinned(self, slot: int) -> bool:
         """True if ``slot``'s arena region hosts live registered prefix
         pages whose refcounts haven't drained — a new occupant would
@@ -222,6 +239,8 @@ class PagedKVCacheManager:
         slot's region is pinned by live shared pages of a departed donor."""
         if slot in self._table:
             raise ValueError(f"slot {slot} already allocated")
+        if self._fault is not None and self._fault("alloc"):
+            return AllocResult(False, reason="fault-injected")
         if self.region_pinned(slot):
             return AllocResult(False, reason="region-pinned")
         need = self.pages_for(length)
@@ -243,6 +262,8 @@ class PagedKVCacheManager:
         preempts); the slot keeps what it had."""
         if slot not in self._table:
             raise ValueError(f"slot {slot} not allocated")
+        if self._fault is not None and self._fault("alloc"):
+            return AllocResult(False, reason="fault-injected")
         need = self.pages_for(new_length) - len(self._table[slot])
         if need > self.free_pages:
             return AllocResult(False, reason="no-pages")

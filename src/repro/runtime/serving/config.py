@@ -20,6 +20,8 @@ import dataclasses
 from typing import Any, Optional
 
 from repro.runtime.serving.chunking import validate_buckets
+from repro.runtime.serving.faults import FaultPlan
+from repro.runtime.serving.health import HealthConfig
 from repro.runtime.serving.speculative import SpecConfig
 
 
@@ -51,6 +53,20 @@ class EngineConfig:
                         ``prefix_sharing`` (the verify chunk would need
                         the composed share view threaded through a second
                         arena — unsupported, rejected here)
+    ``faults``          deterministic fault injection (:class:`FaultPlan`);
+                        None = no injection.  Each site fires as a pure
+                        function of (fault seed, site, consult index) —
+                        failure interleavings replay bit-exactly
+    ``health``          the degradation ladder (:class:`HealthConfig`);
+                        None = no health monitoring
+    ``admission_reclaim_cap``   orphan-chain reclaims per placement attempt
+    ``admission_attempt_cap``   failed placements before a request departs
+                        FAILED with a typed ``AdmissionRejected``
+                        (None = retry forever, the legacy behavior)
+    ``admission_backoff_cap``   exponential admission backoff ceiling, in
+                        engine steps
+    ``preempt_cap``     preemption-recomputes before a request departs
+                        FAILED (``"recompute-cap"``); None = unbounded
     """
     max_slots: int = 8
     max_seq: int = 256
@@ -64,6 +80,12 @@ class EngineConfig:
     donate: Any = "auto"
     base_seed: int = 0
     speculative: Optional[SpecConfig] = None
+    faults: Optional[FaultPlan] = None
+    health: Optional[HealthConfig] = None
+    admission_reclaim_cap: int = 8
+    admission_attempt_cap: Optional[int] = None
+    admission_backoff_cap: int = 32
+    preempt_cap: Optional[int] = None
 
     def __post_init__(self):
         for name in ("max_slots", "max_seq", "page_size"):
@@ -113,6 +135,29 @@ class EngineConfig:
             raise ValueError(
                 f"EngineConfig.donate must be 'auto', True or False, "
                 f"got {self.donate!r}")
+        if self.faults is not None and not isinstance(self.faults,
+                                                      FaultPlan):
+            raise ValueError(
+                f"EngineConfig.faults must be a FaultPlan or None, "
+                f"got {type(self.faults).__name__}")
+        if self.health is not None and not isinstance(self.health,
+                                                      HealthConfig):
+            raise ValueError(
+                f"EngineConfig.health must be a HealthConfig or None, "
+                f"got {type(self.health).__name__}")
+        if self.admission_reclaim_cap < 1:
+            raise ValueError(
+                f"EngineConfig.admission_reclaim_cap must be >= 1, "
+                f"got {self.admission_reclaim_cap}")
+        for name in ("admission_attempt_cap", "preempt_cap"):
+            v = getattr(self, name)
+            if v is not None and v < 1:
+                raise ValueError(f"EngineConfig.{name} must be >= 1 or "
+                                 f"None, got {v}")
+        if self.admission_backoff_cap < 1:
+            raise ValueError(
+                f"EngineConfig.admission_backoff_cap must be >= 1, "
+                f"got {self.admission_backoff_cap}")
 
     def replace(self, **changes) -> "EngineConfig":
         """Functional update (re-runs validation)."""

@@ -93,8 +93,10 @@ from repro.runtime.serving import chunking, sampling
 from repro.runtime.serving.cache import (PagedKVCacheManager, PrefixMatch,
                                          cache_insert)
 from repro.runtime.serving.config import EngineConfig
+from repro.runtime.serving.faults import FaultInjector
+from repro.runtime.serving.health import HealthMonitor, HealthState
 from repro.runtime.serving.request import Request, RequestState, Status
-from repro.runtime.serving.scheduler import Scheduler
+from repro.runtime.serving.scheduler import AdmissionRejected, Scheduler
 from repro.runtime.serving.speculative import SpecController
 
 
@@ -163,8 +165,9 @@ def _compiled_decode(model, donate):
         # key material lives in device state, so donating ``samp`` (it
         # passes through unchanged, aliased in place) cannot perturb a
         # stream across donation generations.
-        sampled, cache = model.decode_and_sample(params, tokens, cache,
-                                                 pos, samp)
+        sampled, ok, cache = model.decode_and_sample(params, tokens, cache,
+                                                     pos, samp,
+                                                     with_flags=True)
         # dead slots: keep the old token (tail-undisturbed) & freeze pos
         tokens = masking.apply_mask(tokens, sampled, active == 1)
         pos = pos + active
@@ -174,8 +177,12 @@ def _compiled_decode(model, donate):
         # next step (a value-identical copy like ``tokens + 0`` could be
         # simplified away and end up sharing the doomed buffer).  The
         # drain only consumes entries for slots that were RUNNING at
-        # submit (active == 1), where sampled == masked tokens.
-        return tokens, cache, pos, active, samp, sampled
+        # submit (active == 1), where sampled == masked tokens.  ``ok``
+        # rides the same readback: a (B,) bool per-slot health flag (the
+        # slot's logits row is entirely finite) the drain checks before
+        # committing — a NaN/Inf-poisoned slot is quarantined without the
+        # (B, V) logits ever leaving the device.
+        return tokens, cache, pos, active, samp, sampled, ok
     return jax.jit(step, donate_argnums=(1, 2, 3, 4, 5) if donate else ())
 
 
@@ -193,9 +200,10 @@ def _compiled_decode_greedy(model, donate):
     def step(params, tokens, cache, pos, active, samp):
         logits, cache = model.decode_step(params, tokens, cache, pos)
         sampled = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        ok = jnp.isfinite(logits).all(axis=-1)
         tokens = masking.apply_mask(tokens, sampled, active == 1)
         pos = pos + active
-        return tokens, cache, pos, active, samp, sampled
+        return tokens, cache, pos, active, samp, sampled, ok
     return jax.jit(step, donate_argnums=(1, 2, 3, 4, 5) if donate else ())
 
 
@@ -210,12 +218,12 @@ def _compiled_decode_shared(model, donate):
     identity, so one executable serves mixed shared/unshared batches
     bit-identically to the unshared twin."""
     def step(params, tokens, cache, pos, active, samp, share):
-        sampled, cache = model.decode_and_sample(
+        sampled, ok, cache = model.decode_and_sample(
             params, tokens, cache, pos, samp,
-            share=(share["src"], share["len"]))
+            share=(share["src"], share["len"]), with_flags=True)
         tokens = masking.apply_mask(tokens, sampled, active == 1)
         pos = pos + active
-        return tokens, cache, pos, active, samp, share, sampled
+        return tokens, cache, pos, active, samp, share, sampled, ok
     return jax.jit(step,
                    donate_argnums=(1, 2, 3, 4, 5, 6) if donate else ())
 
@@ -226,9 +234,10 @@ def _compiled_decode_greedy_shared(model, donate):
         logits, cache = model.decode_step(
             params, tokens, cache, pos, share=(share["src"], share["len"]))
         sampled = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        ok = jnp.isfinite(logits).all(axis=-1)
         tokens = masking.apply_mask(tokens, sampled, active == 1)
         pos = pos + active
-        return tokens, cache, pos, active, samp, share, sampled
+        return tokens, cache, pos, active, samp, share, sampled, ok
     return jax.jit(step,
                    donate_argnums=(1, 2, 3, 4, 5, 6) if donate else ())
 
@@ -279,7 +288,8 @@ def _compiled_verify(model, donate):
         logits, cache = model.verify_chunk(params, tokens, cache, slot,
                                            start)
         draws = sampling.verify_draws(logits[0], slot, start, samp)
-        return draws, cache
+        ok = jnp.isfinite(logits[0]).all()
+        return draws, ok, cache
     return jax.jit(step, donate_argnums=(1,) if donate else ())
 
 
@@ -292,7 +302,9 @@ def _compiled_verify_greedy(model, donate):
         del samp
         logits, cache = model.verify_chunk(params, tokens, cache, slot,
                                            start)
-        return jnp.argmax(logits[0], axis=-1).astype(jnp.int32), cache
+        draws = jnp.argmax(logits[0], axis=-1).astype(jnp.int32)
+        ok = jnp.isfinite(logits[0]).all()
+        return draws, ok, cache
     return jax.jit(step, donate_argnums=(1,) if donate else ())
 
 
@@ -423,7 +435,13 @@ class ServingEngine:
     """
 
     def __init__(self, model, cfg, params, *,
-                 config: Optional[EngineConfig] = None, **legacy):
+                 config: Optional[EngineConfig] = None,
+                 clock=None, **legacy):
+        # ``clock``: the engine's wall-clock source (default
+        # time.perf_counter) — drives submitted_at / ttft / deadlines, so
+        # deadline tests inject a fake clock and replay expiries
+        # deterministically.
+        self._clock = clock if clock is not None else time.perf_counter
         if legacy:
             if config is not None:
                 raise TypeError(
@@ -466,16 +484,31 @@ class ServingEngine:
             raise ValueError(
                 f"family {cfg.family!r} does not support prefix sharing "
                 f"(needs the chunked-prefill and arena-decode hooks)")
+        # fault injection: one seeded injector shared by every site; the
+        # cache manager consults it through a narrow callable so cache.py
+        # stays decoupled from the injector type
+        self._injector = (FaultInjector(config.faults)
+                          if config.faults is not None else None)
         num_pages = config.num_pages
         if num_pages is None:       # default: pool sized to the full arena
             num_pages = max_slots * -(-max_seq // config.page_size)
         self.cache_mgr = PagedKVCacheManager(
             num_pages, config.page_size,
-            max_chains=config.prefix_chain_cap)
-        self.scheduler = Scheduler(max_slots, self.cache_mgr,
-                                   prefix_extra=self.prefix_extra,
-                                   max_len=max_seq,
-                                   chunked=prefill_chunks is not None)
+            max_chains=config.prefix_chain_cap,
+            fault=self._cache_fault if self._injector else None)
+        self.scheduler = Scheduler(
+            max_slots, self.cache_mgr,
+            prefix_extra=self.prefix_extra,
+            max_len=max_seq,
+            chunked=prefill_chunks is not None,
+            admission_reclaim_cap=config.admission_reclaim_cap,
+            admission_attempt_cap=config.admission_attempt_cap,
+            admission_backoff_cap=config.admission_backoff_cap,
+            preempt_cap=config.preempt_cap)
+        # health ladder: observed once per step off the engine's own
+        # counters; its state gates spec/prefill/admission (see health.py)
+        self.health = (HealthMonitor(config.health)
+                       if config.health is not None else None)
 
         # device state: the slot batch
         self._tokens = jnp.zeros((max_slots,), jnp.int32)
@@ -570,9 +603,10 @@ class ServingEngine:
             self._verify_greedy = _compiled_verify_greedy(model, self.donate)
             self._verify_shapes: set = set()
         # decode-state buffers are donated into each step, so the queue
-        # tracks the never-donated readback copy (out[-1]) for backpressure
+        # tracks a never-donated readback output (the sampled vector,
+        # out[-2] — out[-1] is the ok-flag readback) for backpressure
         self._queue = DispatchQueue(self._submit_decode, depth=self.depth,
-                                    inflight_of=lambda out: out[-1])
+                                    inflight_of=lambda out: out[-2])
         # readback copies of in-flight steps' tokens, with the slot→state
         # map seen at submit; per-slot admission generation guards against
         # crediting a stale in-flight token to a slot that was recycled
@@ -586,13 +620,32 @@ class ServingEngine:
         # ("prefill", prompt_len) monolithic, ("chunk", size) chunked
         self._prefill_shapes: set = set()
         self._prefill_tick = 0
+        # robustness state: the engine's step counter (admission backoff
+        # ticks), the per-step fault flag feeding the health monitor's
+        # consecutive-faults signal, and the lazily-built NaN template for
+        # the logits-poison site
+        self._tick = 0
+        self._step_faulted = False
+        self._deadlines_active = False
+        self._nan_one = None
+        self._zero_one = None
+        self._poisoned_slots: set = set()
+        self._spec_resync = False
         self.stats = {"decode_steps": 0, "prefills": 0, "prefill_chunks": 0,
                       "prefill_compiles": 0, "prefill_rows": 0,
                       "tokens_out": 0, "requests": 0,
                       "sampled_requests": 0, "sampled_steps": 0,
                       "forks": 0, "shared_prompt_tokens": 0,
                       "prefix_hits": 0, "prefix_deferrals": 0,
+                      "timed_out": 0, "failed": 0, "quarantined": 0,
+                      "poisoned": 0, "deadline_overrun_s": {},
                       "host_blocked_s": 0.0, "ttft_s": {}}
+        if self._injector is not None:
+            # live view of per-site fire counts (aliased, not copied)
+            self.stats["faults"] = self._injector.fired
+        if self.health is not None:
+            self.stats["health"] = self.health.state.name
+            self.stats["health_transitions"] = 0
         if self.spec is not None:
             # speculative counters: rounds = verify rounds (the spec
             # analogue of decode_steps), draft_steps = draft micro-steps,
@@ -610,6 +663,121 @@ class ServingEngine:
             return self._decode(self.params, *state)
         return self._decode_greedy(self.params, *state)
 
+    # -- fault / health plumbing ---------------------------------------------
+    def _cache_fault(self, site: str) -> bool:
+        """The cache manager's fault hook: delegates to the injector and
+        flags the step so the health ladder sees allocation faults."""
+        if self._injector.fire(site):
+            self._step_faulted = True
+            return True
+        return False
+
+    @property
+    def _health_state(self) -> HealthState:
+        return self.health.state if self.health else HealthState.HEALTHY
+
+    def _effective_prefill_budget(self) -> int:
+        """The configured budget, shrunk by the ladder at >= SHEDDING."""
+        budget = self.prefill_budget
+        if (self.health is not None and budget
+                and self._health_state >= HealthState.SHEDDING):
+            budget = max(1, int(budget
+                                * self.health.config.shed_prefill_frac))
+        return budget
+
+    def _depart(self, st: RequestState, status: Status,
+                reason: str) -> None:
+        """Abnormal departure + decode-batch deactivation (the engine half
+        of ``Scheduler.depart``)."""
+        slot = self.scheduler.depart(st, status, reason)
+        if slot is not None:
+            self._active = self._active.at[slot].set(0)
+        key = "timed_out" if status == Status.TIMED_OUT else "failed"
+        self.stats[key] += 1
+
+    def _expire_deadlines(self) -> None:
+        """Depart every request whose deadline passed — WAITING and
+        resident alike — with TIMED_OUT and its partial output (a clean
+        prefix of the fault-free stream).  The overrun is recorded per
+        request for the bench gate ('departs within one step')."""
+        if not self._deadlines_active:
+            return
+        now = self._clock()
+        states = [*self.scheduler.waiting,
+                  *list(self.scheduler.running.values())]
+        for st in states:
+            if st.deadline_at is None or now < st.deadline_at or st.done:
+                continue
+            self.stats["deadline_overrun_s"][st.request.uid] = (
+                now - st.deadline_at)
+            self._depart(st, Status.TIMED_OUT, "deadline")
+
+    def _observe_health(self) -> None:
+        """Feed the ladder one step of signals; apply DRAINING (waiting
+        requests fail now so ``run()`` converges — residents finish)."""
+        if self.health is None:
+            return
+        state = self.health.observe(
+            step=self._tick,
+            pressure=self.cache_mgr.utilization(),
+            preemptions=self.scheduler.stats["preempted"],
+            timeouts=self.scheduler.stats["timed_out"],
+            step_fault=self._step_faulted)
+        self._step_faulted = False
+        self.stats["health"] = state.name
+        self.stats["health_transitions"] = len(self.health.transitions)
+        if state >= HealthState.DRAINING:
+            for st in list(self.scheduler.waiting):
+                self._depart(st, Status.FAILED, "draining")
+
+    def _poison_slot(self, running) -> None:
+        """The ``logits`` fault site: overwrite one RUNNING slot's arena
+        region with NaN, so its next decode/verify logits go non-finite
+        and the quarantine path departs it.  The victim pick is
+        deterministic (injector ``choose``).  Slots serving as prefix
+        donors — or hosting registered prefix pages a later fork could
+        map — are excluded: the blast radius must stay one slot so the
+        survivor-bit-identity contract is testable."""
+        cands = sorted(running, key=lambda s: s.slot)
+        if self.prefix_sharing:
+            donors = {st.share_src for st in
+                      self.scheduler.running.values()
+                      if st.share_src is not None
+                      and st.share_src != st.slot}
+            cands = [st for st in cands
+                     if st.slot not in donors
+                     and not self.cache_mgr.hosts_registered(st.slot)]
+        if not cands:
+            return
+        victim = cands[self._injector.choose("logits", len(cands))]
+        if self._nan_one is None:
+            # NaN-filled batch=1 cache template, spliced by the existing
+            # donated insert — no new executables for the poison path
+            self._nan_one = jax.tree.map(
+                lambda leaf: (jnp.full_like(leaf, jnp.nan)
+                              if jnp.issubdtype(leaf.dtype, jnp.inexact)
+                              else leaf),
+                self._one_cache)
+        self._cache = self._insert(self._cache, self._nan_one,
+                                   jnp.int32(victim.slot))
+        self._poisoned_slots.add(victim.slot)
+        self.stats["poisoned"] += 1
+        self._step_faulted = True
+
+    def _scrub_slot(self, slot: int) -> None:
+        """Reset a poisoned slot's arena region to zeros before a new
+        resident prefills into it.  Monolithic prefill re-splices the
+        whole region anyway, but chunked prefill only writes chunk-sized
+        slices — a stale NaN tail would then re-trigger quarantine for the
+        innocent next resident through the masked value aggregation
+        (softmax weight 0 times NaN is still NaN)."""
+        if self._zero_one is None:
+            self._zero_one = jax.tree.map(
+                lambda leaf: jnp.zeros_like(leaf), self._one_cache)
+        self._cache = self._insert(self._cache, self._zero_one,
+                                   jnp.int32(slot))
+        self._poisoned_slots.discard(slot)
+
     def _note_prefill_shape(self, key) -> None:
         self._prefill_shapes.add(key)
         self.stats["prefill_compiles"] = len(self._prefill_shapes)
@@ -617,11 +785,16 @@ class ServingEngine:
     def _first_token(self, st: RequestState) -> None:
         if st.ttft_s is not None:
             return      # preemption recompute: keep the *first* first-token
-        st.ttft_s = time.perf_counter() - st.submitted_at
+        st.ttft_s = self._clock() - st.submitted_at
         self.stats["ttft_s"][st.request.uid] = st.ttft_s
 
     # -- intake --------------------------------------------------------------
     def submit(self, request: Request) -> RequestState:
+        # shedding / draining replicas refuse intake up front — the typed
+        # rejection is the router's signal to try another replica
+        if self._health_state >= HealthState.SHEDDING:
+            raise AdmissionRejected(request.uid,
+                                    self._health_state.name.lower())
         # prompt-vs-arena validation happens here in *both* prefill modes:
         # a monolithic prompt longer than the slot arena used to slip past
         # this method (the splice's dynamic_update_slice clamps = silently
@@ -655,7 +828,10 @@ class ServingEngine:
                     require_snapshot=self._needs_state_snapshot):
                 self.stats["prefix_hits"] += 1
         st = self.scheduler.submit(request, chunk_plan=plan)
-        st.submitted_at = time.perf_counter()
+        st.submitted_at = self._clock()
+        if request.deadline_ms is not None:
+            st.deadline_at = st.submitted_at + request.deadline_ms / 1e3
+            self._deadlines_active = True
         self.stats["requests"] += 1
         if not request.sampling.is_greedy:
             self.stats["sampled_requests"] += 1
@@ -664,11 +840,13 @@ class ServingEngine:
 
     # -- admission (prefill + splice) ----------------------------------------
     def _admit(self) -> None:
-        for st in self.scheduler.schedule():
+        for st in self.scheduler.schedule(tick=self._tick):
             if st.slot is None:
                 # evicted again by an earlier admission's row reservation
                 # before we got to prefill it — it's back in the wait queue
                 continue
+            if st.slot in self._poisoned_slots:
+                self._scrub_slot(st.slot)
             if st.status == Status.PREFILLING:
                 # chunked: park the slot's position pointer at the sentinel
                 # so in-flight decode steps cannot touch the slot — KV
@@ -720,10 +898,20 @@ class ServingEngine:
         sp = st.request.sampling
         seed = sampling.resolve_seed(sp, self.base_seed)
         pos0 = st.prompt_len + self.prefix_extra
+        # prefill-path quarantine: non-finite prompt logits (poisoned
+        # arena rows, bad weights) fail the request before it can commit
+        # a garbage first token.  The check syncs with the token0 read
+        # below, so it adds no extra host round-trip.
+        ok0 = jnp.isfinite(logits).all()
         if sp.is_greedy:    # temp <= 0 ⟺ argmax: skip the masked transform
             token0 = jnp.argmax(logits[0], -1).astype(jnp.int32)
         else:
             token0 = sampling.sample_first(logits, seed, pos0, sp)
+        if not bool(ok0):
+            self.stats["quarantined"] += 1
+            self._step_faulted = True
+            self._depart(st, Status.FAILED, "nan-logits")
+            return
         self._samp = sampling.write_slot(self._samp, slot, sp, seed)
         if self.prefix_sharing:
             # (re)write the slot's share vectors before it joins the
@@ -771,6 +959,10 @@ class ServingEngine:
             return
         self._prefill_tick += 1
         spent = 0
+        budget = self._effective_prefill_budget()
+        faulted: set = set()    # slots whose ingest dispatch was dropped
+        #                         this step (chunk fault site): they stall
+        #                         one full step, cursor unmoved
 
         def prefilling():
             return [st for st in self.scheduler.running.values()
@@ -786,8 +978,10 @@ class ServingEngine:
             # strictly older pure prefill), so this can only fork
             self._maybe_fork(oldest)
             size = oldest.chunk_plan[oldest.chunk_idx]
-            self._prefill_one_chunk(oldest, size)
-            spent += size
+            if self._prefill_one_chunk(oldest, size):
+                spent += size
+            else:
+                faulted.add(oldest.slot)
         while True:
             states = sorted(prefilling(),
                             key=lambda s: (s.prefill_pos, s.seq))
@@ -797,19 +991,23 @@ class ServingEngine:
             for st in states:
                 if st.status != Status.PREFILLING or st.slot is None:
                     continue        # departed via an earlier activation
+                if st.slot in faulted:
+                    continue        # dropped dispatch: stalled this step
                 if self._maybe_fork(st):
                     continue        # deferred: an older donor is still
                     #                 publishing this slot's prefix
                 size = st.chunk_plan[st.chunk_idx]
                 # always ingest at least one chunk per step (progress
                 # guarantee), then stay within the budget
-                if spent and spent + size > self.prefill_budget:
+                if spent and spent + size > budget:
                     return
-                self._prefill_one_chunk(st, size)
+                if not self._prefill_one_chunk(st, size):
+                    faulted.add(st.slot)
+                    continue
                 spent += size
                 progressed = True
             if not progressed:
-                return              # everything left is deferred
+                return              # everything left is deferred/faulted
 
     def _maybe_fork(self, st: RequestState) -> bool:
         """At a slot's first ingestion under prefix sharing: try to remap
@@ -916,7 +1114,13 @@ class ServingEngine:
         self.cache_mgr.register_prefix(st.slot, st.request.prompt, upto,
                                        snapshot=snap)
 
-    def _prefill_one_chunk(self, st: RequestState, size: int) -> None:
+    def _prefill_one_chunk(self, st: RequestState, size: int) -> bool:
+        """Ingest one chunk; False if the dispatch was dropped by the
+        ``chunk`` fault site (cursor unmoved — the slot retries next
+        step, replaying the identical chunk)."""
+        if self._injector is not None and self._injector.fire("chunk"):
+            self._step_faulted = True
+            return False
         req = st.request
         plen = st.prompt_len
         start = st.prefill_pos
@@ -955,12 +1159,13 @@ class ServingEngine:
         if self.prefix_sharing and st.share_src is None:
             self._register_prefix(st)
         if not is_last:
-            return
+            return True
         # final chunk: sample the first token and join the decode batch
         self.scheduler.finish_prefill(st.slot)
         # steps submitted mid-prefill are stale for this slot: drop them
         self._slot_gen[st.slot] += 1
         self._activate_slot(st, logits)
+        return True
 
     # -- speculative rounds ---------------------------------------------------
     def _spec_round(self) -> None:
@@ -1021,6 +1226,13 @@ class ServingEngine:
         t0 = time.perf_counter()
         props = np.stack([np.asarray(p) for p in proposals])     # (k, B)
         self.stats["host_blocked_s"] += time.perf_counter() - t0
+        if self._injector is not None and self._injector.fire("draft"):
+            # corrupt the round's proposals host-side.  Self-correcting by
+            # construction: acceptance compares against the target's own
+            # draws, so the committed stream is unchanged — only the
+            # acceptance rate collapses for this round.
+            props = (props + 1) % self.cfg.vocab
+            self._step_faulted = True
         reads = []
         for st in running:
             slot = st.slot
@@ -1028,22 +1240,31 @@ class ServingEngine:
                 [[tok0[slot]], props[:k - 1, slot]]).astype(np.int32)
             vfn = (self._verify_greedy if st.request.sampling.is_greedy
                    else self._verify)
-            draws, self._cache = vfn(
+            draws, okv, self._cache = vfn(
                 self.params, self._cache, jnp.asarray(chunk)[None, :],
                 jnp.int32(slot), jnp.int32(pos0[slot]), self._samp)
-            reads.append((st, slot, draws))
+            reads.append((st, slot, draws, okv))
         self._verify_shapes.add(k)
         self.stats["spec_verify_calls"] += len(reads)
         self.stats["spec_verify_compiles"] = len(self._verify_shapes)
         outcomes = []
-        for st, slot, draws in reads:
+        for st, slot, draws, okv in reads:
             if st.status != Status.RUNNING or st.slot != slot:
                 continue    # preempted by an earlier commit this round:
                 #             its generated stream was rewound, recompute
                 #             replays it — this round's draws are void
             t0 = time.perf_counter()
             draws = np.asarray(draws)
+            ok = bool(np.asarray(okv))
             self.stats["host_blocked_s"] += time.perf_counter() - t0
+            if not ok:
+                # verify logits went non-finite: quarantine the slot, no
+                # token of this round commits (survivors are untouched —
+                # the NaN lives in the victim's own arena region)
+                self.stats["quarantined"] += 1
+                self._step_faulted = True
+                self._depart(st, Status.FAILED, "nan-logits")
+                continue
             a, committed = sampling.accept_tokens(props[:, slot], draws)
             n, _ = self.scheduler.on_tokens(slot, committed)
             self.stats["tokens_out"] += n
@@ -1056,20 +1277,52 @@ class ServingEngine:
 
     # -- the continuous-batching loop ----------------------------------------
     def step(self) -> None:
-        """One engine iteration: retire lagged outputs, admit, ingest
-        prompt chunks, decode — or, under ``EngineConfig.speculative``, run
-        one synchronous draft-propose/verify/commit round instead of
-        submitting a decode step."""
+        """One engine iteration: retire lagged outputs, expire deadlines,
+        observe health, admit, ingest prompt chunks, decode — or, under
+        ``EngineConfig.speculative`` (and a healthy-enough ladder), run one
+        synchronous draft-propose/verify/commit round instead of submitting
+        a decode step."""
+        self._tick += 1
         self._drain_pending(limit=self.depth)
+        self._expire_deadlines()
+        self._observe_health()
         self._admit()
         self._advance_prefill()
-        if self.spec is not None:
-            self._spec_round()
-            return
         running = [st for st in self.scheduler.running.values()
                    if st.status == Status.RUNNING]
         if not running:
             return
+        inj = self._injector
+        if inj is not None and inj.fire("decode"):
+            # dropped dispatch: the whole decode step / spec round stalls
+            # one engine step.  Positions don't advance, so no slot's
+            # stream can diverge — the fault costs latency, never tokens.
+            self._step_faulted = True
+            return
+        if inj is not None and inj.fire("logits"):
+            self._poison_slot(running)
+        if self.spec is not None \
+                and self._health_state < HealthState.DEGRADED:
+            if self._pending:
+                # mode transition (queue decode -> spec rounds, i.e. the
+                # ladder just recovered): retire every in-flight queue
+                # step first so a committed token can't be re-credited
+                self._queue.drain()
+                self._drain_pending(limit=0)
+            self._spec_round()
+            self._spec_resync = True
+            return
+        if self._spec_resync:
+            # mode transition (spec rounds -> queue decode, the ladder
+            # degraded): the device slot vectors lag the spec commits —
+            # resync tokens/pos from host state for every RUNNING slot
+            for st in running:
+                self._tokens, self._pos, self._active = self._set_slot(
+                    self._tokens, self._pos, self._active,
+                    jnp.int32(st.slot), jnp.int32(st.generated[-1]),
+                    jnp.int32(st.prompt_len + self.prefix_extra
+                              + len(st.generated) - 1))
+            self._spec_resync = False
         # executable choice: only a step with a sampled RUNNING slot pays
         # the sampling transform; pure-greedy steps run the argmax twin
         self._use_sampling = any(not st.request.sampling.is_greedy
@@ -1083,22 +1336,23 @@ class ServingEngine:
         # dead from here on
         if self.prefix_sharing:
             (self._tokens, self._cache, self._pos, self._active, self._samp,
-             self._share, read) = out
+             self._share, read, okv) = out
         else:
             (self._tokens, self._cache, self._pos, self._active, self._samp,
-             read) = out
+             read, okv) = out
         self.stats["decode_steps"] += 1
         snapshot = {slot: (st, self._slot_gen[slot])
                     for slot, st in self.scheduler.running.items()}
-        self._pending.append((read, snapshot))
+        self._pending.append((read, okv, snapshot))
 
     def _drain_pending(self, *, limit: int) -> None:
         """Process token outputs older than ``limit`` steps (blocking only
         on steps the queue has already forced to completion)."""
         while len(self._pending) > limit:
-            tokens, snapshot = self._pending.popleft()
+            tokens, okv, snapshot = self._pending.popleft()
             t0 = time.perf_counter()
             host_tokens = np.asarray(tokens)
+            host_ok = np.asarray(okv)
             self.stats["host_blocked_s"] += time.perf_counter() - t0
             for slot, (st, gen) in snapshot.items():
                 # stale entries: the request left this slot (finished or
@@ -1107,6 +1361,19 @@ class ServingEngine:
                 # activation), or the slot was recycled to a newer admission
                 if (st.status != Status.RUNNING or st.slot != slot
                         or gen != self._slot_gen[slot]):
+                    continue
+                if not host_ok[slot]:
+                    # slot quarantine: non-finite logits.  The first
+                    # poisoned entry departs the slot FAILED before any
+                    # poisoned token commits (FIFO drain), and the later
+                    # in-flight entries for it die on the status guard
+                    # above.  Co-resident slots are untouched: the NaN
+                    # lives in the victim's own arena region, and the
+                    # flash kernels mask dead rows with a select, so it
+                    # cannot leak into another slot's softmax.
+                    self.stats["quarantined"] += 1
+                    self._step_faulted = True
+                    self._depart(st, Status.FAILED, "nan-logits")
                     continue
                 self.stats["tokens_out"] += 1
                 deps = self.scheduler.on_token(slot, int(host_tokens[slot]))

@@ -21,6 +21,15 @@ class Status(enum.Enum):
     PREFILLING = "prefilling"  # owns a slot; prompt chunks being ingested
     RUNNING = "running"        # owns a slot; in the decode batch
     FINISHED = "finished"      # hit EOS or max_new_tokens; slot released
+    TIMED_OUT = "timed_out"    # deadline expired; partial output retained
+    FAILED = "failed"          # quarantined / rejected / capped; see
+    #                            finish_reason ("nan-logits",
+    #                            "admission-rejected", "recompute-cap",
+    #                            "draining")
+
+
+#: statuses a request can never leave (slot released, output frozen)
+TERMINAL = (Status.FINISHED, Status.TIMED_OUT, Status.FAILED)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,6 +44,12 @@ class Request:
     ``(sampling.seed, q)`` — see :mod:`repro.runtime.serving.sampling` —
     so preemption/recompute replays the identical continuation and the
     stream does not depend on co-resident requests.
+
+    ``deadline_ms`` (optional): wall-clock budget from submission.  A
+    request still WAITING / PREFILLING / RUNNING past its deadline departs
+    with :attr:`Status.TIMED_OUT`, keeping whatever tokens it generated —
+    the partial output is a clean prefix of the fault-free stream (the
+    (seed, position) contract holds token by token).
     """
     uid: Any
     prompt: np.ndarray                    # (S,) int32 token ids
@@ -42,8 +57,12 @@ class Request:
     eos_id: Optional[int] = None
     extras: Optional[dict] = None
     sampling: SamplingParams = GREEDY
+    deadline_ms: Optional[float] = None
 
     def __post_init__(self):
+        if self.deadline_ms is not None and self.deadline_ms <= 0:
+            raise ValueError(
+                f"request {self.uid!r}: deadline_ms must be > 0")
         object.__setattr__(self, "prompt",
                            np.asarray(self.prompt, np.int32).reshape(-1))
         if self.prompt.size == 0:
@@ -77,8 +96,15 @@ class RequestState:
     base_chunk_plan: Optional[list] = None
 
     # service-time bookkeeping (engine-owned)
-    submitted_at: Optional[float] = None  # perf_counter at engine.submit
+    submitted_at: Optional[float] = None  # engine clock at engine.submit
     ttft_s: Optional[float] = None        # submit -> first sampled token
+    deadline_at: Optional[float] = None   # engine clock; None = no deadline
+
+    # recovery bookkeeping (scheduler-owned)
+    preemptions: int = 0                  # recompute count (preempt_cap)
+    admission_attempts: int = 0           # failed schedule() placements
+    next_try_tick: int = 0                # admission backoff gate (ticks)
+    rejection: Optional[Exception] = None  # AdmissionRejected, if departed so
 
     def reset_share(self) -> None:
         """Rewind to the unforked state (preemption): the full-prompt
@@ -90,7 +116,8 @@ class RequestState:
 
     @property
     def done(self) -> bool:
-        return self.status == Status.FINISHED
+        """Terminal: finished normally, timed out, or failed."""
+        return self.status in TERMINAL
 
     @property
     def prompt_len(self) -> int:

@@ -25,30 +25,67 @@ from repro.runtime.serving.cache import PagedKVCacheManager
 from repro.runtime.serving.request import Request, RequestState, Status
 
 
+class AdmissionRejected(Exception):
+    """A request was refused service: admission retries exhausted their cap
+    (``finish_reason == "admission-rejected"``, attached to
+    ``RequestState.rejection``) or the replica is shedding load
+    (raised directly by ``ServingEngine.submit``)."""
+
+    def __init__(self, uid, reason: str, attempts: int = 0):
+        super().__init__(f"request {uid!r} rejected ({reason}) "
+                         f"after {attempts} admission attempts")
+        self.uid = uid
+        self.reason = reason
+        self.attempts = attempts
+
+
 class Scheduler:
     def __init__(self, max_slots: int, cache: PagedKVCacheManager, *,
                  prefix_extra: int = 0, max_len: int | None = None,
-                 chunked: bool = False):
+                 chunked: bool = False, admission_reclaim_cap: int = 8,
+                 admission_attempt_cap: int | None = None,
+                 admission_backoff_cap: int = 32,
+                 preempt_cap: int | None = None):
         """``prefix_extra``: cache rows a request occupies beyond its prompt
         before decoding starts (e.g. VLM patch tokens).  ``max_len``: the
         per-slot arena depth (engine's max_seq); requests that couldn't fit
         a slot even alone are rejected at submit.  ``chunked``: admissions
         enter PREFILLING (the engine ingests prompt chunks across steps and
         calls :meth:`finish_prefill`) instead of going straight to RUNNING
-        via one monolithic prefill."""
+        via one monolithic prefill.
+
+        Robustness knobs: ``admission_reclaim_cap`` bounds the orphan-chain
+        reclaim retries inside one :meth:`schedule` placement (the loop was
+        previously unbounded-in-form; a blocked head-of-line retries next
+        tick).  ``admission_attempt_cap`` (None = never) departs a request
+        ``FAILED``/``"admission-rejected"`` after that many failed
+        placements, with exponential tick backoff between attempts capped
+        at ``admission_backoff_cap`` (backoff engages only when
+        :meth:`schedule` is given a ``tick``).  ``preempt_cap`` (None =
+        never) departs a request ``FAILED``/``"recompute-cap"`` instead of
+        preempting it again, keeping its generated tokens — a pathological
+        request can't thrash the cache forever."""
         if max_slots < 1:
             raise ValueError(max_slots)
+        if admission_reclaim_cap < 1:
+            raise ValueError(f"admission_reclaim_cap must be >= 1, "
+                             f"got {admission_reclaim_cap}")
         self.max_slots = max_slots
         self.cache = cache
         self.prefix_extra = prefix_extra
         self.max_len = max_len
         self.chunked = chunked
+        self.admission_reclaim_cap = admission_reclaim_cap
+        self.admission_attempt_cap = admission_attempt_cap
+        self.admission_backoff_cap = admission_backoff_cap
+        self.preempt_cap = preempt_cap
         self.waiting: collections.deque[RequestState] = collections.deque()
         self.running: dict[int, RequestState] = {}
         self._free_slots: list[int] = list(range(max_slots))
         heapq.heapify(self._free_slots)
         self._next_seq = 0
-        self.stats = {"admitted": 0, "finished": 0, "preempted": 0}
+        self.stats = {"admitted": 0, "finished": 0, "preempted": 0,
+                      "timed_out": 0, "failed": 0, "rejected": 0}
 
     # -- intake --------------------------------------------------------------
     def submit(self, request: Request,
@@ -86,7 +123,7 @@ class Scheduler:
         return len(self._free_slots)
 
     # -- admission -----------------------------------------------------------
-    def schedule(self) -> list[RequestState]:
+    def schedule(self, tick: int | None = None) -> list[RequestState]:
         """Admit FIFO-head requests into free slots while cache pages last.
 
         Returns the newly-admitted states (slot assigned, status RUNNING —
@@ -96,10 +133,19 @@ class Scheduler:
         prefill at least the padded chunk plan, since the final chunk's
         pad rows are physically written to the slot's arena rows too;
         decode growth is paged in per step.
+
+        ``tick`` (optional, the engine's step counter) engages the bounded
+        retry machinery: a head-of-line request whose placement failed
+        backs off exponentially (``next_try_tick``) and, past
+        ``admission_attempt_cap`` failures, departs FAILED with a typed
+        :class:`AdmissionRejected` on ``RequestState.rejection`` — the
+        structured replacement for spinning on the allocator.
         """
         admitted = []
         while self.waiting and self._free_slots:
             st = self.waiting[0]
+            if tick is not None and st.next_try_tick > tick:
+                break                      # backing off; FIFO preserved
             need = st.prompt_len + self.prefix_extra + 1
             if st.chunk_plan is not None:
                 need = max(need, sum(st.chunk_plan))
@@ -109,20 +155,39 @@ class Scheduler:
             # well; only page exhaustion blocks the head of the line.
             # Under a prefix chain cap, *orphaned* retained chains (held
             # only by the index) yield to admissions: when every candidate
-            # is refused, reclaim the LRU orphan and retry — finite chains,
-            # so this terminates, and live shared pages are never touched.
+            # is refused, reclaim the LRU orphan and retry — capped at
+            # ``admission_reclaim_cap`` per placement (a blocked head just
+            # retries next tick), and live shared pages are never touched.
             slot = None
+            reason = "no-pages"
+            reclaims = 0
             while slot is None:
                 for cand in sorted(self._free_slots):
                     res = self.cache.allocate(cand, need)
                     if res:
                         slot = cand
                         break
+                    reason = res.reason
                     if res.reason != "region-pinned":
                         break              # no pages yet
-                if slot is None and not self.cache.reclaim_orphan():
-                    break
+                if slot is None:
+                    if reclaims >= self.admission_reclaim_cap \
+                            or not self.cache.reclaim_orphan():
+                        break
+                    reclaims += 1
             if slot is None:
+                st.admission_attempts += 1
+                cap = self.admission_attempt_cap
+                if cap is not None and st.admission_attempts >= cap:
+                    st.rejection = AdmissionRejected(
+                        st.request.uid, reason, st.admission_attempts)
+                    self.depart(st, Status.FAILED, "admission-rejected")
+                    self.stats["rejected"] += 1
+                    continue               # rejected head: next may fit
+                if tick is not None:
+                    st.next_try_tick = tick + min(
+                        1 << (st.admission_attempts - 1),
+                        self.admission_backoff_cap)
                 break                      # head-of-line blocks
             self._free_slots.remove(slot)
             heapq.heapify(self._free_slots)
@@ -208,6 +273,38 @@ class Scheduler:
         self.stats["finished"] += 1
         return slot, st
 
+    # -- abnormal departure --------------------------------------------------
+    def depart(self, st: RequestState, status: Status,
+               reason: str) -> int | None:
+        """Remove a request from service *abnormally* — deadline expiry
+        (``TIMED_OUT``), NaN quarantine / admission rejection / recompute
+        cap / drain (``FAILED``) — keeping whatever it generated as partial
+        output.  Works from any non-terminal state: WAITING leaves the
+        queue; PREFILLING/RUNNING release the slot through the same
+        refcount-ordered page free as normal retirement, so a departing
+        *fork* drops its references to shared prefix pages (the donor's
+        region unpins when the last reference drains — see
+        ``PagedKVCacheManager.free``) and a departing *donor*'s registered
+        pages stay resident only while forks still hold them.  Returns the
+        released slot (None if the request was WAITING) so the engine can
+        deactivate it in the decode batch."""
+        if st.done:
+            return None
+        slot = None
+        if st.status == Status.WAITING:
+            try:
+                self.waiting.remove(st)
+            except ValueError:
+                pass
+        elif st.slot is not None and self.running.get(st.slot) is st:
+            slot = st.slot
+            self._release(st)
+        st.status = status
+        st.finish_reason = reason
+        key = "timed_out" if status == Status.TIMED_OUT else "failed"
+        self.stats[key] += 1
+        return slot
+
     def _preempt(self, st: RequestState) -> tuple[int, RequestState]:
         """Out of pages: drop the slot, requeue in arrival order.  Decode
         is deterministic — greedy trivially, and *sampled* decode because
@@ -221,7 +318,16 @@ class Scheduler:
         forked victim additionally rewinds to the *unforked* state — its
         shared-page references were just dropped by the release; the full
         chunk plan is restored and re-admission re-forks against whatever
-        prefix pages are live then (or ingests everything itself)."""
+        prefix pages are live then (or ingests everything itself).
+
+        Under ``preempt_cap`` a request that already burned that many
+        recomputes departs FAILED (``"recompute-cap"``) instead, keeping
+        its generated tokens — a clean prefix of its fault-free stream."""
+        if self.preempt_cap is not None \
+                and st.preemptions >= self.preempt_cap:
+            slot = self.depart(st, Status.FAILED, "recompute-cap")
+            return slot, st
+        st.preemptions += 1
         slot = st.slot
         self._release(st)
         st.status = Status.WAITING

@@ -1,0 +1,719 @@
+"""Fault-tolerant serving: deterministic injection, deadlines, quarantine,
+admission/preemption caps, and the graceful-degradation health ladder.
+
+Host-logic level: injector purity/replay (fire is a pure function of
+(seed, site, consult index)), FaultPlan/HealthConfig validation, the
+ladder's climb/recover walk, scheduler admission backoff with typed
+rejection, the preemption-recompute cap, and the fork-refcount release on
+abnormal departure.  Engine level: the survivor contract — under any
+injected fault plan the engine converges, affected requests depart
+TIMED_OUT/FAILED with partial output that is a clean prefix of the
+fault-free stream, every cache page is reclaimed after drain, and the
+SURVIVING requests' streams are bit-identical to the fault-free run — in
+both prefill modes, with and without speculative decoding, exercised by a
+seeded chaos harness (plus a hypothesis-driven layer where available).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.models import registry
+from repro.runtime.serving import (AdmissionRejected, EngineConfig,
+                                   FaultInjector, FaultPlan, FaultSpec,
+                                   HealthConfig, HealthMonitor, HealthState,
+                                   PagedKVCacheManager, Request, Scheduler,
+                                   ServingEngine, SpecConfig, Status,
+                                   parse_fault_plan)
+from repro.runtime.serving.faults import SITES, _u01
+from repro.runtime.serving.sampling import SamplingParams
+
+TGT = ArchConfig(name="tiny-fault-target", family="dense", n_layers=2,
+                 d_model=32, n_heads=4, n_kv_heads=2, d_ff=64, vocab=97,
+                 head_dim=8, param_dtype="float32", act_dtype="float32",
+                 max_seq=64)
+DFT = ArchConfig(name="tiny-fault-draft", family="dense", n_layers=1,
+                 d_model=16, n_heads=2, n_kv_heads=1, d_ff=32, vocab=97,
+                 head_dim=8, param_dtype="float32", act_dtype="float32",
+                 max_seq=64)
+
+
+# ---------------------------------------------------------------------------
+# injector: pure, seeded, replayable (host logic)
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_and_plan_validation():
+    with pytest.raises(ValueError):
+        FaultSpec(rate=1.5)
+    with pytest.raises(ValueError):
+        FaultSpec(rate=0.5, max_fires=-1)
+    with pytest.raises(ValueError):
+        FaultPlan.of(bogus=0.5)                      # unknown site
+    with pytest.raises(ValueError):
+        FaultPlan(sites=(("alloc", 0.5),))           # bare rate in tuple
+    with pytest.raises(ValueError):
+        FaultPlan(sites=(("alloc", FaultSpec(0.1)),
+                         ("alloc", FaultSpec(0.2))))  # duplicate
+    plan = FaultPlan.of(seed=7, alloc=0.1,
+                        logits=FaultSpec(1.0, max_fires=1))
+    assert plan.spec("alloc").rate == 0.1
+    assert plan.spec("logits").max_fires == 1
+    assert plan.spec("decode") is None
+    hash(plan)                                       # EngineConfig-hashable
+
+
+def test_parse_fault_plan():
+    plan = parse_fault_plan("alloc:0.05, logits:0.01:7", seed=3)
+    assert plan.seed == 3
+    assert plan.spec("alloc") == FaultSpec(0.05)
+    assert plan.spec("logits") == FaultSpec(0.01, seed=7)
+    with pytest.raises(ValueError):
+        parse_fault_plan("alloc")                    # missing rate
+    with pytest.raises(ValueError):
+        parse_fault_plan("warp:0.5")                 # unknown site
+
+
+def test_injector_fire_is_pure_and_replayable():
+    plan = FaultPlan.of(seed=11, alloc=0.3, chunk=0.3, decode=0.3)
+    a, b = FaultInjector(plan), FaultInjector(plan)
+    seq_a = [(s, a.fire(s)) for _ in range(200) for s in SITES]
+    seq_b = [(s, b.fire(s)) for _ in range(200) for s in SITES]
+    assert seq_a == seq_b                            # bit-exact replay
+    assert a.fired == b.fired and a.total_fired() > 0
+    # interleaving choose() must not perturb the firing sequence
+    c = FaultInjector(plan)
+    seq_c = []
+    for _ in range(200):
+        for s in SITES:
+            c.choose("alloc", 5)
+            seq_c.append((s, c.fire(s)))
+    assert seq_c == seq_a
+    # choose itself replays
+    d = FaultInjector(plan)
+    assert [c2 == d.choose("alloc", 5)
+            for c2 in [FaultInjector(plan).choose("alloc", 5)]]
+    # a different seed fires a different interleaving
+    e = FaultInjector(FaultPlan.of(seed=12, alloc=0.3, chunk=0.3,
+                                   decode=0.3))
+    assert [(s, e.fire(s)) for _ in range(200) for s in SITES] != seq_a
+    # the underlying draw is a pure function: same args, same value
+    assert _u01(11, "alloc", 5) == _u01(11, "alloc", 5)
+
+
+def test_injector_rates_and_max_fires():
+    inj = FaultInjector(FaultPlan.of(alloc=0.0, chunk=1.0,
+                                     decode=FaultSpec(1.0, max_fires=3)))
+    assert not any(inj.fire("alloc") for _ in range(100))
+    assert all(inj.fire("chunk") for _ in range(100))
+    assert sum(inj.fire("decode") for _ in range(100)) == 3
+    assert inj.fire("logits") is False               # unconfigured site
+    assert inj.active("chunk") and not inj.active("alloc")
+    assert inj.fired == {"alloc": 0, "chunk": 100, "decode": 3}
+
+
+# ---------------------------------------------------------------------------
+# health ladder (host logic)
+# ---------------------------------------------------------------------------
+
+def test_health_config_validation():
+    with pytest.raises(ValueError):
+        HealthConfig(window=0)
+    with pytest.raises(ValueError):
+        HealthConfig(pressure_degraded=1.5)
+    with pytest.raises(ValueError):
+        HealthConfig(pressure_degraded=0.9, pressure_shedding=0.8)
+    with pytest.raises(ValueError):
+        HealthConfig(fault_degraded=4, fault_shedding=2)
+    with pytest.raises(ValueError):
+        HealthConfig(recover_after=0)
+    with pytest.raises(ValueError):
+        HealthConfig(shed_steps_draining=0)
+
+
+def _obs(mon, step, *, fault=False, pressure=0.0, pre=0, miss=0):
+    return mon.observe(step=step, pressure=pressure, preemptions=pre,
+                       timeouts=miss, step_fault=fault)
+
+
+def test_health_climbs_one_rung_per_step_and_recovers():
+    mon = HealthMonitor(HealthConfig(fault_degraded=2, fault_shedding=4,
+                                     fault_draining=6, recover_after=3,
+                                     shed_steps_draining=None))
+    walk = [_obs(mon, t, fault=True) for t in range(1, 8)]
+    # consec faults: 1 (clean target), 2 -> DEGRADED, 4 -> SHEDDING,
+    # 6 -> DRAINING; one rung per step, never skipping
+    assert walk == [HealthState.HEALTHY, HealthState.DEGRADED,
+                    HealthState.DEGRADED, HealthState.SHEDDING,
+                    HealthState.SHEDDING, HealthState.DRAINING,
+                    HealthState.DRAINING]
+    # recovery: one rung per recover_after consecutive clean steps
+    states = [_obs(mon, 10 + t) for t in range(9)]
+    assert states[2] == HealthState.SHEDDING
+    assert states[5] == HealthState.DEGRADED
+    assert states[8] == HealthState.HEALTHY
+    names = [(f, to) for _, f, to, _ in mon.transitions]
+    assert names == [("HEALTHY", "DEGRADED"), ("DEGRADED", "SHEDDING"),
+                     ("SHEDDING", "DRAINING"), ("DRAINING", "SHEDDING"),
+                     ("SHEDDING", "DEGRADED"), ("DEGRADED", "HEALTHY")]
+    assert mon.transitions[-1][3] == "recovered"
+
+
+def test_health_pressure_preempt_and_miss_rungs():
+    mon = HealthMonitor(HealthConfig(window=4))
+    assert _obs(mon, 1, pressure=0.90) == HealthState.DEGRADED
+    assert _obs(mon, 2, pressure=0.99) == HealthState.SHEDDING
+    assert mon.transitions[-1][3] == "arena-pressure"
+    # windowed deadline-miss rate degrades a fresh monitor
+    m2 = HealthMonitor(HealthConfig(window=4, miss_degraded=0.25))
+    for t in range(1, 4):
+        _obs(m2, t, miss=t)          # cumulative: one miss per step
+    assert m2.state == HealthState.DEGRADED
+    assert m2.transitions[-1][3] == "deadline-misses"
+    # windowed preemption rate too
+    m3 = HealthMonitor(HealthConfig(window=4, preempt_degraded=0.5))
+    for t in range(1, 4):
+        _obs(m3, t, pre=t)
+    assert m3.state == HealthState.DEGRADED
+    assert m3.transitions[-1][3] == "preemption-rate"
+
+
+def test_health_stuck_shedding_escalates_to_draining():
+    mon = HealthMonitor(HealthConfig(fault_degraded=1, fault_shedding=2,
+                                     fault_draining=50,
+                                     shed_steps_draining=3,
+                                     recover_after=100))
+    for t in range(1, 6):
+        _obs(mon, t, fault=True)
+    assert mon.state == HealthState.DRAINING
+    assert mon.transitions[-1][3] == "stuck-shedding"
+
+
+# ---------------------------------------------------------------------------
+# scheduler: bounded admission retry + typed rejection, preempt cap,
+# fork-refcount release on abnormal departure
+# ---------------------------------------------------------------------------
+
+def _req(uid, plen=4, max_new=4):
+    return Request(uid=uid, prompt=np.arange(plen, dtype=np.int32) % 97,
+                   max_new_tokens=max_new)
+
+
+def test_admission_backoff_and_typed_rejection():
+    # pool of 2 pages: the first request takes both, the second's placement
+    # fails every attempt — exponential tick backoff, then a typed FAILED
+    m = PagedKVCacheManager(num_pages=2, page_size=4)
+    s = Scheduler(2, m, admission_attempt_cap=3, admission_backoff_cap=4)
+    a = s.submit(_req("a", plen=4, max_new=4))
+    b = s.submit(_req("b", plen=4, max_new=4))
+    assert [st.request.uid for st in s.schedule(tick=1)] == ["a"]
+    assert a.slot is not None
+    assert b.admission_attempts == 1 and b.next_try_tick == 2   # 1 + 2^0
+    assert s.schedule(tick=1) == []          # backing off: not even tried
+    assert b.admission_attempts == 1
+    assert s.schedule(tick=2) == []          # attempt 2
+    assert b.admission_attempts == 2 and b.next_try_tick == 4   # 2 + 2^1
+    assert s.schedule(tick=3) == []          # still gated
+    assert b.admission_attempts == 2
+    assert s.schedule(tick=4) == []          # attempt 3 -> cap
+    assert b.status == Status.FAILED
+    assert b.finish_reason == "admission-rejected"
+    assert isinstance(b.rejection, AdmissionRejected)
+    assert b.rejection.reason == "no-pages"
+    assert b.rejection.attempts == 3
+    assert s.stats["rejected"] == 1 and s.stats["failed"] == 1
+    assert b not in s.waiting and b.done
+
+
+def test_admission_without_tick_keeps_legacy_retry():
+    m = PagedKVCacheManager(num_pages=2, page_size=4)
+    s = Scheduler(2, m, admission_attempt_cap=None)
+    s.submit(_req("a"))
+    b = s.submit(_req("b"))
+    s.schedule()
+    for _ in range(50):                      # retries forever, never departs
+        s.schedule()
+    assert b.status == Status.WAITING and b.next_try_tick == 0
+
+
+def test_preempt_cap_departs_failed_keeping_tokens():
+    # 2 slots, 5 pages of 4: both requests fit at 2 pages each (1 free);
+    # growth past the boundary preempts the youngest — capped at one
+    # recompute, the second preemption departs it FAILED instead
+    m = PagedKVCacheManager(num_pages=5, page_size=4)
+    s = Scheduler(2, m, preempt_cap=1)
+    old = s.submit(_req("old", plen=4, max_new=9))
+    young = s.submit(_req("young", plen=4, max_new=9))
+    assert len(s.schedule()) == 2
+    for tok in range(3):
+        assert s.on_token(young.slot, tok) == []
+    for tok in range(4):                     # old grows into the free page
+        s.on_token(old.slot, tok)
+    # young's next growth finds no pages; youngest victim is young itself
+    deps = s.on_token(young.slot, 99)
+    assert deps and deps[0][1] is young
+    assert young.status == Status.WAITING and young.preemptions == 1
+    assert s.schedule() != []                # readmitted (recompute)
+    # old grows again: young is preempted a second time -> recompute cap
+    for tok in range(4, 8):
+        s.on_token(old.slot, tok)
+    assert young.status == Status.FAILED
+    assert young.finish_reason == "recompute-cap"
+    assert young.done and s.stats["failed"] == 1
+    assert s.stats["preempted"] == 1         # the departure is not a preempt
+
+
+def test_abnormal_departure_releases_forked_prefix_pages():
+    """Regression (the fork-refcount bug): a fork departing *abnormally*
+    must drop its references to the donor's shared prefix pages through
+    the same refcount-ordered free as normal retirement — the departed
+    donor's region unpins when the last fork drains, and every page
+    returns to the pool."""
+    m = PagedKVCacheManager(num_pages=8, page_size=4)
+    s = Scheduler(2, m, chunked=True)
+    donor = s.submit(_req("donor", plen=8, max_new=2))
+    fork = s.submit(_req("fork", plen=8, max_new=2))
+    assert len(s.schedule()) == 2
+    m.register_prefix(donor.slot, donor.request.prompt, 8)
+    match = m.lookup(fork.request.prompt, 7)
+    assert match is not None and match.shared_len == 4
+    assert m.fork(fork.slot, match)
+    shared_page = match.entries[0].page
+    assert m.refcount(shared_page) == 2
+    # donor departs abnormally first: its shared page is retained (the
+    # fork still reads it) and the region stays pinned
+    s.depart(donor, Status.FAILED, "nan-logits")
+    assert donor.status == Status.FAILED
+    assert m.refcount(shared_page) == 1
+    assert m.region_pinned(donor.slot if donor.slot is not None
+                           else match.src_slot)
+    # the fork departs abnormally too: refcount drains, region unpins,
+    # the WHOLE pool is reclaimed
+    s.depart(fork, Status.FAILED, "nan-logits")
+    assert m.refcount(shared_page) == 0
+    assert not m.region_pinned(match.src_slot)
+    assert m.free_pages == 8
+    assert s.all_done and s.stats["failed"] == 2
+
+
+def test_depart_from_waiting_removes_from_queue():
+    s = Scheduler(1, PagedKVCacheManager(8, 4))
+    s.submit(_req("a"))
+    b = s.submit(_req("b"))
+    s.schedule()
+    assert s.depart(b, Status.TIMED_OUT, "deadline") is None
+    assert b.status == Status.TIMED_OUT and b not in s.waiting
+    assert s.stats["timed_out"] == 1
+    assert s.depart(b, Status.FAILED, "x") is None   # terminal: no-op
+    assert b.status == Status.TIMED_OUT
+
+
+# ---------------------------------------------------------------------------
+# engine: deadlines (injected clock), quarantine, shedding, chaos
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def target_model():
+    model = registry.build_model(TGT)
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+    return model, params
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _traffic(rng, *, shared=False):
+    """The fixed mixed traffic every engine comparison runs: greedy and
+    sampled requests over distinct prompt lengths (page-aligned common
+    head under ``shared``)."""
+    lens = (5, 11, 7, 16, 9)
+    if shared:
+        head = rng.integers(0, 97, 16).astype(np.int32)
+        prompts = [np.concatenate([head, rng.integers(0, 97, 4 + i)
+                                   .astype(np.int32)])
+                   for i in range(len(lens))]
+    else:
+        prompts = [rng.integers(0, 97, n).astype(np.int32) for n in lens]
+    samp = [None, SamplingParams(temperature=1.1, top_k=20, seed=11),
+            None, SamplingParams(temperature=0.9, top_p=0.95, seed=12),
+            None]
+    return prompts, samp
+
+
+def _run_engine(model, params, cfg, prompts, samplings, max_new=8):
+    eng = ServingEngine(model, TGT, params, config=cfg)
+    for i, (p, sp) in enumerate(zip(prompts, samplings)):
+        kw = {"sampling": sp} if sp is not None else {}
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=max_new, **kw))
+    out = eng.run(max_steps=3000)
+    return out, eng
+
+
+_CLEAN_CACHE: dict = {}
+
+
+def _clean_run(target_model, key, cfg, prompts, samplings, max_new=8):
+    """Memoise the fault-free reference per traffic shape (the chaos sweep
+    reuses it across seeds)."""
+    if key not in _CLEAN_CACHE:
+        model, params = target_model
+        out, _ = _run_engine(model, params, cfg, prompts, samplings,
+                             max_new)
+        _CLEAN_CACHE[key] = out
+    return _CLEAN_CACHE[key]
+
+
+def _assert_reclaimed(eng):
+    assert eng.scheduler.all_done
+    assert eng.cache_mgr.free_pages == eng.cache_mgr.num_pages, \
+        "cache pages leaked after drain"
+
+
+def test_deadline_times_out_with_partial_output(target_model):
+    model, params = target_model
+    rng = np.random.default_rng(0)
+    prompts, samplings = _traffic(rng)
+    base = EngineConfig(max_slots=3, max_seq=64, depth=1, page_size=8,
+                        prefill_chunks=(4, 8))
+    clean = _clean_run(target_model, ("chunked", "plain"), base, prompts,
+                       samplings, max_new=8)
+    clock = _FakeClock()
+    eng = ServingEngine(model, TGT, params, config=base, clock=clock)
+    for i, (p, sp) in enumerate(zip(prompts, samplings)):
+        kw = {"sampling": sp} if sp is not None else {}
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=8,
+                           deadline_ms=100.0 if i == 0 else None, **kw))
+    for _ in range(4):                       # clock frozen: no expiry
+        eng.step()
+    assert eng._results[0].status in (Status.PREFILLING, Status.RUNNING)
+    clock.t = 1.0                            # 900 ms past the deadline
+    out = eng.run(max_steps=3000)
+    st0 = eng._results[0]
+    assert st0.status == Status.TIMED_OUT
+    assert st0.finish_reason == "deadline"
+    # partial output is a clean prefix of the fault-free stream
+    np.testing.assert_array_equal(out[0], clean[0][:out[0].size])
+    assert eng.stats["timed_out"] == 1
+    assert eng.stats["deadline_overrun_s"][0] == pytest.approx(0.9)
+    # survivors untouched, pool fully reclaimed
+    for i in range(1, len(prompts)):
+        np.testing.assert_array_equal(out[i], clean[i])
+    _assert_reclaimed(eng)
+
+
+def test_deadline_expires_in_waiting_queue(target_model):
+    model, params = target_model
+    clock = _FakeClock()
+    eng = ServingEngine(model, TGT, params, clock=clock,
+                        config=EngineConfig(max_slots=1, max_seq=64))
+    rng = np.random.default_rng(0)
+    eng.submit(Request(uid="long", prompt=rng.integers(0, 97, 8)
+                       .astype(np.int32), max_new_tokens=16))
+    eng.submit(Request(uid="late", prompt=rng.integers(0, 97, 8)
+                       .astype(np.int32), max_new_tokens=4,
+                       deadline_ms=50.0))
+    eng.step()                               # admits "long" into the 1 slot
+    clock.t = 10.0
+    out = eng.run(max_steps=2000)
+    late = eng._results["late"]
+    assert late.status == Status.TIMED_OUT and late.slot is None
+    assert out["late"].size == 0             # never served: empty output
+    assert out["long"].size == 16
+    _assert_reclaimed(eng)
+
+
+@pytest.mark.parametrize("chunks", [None, (4, 8)],
+                         ids=["monolithic", "chunked"])
+def test_nan_quarantine_survivors_bit_identical(target_model, chunks):
+    """The ``logits`` site poisons exactly one resident slot's arena with
+    NaN; the quarantine departs it FAILED before any poisoned token
+    commits, and every surviving stream equals the fault-free run."""
+    model, params = target_model
+    rng = np.random.default_rng(0)
+    prompts, samplings = _traffic(rng)
+    base = EngineConfig(max_slots=3, max_seq=64, depth=2, page_size=8,
+                        prefill_chunks=chunks)
+    mode = "chunked" if chunks else "monolithic"
+    clean = _clean_run(target_model, (mode, "plain"), base, prompts,
+                       samplings)
+    cfg = base.replace(faults=FaultPlan.of(
+        seed=5, logits=FaultSpec(1.0, max_fires=1)))
+    out, eng = _run_engine(model, params, cfg, prompts, samplings)
+    failed = [uid for uid, st in eng._results.items()
+              if st.status == Status.FAILED]
+    assert len(failed) == 1
+    assert eng._results[failed[0]].finish_reason == "nan-logits"
+    assert eng.stats["poisoned"] == 1 and eng.stats["quarantined"] >= 1
+    # the victim's partial output is a clean prefix; survivors bit-exact
+    np.testing.assert_array_equal(
+        out[failed[0]], clean[failed[0]][:out[failed[0]].size])
+    for uid, st in eng._results.items():
+        if uid != failed[0]:
+            assert st.status == Status.FINISHED
+            np.testing.assert_array_equal(out[uid], clean[uid])
+    _assert_reclaimed(eng)
+
+
+def test_nan_quarantine_speculative_verify_path(target_model):
+    model, params = target_model
+    rng = np.random.default_rng(0)
+    prompts, samplings = _traffic(rng)
+    base = EngineConfig(max_slots=3, max_seq=64, prefill_chunks=(4, 8))
+    clean = _clean_run(target_model, ("chunked", "plain"), base, prompts,
+                       samplings)
+    cfg = base.replace(
+        speculative=SpecConfig(draft=DFT, k=3, adaptive=False),
+        faults=FaultPlan.of(seed=2, logits=FaultSpec(1.0, max_fires=1)))
+    out, eng = _run_engine(model, params, cfg, prompts, samplings)
+    failed = [uid for uid, st in eng._results.items()
+              if st.status == Status.FAILED]
+    assert len(failed) == 1 and eng.stats["quarantined"] >= 1
+    for uid, st in eng._results.items():
+        if uid != failed[0]:
+            assert st.status == Status.FINISHED
+            np.testing.assert_array_equal(out[uid], clean[uid])
+    _assert_reclaimed(eng)
+
+
+def test_draft_corruption_self_corrects(target_model):
+    """The ``draft`` site corrupts whole rounds of proposals; acceptance
+    verifies against the target's own draws, so EVERY stream still equals
+    the fault-free run — only the acceptance rate pays."""
+    model, params = target_model
+    rng = np.random.default_rng(0)
+    prompts, samplings = _traffic(rng)
+    base = EngineConfig(max_slots=3, max_seq=64, prefill_chunks=(4, 8))
+    clean = _clean_run(target_model, ("chunked", "plain"), base, prompts,
+                       samplings)
+    cfg = base.replace(
+        speculative=SpecConfig(draft=DFT, k=3, adaptive=False),
+        faults=FaultPlan.of(seed=9, draft=0.5))
+    out, eng = _run_engine(model, params, cfg, prompts, samplings)
+    assert eng.stats["faults"]["draft"] > 0
+    for uid in clean:
+        assert eng._results[uid].status == Status.FINISHED
+        np.testing.assert_array_equal(out[uid], clean[uid])
+    _assert_reclaimed(eng)
+
+
+@pytest.mark.parametrize("chunks", [None, (4, 8)],
+                         ids=["monolithic", "chunked"])
+def test_dispatch_faults_never_diverge_streams(target_model, chunks):
+    """alloc/chunk/decode faults drop or refuse work — they cost steps,
+    never tokens: every request completes with the fault-free stream."""
+    model, params = target_model
+    rng = np.random.default_rng(0)
+    prompts, samplings = _traffic(rng)
+    base = EngineConfig(max_slots=3, max_seq=64, depth=2, page_size=8,
+                        prefill_chunks=chunks)
+    mode = "chunked" if chunks else "monolithic"
+    clean = _clean_run(target_model, (mode, "plain"), base, prompts,
+                       samplings)
+    cfg = base.replace(faults=FaultPlan.of(
+        seed=3, alloc=0.2, decode=0.15,
+        **({"chunk": 0.2} if chunks else {})))
+    out, eng = _run_engine(model, params, cfg, prompts, samplings)
+    assert eng._injector.total_fired() > 0
+    for uid in clean:
+        assert eng._results[uid].status == Status.FINISHED
+        np.testing.assert_array_equal(out[uid], clean[uid])
+    _assert_reclaimed(eng)
+
+
+def test_alloc_exhaustion_rejects_with_typed_error(target_model):
+    """Satellite: a plan that refuses EVERY allocation exhausts the
+    bounded admission retry — requests depart FAILED with the typed
+    AdmissionRejected attached, and the engine still converges."""
+    model, params = target_model
+    rng = np.random.default_rng(0)
+    prompts, samplings = _traffic(rng)
+    cfg = EngineConfig(max_slots=3, max_seq=64, page_size=8,
+                       faults=FaultPlan.of(seed=1, alloc=1.0),
+                       admission_attempt_cap=3, admission_backoff_cap=4)
+    out, eng = _run_engine(model, params, cfg, prompts, samplings)
+    for uid, st in eng._results.items():
+        assert st.status == Status.FAILED
+        assert st.finish_reason == "admission-rejected"
+        assert isinstance(st.rejection, AdmissionRejected)
+        assert st.rejection.reason == "fault-injected"
+        assert out[uid].size == 0
+    assert eng.scheduler.stats["rejected"] == len(prompts)
+    _assert_reclaimed(eng)
+
+
+def test_submit_sheds_when_unhealthy(target_model):
+    model, params = target_model
+    eng = ServingEngine(model, TGT, params, config=EngineConfig(
+        max_slots=2, max_seq=64, health=HealthConfig()))
+    eng.health.state = HealthState.SHEDDING
+    with pytest.raises(AdmissionRejected, match="shedding"):
+        eng.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                           max_new_tokens=2))
+    eng.health.state = HealthState.HEALTHY
+    eng.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                       max_new_tokens=2))
+    eng.run(max_steps=200)
+
+
+def test_health_ladder_disables_and_reenables_spec(target_model):
+    """Consecutive decode faults walk the ladder to DEGRADED (spec off:
+    the engine crosses to queue decode, resyncing device cursors), the
+    faults exhaust, the ladder recovers (spec back on, pending drained) —
+    and the streams never deviate from the fault-free run."""
+    model, params = target_model
+    rng = np.random.default_rng(0)
+    prompts, samplings = _traffic(rng)
+    base = EngineConfig(max_slots=3, max_seq=64, prefill_chunks=(4, 8))
+    clean = _clean_run(target_model, ("chunked", "plain"), base, prompts,
+                       samplings)
+    cfg = base.replace(
+        speculative=SpecConfig(draft=DFT, k=3, adaptive=False),
+        faults=FaultPlan.of(seed=4, decode=FaultSpec(1.0, max_fires=4)),
+        health=HealthConfig(fault_degraded=2, fault_shedding=8,
+                            fault_draining=12, recover_after=2,
+                            shed_steps_draining=None))
+    out, eng = _run_engine(model, params, cfg, prompts, samplings,
+                           max_new=12)
+    assert eng.stats["faults"]["decode"] == 4
+    assert eng.stats["health_transitions"] >= 2       # degraded + recovered
+    trans = [(f, to) for _, f, to, _ in eng.health.transitions]
+    assert ("HEALTHY", "DEGRADED") in trans
+    assert ("DEGRADED", "HEALTHY") in trans
+    assert eng.stats["spec_rounds"] > 0               # spec actually resumed
+    for uid in clean:
+        assert eng._results[uid].status == Status.FINISHED
+    clean12 = _clean_run(target_model, ("chunked", "plain", 12), base,
+                         prompts, samplings, max_new=12)
+    for uid in clean12:
+        np.testing.assert_array_equal(out[uid], clean12[uid])
+    _assert_reclaimed(eng)
+
+
+def test_draining_fails_waiting_requests(target_model):
+    model, params = target_model
+    rng = np.random.default_rng(0)
+    eng = ServingEngine(model, TGT, params, config=EngineConfig(
+        max_slots=1, max_seq=64,
+        health=HealthConfig(fault_degraded=1, fault_shedding=2,
+                            fault_draining=3, shed_steps_draining=None),
+        faults=FaultPlan.of(seed=0,
+                            decode=FaultSpec(1.0, max_fires=6))))
+    eng.submit(Request(uid="run", prompt=rng.integers(0, 97, 6)
+                       .astype(np.int32), max_new_tokens=4))
+    eng.submit(Request(uid="wait", prompt=rng.integers(0, 97, 6)
+                       .astype(np.int32), max_new_tokens=4))
+    out = eng.run(max_steps=2000)
+    waiting = eng._results["wait"]
+    assert waiting.status == Status.FAILED
+    assert waiting.finish_reason == "draining"
+    assert out["wait"].size == 0
+    trans = [(f, to) for _, f, to, _ in eng.health.transitions]
+    assert ("SHEDDING", "DRAINING") in trans
+    # DRAINING never kills residents: the resident request rides out the
+    # fault burst and completes normally once the injector exhausts
+    assert eng._results["run"].status == Status.FINISHED
+    assert out["run"].size == 4
+    assert eng.scheduler.stats["failed"] == 1
+    _assert_reclaimed(eng)
+
+
+# ---------------------------------------------------------------------------
+# chaos harness: random (seeded) fault interleavings, survivors bit-exact
+# ---------------------------------------------------------------------------
+
+def _chaos_plan(seed: int, *, spec: bool, chunked: bool) -> FaultPlan:
+    """A seeded random fault plan — rates drawn once per chaos seed, the
+    interleaving then a pure function of the plan (replayable)."""
+    rng = np.random.default_rng(seed)
+    sites = {
+        "alloc": FaultSpec(float(rng.uniform(0.02, 0.25))),
+        "decode": FaultSpec(float(rng.uniform(0.02, 0.2))),
+        "logits": FaultSpec(float(rng.uniform(0.005, 0.05)),
+                            max_fires=int(rng.integers(1, 3))),
+    }
+    if chunked:
+        sites["chunk"] = FaultSpec(float(rng.uniform(0.02, 0.25)))
+    if spec:
+        sites["draft"] = FaultSpec(float(rng.uniform(0.1, 0.5)))
+    return FaultPlan(seed=seed, sites=tuple(sites.items()))
+
+
+def _chaos_case(target_model, *, mode: str, chaos_seed: int,
+                spec: bool = False):
+    model, params = target_model
+    rng = np.random.default_rng(0)
+    shared = mode == "shared"
+    chunks = None if mode == "monolithic" else (4, 8)
+    prompts, samplings = _traffic(rng, shared=shared)
+    base = EngineConfig(max_slots=3, max_seq=64, depth=2, page_size=8,
+                        prefill_chunks=chunks, prefix_sharing=shared)
+    clean = _clean_run(target_model, (mode, "plain"), base, prompts,
+                       samplings)
+    cfg = base.replace(
+        faults=_chaos_plan(chaos_seed, spec=spec,
+                           chunked=chunks is not None),
+        speculative=(SpecConfig(draft=DFT, k=3, adaptive=False)
+                     if spec else None))
+    out, eng = _run_engine(model, params, cfg, prompts, samplings)
+    # every request reached a terminal state; the engine converged
+    for uid, st in eng._results.items():
+        assert st.done, f"{uid} not terminal: {st.status}"
+        assert st.status in (Status.FINISHED, Status.FAILED)
+        if st.status == Status.FAILED:
+            # partial output is a clean prefix of the fault-free stream
+            np.testing.assert_array_equal(out[uid],
+                                          clean[uid][:out[uid].size])
+        else:
+            # the survivor contract: bit-identical to the fault-free run
+            np.testing.assert_array_equal(out[uid], clean[uid])
+    _assert_reclaimed(eng)
+    return eng
+
+
+@pytest.mark.parametrize("mode", ["monolithic", "chunked", "shared"])
+@pytest.mark.parametrize("chaos_seed", [0, 1])
+def test_chaos_random_interleavings(target_model, mode, chaos_seed):
+    _chaos_case(target_model, mode=mode, chaos_seed=chaos_seed)
+
+
+@pytest.mark.parametrize("chaos_seed", [0, 1])
+def test_chaos_speculative(target_model, chaos_seed):
+    eng = _chaos_case(target_model, mode="chunked", chaos_seed=chaos_seed,
+                      spec=True)
+    assert eng.stats["spec_rounds"] > 0
+
+
+def test_chaos_replay_is_bit_exact(target_model):
+    """Same plan + same traffic ⟹ the identical failure interleaving:
+    statuses, outputs and per-site fire counts all replay."""
+    a = _chaos_case(target_model, mode="chunked", chaos_seed=0)
+    b = _chaos_case(target_model, mode="chunked", chaos_seed=0)
+    assert a.stats["faults"] == b.stats["faults"]
+    assert {u: s.status for u, s in a._results.items()} == \
+           {u: s.status for u, s in b._results.items()}
+    for uid in a._results:
+        np.testing.assert_array_equal(a._results[uid].output(),
+                                      b._results[uid].output())
+
+
+def test_chaos_hypothesis_layer(target_model):
+    """Property-based layer over the same harness, where hypothesis is
+    available (it is optional — the container must not need a pip
+    install): any chaos seed in the strategy space upholds the survivor
+    contract."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as hst
+
+    @settings(max_examples=5, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(chaos_seed=hst.integers(min_value=0, max_value=2 ** 16),
+           mode=hst.sampled_from(["monolithic", "chunked", "shared"]))
+    def prop(chaos_seed, mode):
+        _chaos_case(target_model, mode=mode, chaos_seed=chaos_seed)
+
+    prop()

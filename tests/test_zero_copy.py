@@ -71,8 +71,8 @@ def test_decode_step_reuses_donated_arena_buffer(tiny_model):
     active = jnp.ones((SLOTS,), jnp.int32)
     samp = sampling.init_slot_state(SLOTS)
     ptrs = _leaf_ptrs(cache)
-    tokens, new_cache, pos, active, samp, read = step(params, tokens, cache,
-                                                      pos, active, samp)
+    tokens, new_cache, pos, active, samp, read, ok = step(
+        params, tokens, cache, pos, active, samp)
     _require_donation(cache)
     assert _leaf_ptrs(new_cache) == ptrs, \
         "decode step re-materialised the arena instead of reusing it"
@@ -80,7 +80,7 @@ def test_decode_step_reuses_donated_arena_buffer(tiny_model):
     # state, which is donated into the next step
     assert read.unsafe_buffer_pointer() != tokens.unsafe_buffer_pointer()
     # second step: the arena stays resident in the same buffer
-    tokens2, cache2, pos2, active2, samp2, read2 = step(
+    tokens2, cache2, pos2, active2, samp2, read2, ok2 = step(
         params, tokens, new_cache, pos, active, samp)
     assert _leaf_ptrs(cache2) == ptrs
     # and the first step's readback is still host-readable
