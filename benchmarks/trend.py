@@ -17,6 +17,11 @@ by metric class, because the smoke runs on a timeshared container:
   * **timing** metrics — tokens/s, TTFT, wall, idle fractions — swing
     with container load, so drift is *reported* (warn lines) but never
     gates.
+  * **inverted** deterministic metrics — columns named ``speedup`` —
+    count a >20% *decrease* as the regression (the replica sweep's
+    critical-path ratios shrink when scaling breaks); increases are
+    improvements.  Timing takes precedence, so a wall-clock ratio named
+    with a timing suffix stays warn-only.
 
 A claim that passed previously and fails now is always a hard failure
 (run.py already fails the run on any failing claim; this catches the
@@ -47,9 +52,19 @@ import statistics
 _TIMING = ("_s", "_ms", "tokens_per_s", "ttft", "wall", "idle",
            "host_blocked")
 
+# substrings marking a deterministic column whose cost direction is a
+# *decrease* — e.g. the replica sweep's critical-path speedup ratios,
+# where 3.9x -> 3.1x is the regression and an increase is the win.
+# Checked after _TIMING, so a timing-named ratio stays warn-only.
+_INVERTED = ("speedup",)
+
 
 def _is_timing(col: str) -> bool:
     return any(t in col for t in _TIMING)
+
+
+def _is_inverted(col: str) -> bool:
+    return any(t in col for t in _INVERTED)
 
 
 def _numeric(v):
@@ -100,7 +115,7 @@ def diff(current: dict, previous: dict, *, tolerance: float):
                         f"({delta:+.0%})")
                 if _is_timing(col):
                     warnings.append(line)
-                elif delta > 0:
+                elif (delta < 0) if _is_inverted(col) else (delta > 0):
                     regressions.append(line)
                 else:
                     improvements.append(line)

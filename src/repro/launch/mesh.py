@@ -36,3 +36,30 @@ def make_test_mesh(shape=(1, 1), axes=("data", "model")) -> Mesh:
 
 def chips(mesh: Mesh) -> int:
     return mesh.devices.size
+
+
+def data_shards(mesh: Mesh, n: int) -> list:
+    """Split ``mesh``'s ``data`` axis into ``n`` replica device groups.
+
+    The serving router places engine replica *i* on ``shards[i]`` — each
+    shard is a flat device list covering a contiguous slice of the data
+    axis (all other axes included whole, so a shard is a full model's
+    worth of chips).  When ``n`` exceeds the data-axis extent the shards
+    cycle — replicas time-share devices, which is exactly the single-CPU
+    test topology (every replica on the one host device).
+    """
+    if n < 1:
+        raise ValueError(f"need n >= 1 replica shards, got {n}")
+    axis = mesh.axis_names.index("data")
+    extent = mesh.devices.shape[axis]
+    groups = min(n, extent)
+    # contiguous slices, first (extent % groups) slices one wider
+    width, rem = divmod(extent, groups)
+    shards, start = [], 0
+    for g in range(groups):
+        stop = start + width + (1 if g < rem else 0)
+        idx = [slice(None)] * mesh.devices.ndim
+        idx[axis] = slice(start, stop)
+        shards.append(list(mesh.devices[tuple(idx)].flat))
+        start = stop
+    return [shards[i % groups] for i in range(n)]

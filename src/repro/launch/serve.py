@@ -50,6 +50,18 @@ Robustness knobs (the failure model; see serving/README.md):
     traffic ⟹ the identical failure interleaving, replayable bit-exactly.
   * ``--health`` enables the degradation ladder; rung transitions and the
     fault/quarantine counters are printed after the run.
+
+Multi-replica knobs (the router; see serving/README.md):
+
+  * ``--replicas N`` serves the workload over N engine replicas behind a
+    :class:`~repro.runtime.serving.Router` — independent arenas /
+    schedulers / dispatch queues sharing one model object (and therefore
+    one set of compiled executables).  A per-replica stats line is
+    printed after the run.  Streams are bit-identical to ``--replicas 1``
+    under every placement policy: the PRNG folds only (seed, position).
+  * ``--placement least-pressure|round-robin|affinity`` picks where each
+    request lands; ``affinity`` pins a request's session to the replica
+    that served it before (requests are given cycling session ids).
 """
 from __future__ import annotations
 
@@ -60,10 +72,11 @@ import jax
 import numpy as np
 
 from repro.models import registry
-from repro.runtime.serving import (DEFAULT_BUCKETS, EngineConfig, GREEDY,
-                                   HealthConfig, Request, SamplingParams,
-                                   ServingEngine, SpecConfig,
-                                   parse_fault_plan)
+from repro.runtime.serving import (DEFAULT_BUCKETS, PLACEMENT_POLICIES,
+                                   EngineConfig, GREEDY, HealthConfig,
+                                   Request, Router, RouterConfig,
+                                   SamplingParams, ServingEngine,
+                                   SpecConfig, parse_fault_plan)
 
 
 def parse_speculative(text: str) -> SpecConfig:
@@ -281,6 +294,15 @@ def main(argv=None):
                         "DEGRADED -> SHEDDING -> DRAINING) over default "
                         "HealthConfig thresholds; transitions are printed "
                         "with the stats")
+    p.add_argument("--replicas", type=int, default=1,
+                   help="engine replicas behind the router (1 = a bare "
+                        "engine, no router); replicas share the model "
+                        "object, so the fleet compiles once")
+    p.add_argument("--placement", choices=list(PLACEMENT_POLICIES),
+                   default="least-pressure",
+                   help="router placement policy (only with --replicas "
+                        "> 1); token streams are bit-identical under "
+                        "every choice")
     p.add_argument("--reduced", action="store_true", default=True)
     args = p.parse_args(argv)
 
@@ -333,7 +355,7 @@ def main(argv=None):
     max_prompt = max(lens)
     pad_slack = min(chunks) if chunks else 0
     donate = {"auto": "auto", "on": True, "off": False}[args.donate]
-    eng = make_engine(bundle, params, config=EngineConfig(
+    econfig = EngineConfig(
         max_slots=args.slots or args.requests,
         max_seq=max_prompt + prefix + args.gen + pad_slack + 1,
         depth=args.depth, page_size=args.page_size,
@@ -345,11 +367,42 @@ def main(argv=None):
                      if args.speculative else None),
         faults=(parse_fault_plan(args.fault_plan, seed=args.seed)
                 if args.fault_plan else None),
-        health=HealthConfig() if args.health else None))
+        health=HealthConfig() if args.health else None)
     plan = sampling_plan(args.requests, temperature=args.temperature,
                          top_k=args.top_k, top_p=args.top_p,
                          min_p=args.min_p, seed=args.seed,
                          mix=args.sampling_mix)
+
+    if args.replicas > 1:
+        # sessions cycle over 2x the fleet so the affinity policy has
+        # pins to honor without starving any replica of first contact
+        router = Router(bundle.model, cfg, params,
+                        config=RouterConfig(replicas=args.replicas,
+                                            placement=args.placement,
+                                            engine=econfig))
+        for i in range(args.requests):
+            router.submit(Request(
+                uid=i, prompt=prompts[i],
+                max_new_tokens=args.gen, sampling=plan[i],
+                deadline_ms=args.deadline_ms,
+                session=f"s{i % (2 * args.replicas)}",
+                extras={k: v[i] for k, v in extras.items()}))
+        t0 = time.perf_counter()
+        out = router.run()
+        dt = time.perf_counter() - t0
+        total = sum(o.size for o in out.values())
+        print(f"{args.arch}: {args.requests} requests over "
+              f"{args.replicas} replicas ({args.placement}), {total} "
+              f"tokens in {dt:.2f}s = {total / dt:.1f} tok/s "
+              f"(depth={args.depth}, slots={econfig.max_slots}/replica, "
+              f"prefill={args.prefill_mode})")
+        print("router:", router.stats)
+        for row in router.replica_stats():
+            print("  replica:", row)
+        print("first request:", out[0][:16], "...")
+        return 0
+
+    eng = make_engine(bundle, params, config=econfig)
     for i in range(args.requests):
         eng.submit(Request(
             uid=i, prompt=prompts[i],

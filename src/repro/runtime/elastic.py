@@ -1,11 +1,22 @@
-"""Elastic re-meshing: move a training state onto a different mesh.
+"""Elastic membership: who is in the data-parallel world, and re-meshing.
 
-Checkpoints store full logical arrays (see ``checkpoint.store``), so
-*restart-time* elasticity is free.  This module provides *in-flight*
-elasticity: when the data-parallel world changes (node loss / scale-up),
-``elastic_remesh`` re-places every leaf of the state onto the new mesh with
-the shardings recomputed for that mesh.  Leaves whose logical spec is
-unshardable on the new mesh degrade to replicated (GSPMD pads otherwise).
+Two layers of elasticity live here:
+
+* :class:`ElasticGroup` — deterministic membership bookkeeping for any
+  elastic worker set (training hosts, serving replicas).  Members join,
+  drain (stop taking new work while finishing what they hold), and retire;
+  every transition bumps a monotonic epoch and lands in an append-only
+  transition log, so two observers that replay the same join/drain calls
+  agree exactly on the active set and its order.  The serving router
+  builds replica lifecycle on top of this.
+
+* ``elastic_remesh`` — *in-flight* re-meshing of a training state: when
+  the data-parallel world changes (node loss / scale-up), every leaf is
+  re-placed onto the new mesh with shardings recomputed for that mesh.
+  Checkpoints store full logical arrays (see ``checkpoint.store``), so
+  *restart-time* elasticity is free; leaves whose logical spec is
+  unshardable on the new mesh degrade to replicated (GSPMD pads
+  otherwise).
 
 The global batch is owned by the data pipeline: it is a pure function of the
 step index, so a re-meshed run keeps consuming the same batch sequence —
@@ -13,10 +24,94 @@ only the per-device slice changes.
 """
 from __future__ import annotations
 
-from typing import Any, Callable
+import enum
+from typing import Any, Callable, Hashable
 
 import jax
 from jax.sharding import Mesh
+
+
+class MemberState(enum.Enum):
+    ACTIVE = "active"        # in the placement set
+    DRAINING = "draining"    # no new work; resident work departs/migrates
+    RETIRED = "retired"      # left the group; id is never reused
+
+
+#: legal lifecycle transitions (anything else raises)
+_TRANSITIONS = {
+    MemberState.ACTIVE: (MemberState.DRAINING, MemberState.RETIRED),
+    MemberState.DRAINING: (MemberState.RETIRED,),
+    MemberState.RETIRED: (),
+}
+
+
+class ElasticGroup:
+    """Deterministic membership for an elastic worker set.
+
+    Join order is the canonical iteration order — :meth:`active` returns
+    ids sorted by join epoch, never by hash or insertion accident — so any
+    placement policy defined over it (round-robin cursors, least-pressure
+    tie-breaks) is reproducible across runs.  ``epoch`` increments on
+    every transition; :attr:`transitions` is the append-only
+    ``(epoch, member, old_state, new_state)`` log.
+    """
+
+    def __init__(self):
+        self.epoch = 0
+        self._states: dict[Hashable, MemberState] = {}
+        self._join_epoch: dict[Hashable, int] = {}
+        self.transitions: list[tuple] = []
+
+    def _move(self, member: Hashable, new: MemberState) -> int:
+        old = self._states.get(member)
+        if new is MemberState.ACTIVE:
+            if old is not None:
+                raise ValueError(f"member {member!r} already joined "
+                                 f"(state {old.name})")
+        elif old is None:
+            raise KeyError(f"member {member!r} never joined")
+        elif new not in _TRANSITIONS[old]:
+            raise ValueError(f"member {member!r}: illegal transition "
+                             f"{old.name} -> {new.name}")
+        self.epoch += 1
+        self._states[member] = new
+        self.transitions.append((self.epoch, member, old, new))
+        return self.epoch
+
+    def join(self, member: Hashable) -> int:
+        """Add a new member to the active set.  Returns its join epoch —
+        the next placement decision already sees it."""
+        epoch = self._move(member, MemberState.ACTIVE)
+        self._join_epoch[member] = epoch
+        return epoch
+
+    def drain(self, member: Hashable) -> int:
+        """ACTIVE -> DRAINING: out of the placement set immediately."""
+        return self._move(member, MemberState.DRAINING)
+
+    def retire(self, member: Hashable) -> int:
+        """Leave the group for good (from ACTIVE or DRAINING)."""
+        return self._move(member, MemberState.RETIRED)
+
+    def state(self, member: Hashable) -> MemberState:
+        return self._states[member]
+
+    def is_active(self, member: Hashable) -> bool:
+        return self._states.get(member) is MemberState.ACTIVE
+
+    def active(self) -> tuple:
+        """Active member ids in join order (the placement order)."""
+        return tuple(sorted(
+            (m for m, s in self._states.items()
+             if s is MemberState.ACTIVE),
+            key=self._join_epoch.__getitem__))
+
+    def members(self) -> tuple:
+        """All non-retired ids in join order (draining included)."""
+        return tuple(sorted(
+            (m for m, s in self._states.items()
+             if s is not MemberState.RETIRED),
+            key=self._join_epoch.__getitem__))
 
 
 def elastic_remesh(state: Any, new_mesh: Mesh,

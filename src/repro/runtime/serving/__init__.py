@@ -22,7 +22,10 @@ from repro.runtime.serving.faults import (FaultInjector, FaultPlan,
                                           FaultSpec, parse_fault_plan)
 from repro.runtime.serving.health import (HealthConfig, HealthMonitor,
                                           HealthState)
+from repro.runtime.serving.replica import Replica, StepClock
 from repro.runtime.serving.request import Request, RequestState, Status
+from repro.runtime.serving.router import (PLACEMENT_POLICIES, Router,
+                                          RouterConfig)
 from repro.runtime.serving.sampling import GREEDY, SamplingParams
 from repro.runtime.serving.scheduler import AdmissionRejected, Scheduler
 from repro.runtime.serving.speculative import SpecConfig, SpecController
@@ -35,6 +38,8 @@ __all__ = ["EngineConfig", "ServingEngine",
            "FaultPlan", "FaultSpec", "FaultInjector", "parse_fault_plan",
            "HealthConfig", "HealthMonitor", "HealthState",
            "AdmissionRejected",
+           "Router", "RouterConfig", "PLACEMENT_POLICIES",
+           "Replica", "StepClock",
            "PagedKVCacheManager", "AllocResult", "PrefixMatch",
            "DEFAULT_BUCKETS",
            "Request", "RequestState", "Status", "Scheduler",

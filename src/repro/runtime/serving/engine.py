@@ -637,7 +637,8 @@ class ServingEngine:
                       "sampled_requests": 0, "sampled_steps": 0,
                       "forks": 0, "shared_prompt_tokens": 0,
                       "prefix_hits": 0, "prefix_deferrals": 0,
-                      "timed_out": 0, "failed": 0, "quarantined": 0,
+                      "timed_out": 0, "failed": 0, "migrated": 0,
+                      "quarantined": 0,
                       "poisoned": 0, "deadline_overrun_s": {},
                       "host_blocked_s": 0.0, "ttft_s": {}}
         if self._injector is not None:
@@ -692,7 +693,8 @@ class ServingEngine:
         slot = self.scheduler.depart(st, status, reason)
         if slot is not None:
             self._active = self._active.at[slot].set(0)
-        key = "timed_out" if status == Status.TIMED_OUT else "failed"
+        key = {Status.TIMED_OUT: "timed_out",
+               Status.MIGRATED: "migrated"}.get(status, "failed")
         self.stats[key] += 1
 
     def _expire_deadlines(self) -> None:
@@ -1379,6 +1381,31 @@ class ServingEngine:
                 deps = self.scheduler.on_token(slot, int(host_tokens[slot]))
                 for dslot, _ in deps:
                     self._active = self._active.at[dslot].set(0)
+
+    def evacuate(self) -> list:
+        """Remove every non-terminal request from service for migration and
+        return their immutable :class:`Request` objects in arrival order.
+
+        The drain-with-migration half of the router's ``drain()``: because
+        every stream is a pure function of (seed, absolute position) — the
+        same contract preemption recompute relies on — resubmitting the
+        returned requests to *any* sibling replica replays their token
+        streams bit-identically from the prompt.  Evacuated requests depart
+        ``MIGRATED`` (counted separately from failures), their slots leave
+        the decode batch, their pages free through the normal refcount
+        path, and their results are dropped here — ownership moves to
+        wherever the router re-places them."""
+        states = [*self.scheduler.waiting,
+                  *list(self.scheduler.running.values())]
+        states.sort(key=lambda s: s.seq)
+        moved = []
+        for st in states:
+            if st.done:
+                continue
+            self._depart(st, Status.MIGRATED, "migrated")
+            self._results.pop(st.request.uid, None)
+            moved.append(st.request)
+        return moved
 
     def run(self, *, max_steps: Optional[int] = None) -> dict:
         """Drive until every submitted request finishes.  Returns

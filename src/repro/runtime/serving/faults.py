@@ -110,6 +110,22 @@ class FaultPlan:
                 return s
         return None
 
+    def offset(self, delta: int) -> "FaultPlan":
+        """A copy with every seed — the plan's and any per-site overrides
+        — shifted by ``delta``.  The router gives replica *r* the plan
+        ``faults.offset(r * stride)`` so each replica draws an independent
+        deterministic fault stream: one replica's storm cannot line up
+        with (or perturb) a sibling's, yet every replica's interleaving
+        stays individually replayable."""
+        if delta == 0:
+            return self
+        sites = tuple(
+            (name, s if s.seed is None
+             else dataclasses.replace(s, seed=s.seed + delta))
+            for name, s in self.sites)
+        return dataclasses.replace(self, seed=self.seed + delta,
+                                   sites=sites)
+
 
 def parse_fault_plan(text: str, seed: int = 0) -> FaultPlan:
     """Parse the serve.py ``--fault-plan`` syntax: comma-separated

@@ -26,10 +26,17 @@ class Status(enum.Enum):
     #                            finish_reason ("nan-logits",
     #                            "admission-rejected", "recompute-cap",
     #                            "draining")
+    MIGRATED = "migrated"      # evacuated for replay on another replica;
+    #                            not a loss — the router resubmits the
+    #                            Request and the (seed, position) contract
+    #                            replays the identical stream there
 
 
-#: statuses a request can never leave (slot released, output frozen)
-TERMINAL = (Status.FINISHED, Status.TIMED_OUT, Status.FAILED)
+#: statuses a request can never leave (slot released, output frozen).
+#: MIGRATED is terminal *for this replica* — the request itself lives on
+#: wherever the router re-placed it.
+TERMINAL = (Status.FINISHED, Status.TIMED_OUT, Status.FAILED,
+            Status.MIGRATED)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,7 +56,13 @@ class Request:
     request still WAITING / PREFILLING / RUNNING past its deadline departs
     with :attr:`Status.TIMED_OUT`, keeping whatever tokens it generated —
     the partial output is a clean prefix of the fault-free stream (the
-    (seed, position) contract holds token by token).
+    (seed, position) contract holds token by token).  A deadline restarts
+    from zero if the router migrates the request to another replica.
+
+    ``session`` (optional): multi-turn conversation key.  The router's
+    affinity placement pins every request of a session to the replica that
+    served it first, so follow-up turns land where the prefix chain lives.
+    The engine itself ignores it.
     """
     uid: Any
     prompt: np.ndarray                    # (S,) int32 token ids
@@ -58,6 +71,7 @@ class Request:
     extras: Optional[dict] = None
     sampling: SamplingParams = GREEDY
     deadline_ms: Optional[float] = None
+    session: Optional[Any] = None
 
     def __post_init__(self):
         if self.deadline_ms is not None and self.deadline_ms <= 0:

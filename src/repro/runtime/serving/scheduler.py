@@ -29,14 +29,22 @@ class AdmissionRejected(Exception):
     """A request was refused service: admission retries exhausted their cap
     (``finish_reason == "admission-rejected"``, attached to
     ``RequestState.rejection``) or the replica is shedding load
-    (raised directly by ``ServingEngine.submit``)."""
+    (raised directly by ``ServingEngine.submit``).
 
-    def __init__(self, uid, reason: str, attempts: int = 0):
-        super().__init__(f"request {uid!r} rejected ({reason}) "
+    ``replica`` (optional) names the engine replica that refused — the
+    router attaches it before re-raising so callers can tell *which*
+    replica bounced the request (and the router itself retries once on a
+    non-affinity replica before letting the exception escape)."""
+
+    def __init__(self, uid, reason: str, attempts: int = 0,
+                 replica=None):
+        at = "" if replica is None else f" by replica {replica}"
+        super().__init__(f"request {uid!r} rejected{at} ({reason}) "
                          f"after {attempts} admission attempts")
         self.uid = uid
         self.reason = reason
         self.attempts = attempts
+        self.replica = replica
 
 
 class Scheduler:
@@ -85,7 +93,8 @@ class Scheduler:
         heapq.heapify(self._free_slots)
         self._next_seq = 0
         self.stats = {"admitted": 0, "finished": 0, "preempted": 0,
-                      "timed_out": 0, "failed": 0, "rejected": 0}
+                      "timed_out": 0, "failed": 0, "rejected": 0,
+                      "migrated": 0}
 
     # -- intake --------------------------------------------------------------
     def submit(self, request: Request,
@@ -278,8 +287,9 @@ class Scheduler:
                reason: str) -> int | None:
         """Remove a request from service *abnormally* — deadline expiry
         (``TIMED_OUT``), NaN quarantine / admission rejection / recompute
-        cap / drain (``FAILED``) — keeping whatever it generated as partial
-        output.  Works from any non-terminal state: WAITING leaves the
+        cap / drain (``FAILED``), or router-driven evacuation
+        (``MIGRATED`` — not a loss; the request replays elsewhere) —
+        keeping whatever it generated as partial output.  Works from any non-terminal state: WAITING leaves the
         queue; PREFILLING/RUNNING release the slot through the same
         refcount-ordered page free as normal retirement, so a departing
         *fork* drops its references to shared prefix pages (the donor's
@@ -301,7 +311,8 @@ class Scheduler:
             self._release(st)
         st.status = status
         st.finish_reason = reason
-        key = "timed_out" if status == Status.TIMED_OUT else "failed"
+        key = {Status.TIMED_OUT: "timed_out",
+               Status.MIGRATED: "migrated"}.get(status, "failed")
         self.stats[key] += 1
         return slot
 

@@ -22,9 +22,9 @@ from repro.models import registry
 from repro.runtime.serving import (AdmissionRejected, EngineConfig,
                                    FaultInjector, FaultPlan, FaultSpec,
                                    HealthConfig, HealthMonitor, HealthState,
-                                   PagedKVCacheManager, Request, Scheduler,
-                                   ServingEngine, SpecConfig, Status,
-                                   parse_fault_plan)
+                                   PagedKVCacheManager, Request, Router,
+                                   RouterConfig, Scheduler, ServingEngine,
+                                   SpecConfig, Status, parse_fault_plan)
 from repro.runtime.serving.faults import SITES, _u01
 from repro.runtime.serving.sampling import SamplingParams
 
@@ -717,3 +717,120 @@ def test_chaos_hypothesis_layer(target_model):
         _chaos_case(target_model, mode=mode, chaos_seed=chaos_seed)
 
     prop()
+
+
+# ---------------------------------------------------------------------------
+# multi-replica layer: per-replica fault streams, router blast radius
+# ---------------------------------------------------------------------------
+
+def _router_traffic_run(target_model, cfg, *, n=3,
+                        policy="least-pressure", deadline_uid=None,
+                        clock_factory=None, max_new=8):
+    """The chaos traffic through a router fleet; returns (out, router)."""
+    model, params = target_model
+    rng = np.random.default_rng(0)
+    prompts, samplings = _traffic(rng)
+    router = Router(model, TGT, params,
+                    config=RouterConfig(replicas=n, placement=policy,
+                                        engine=cfg),
+                    clock_factory=clock_factory)
+    for i, (p, sp) in enumerate(zip(prompts, samplings)):
+        kw = {"sampling": sp} if sp is not None else {}
+        if i == deadline_uid:
+            kw["deadline_ms"] = 100.0
+        router.submit(Request(uid=i, prompt=p, max_new_tokens=max_new,
+                              **kw))
+    out = router.run(max_steps=3000)
+    return out, router
+
+
+def test_router_offsets_make_fault_streams_replica_local(target_model):
+    """Each replica's injector runs the plan seed-offset by its rid: the
+    same site consults draw *different* deterministic fault streams, so a
+    storm's interleaving is a property of one replica, not the fleet."""
+    plan = _chaos_plan(3, spec=False, chunked=True)
+    cfg = EngineConfig(max_slots=3, max_seq=64, depth=1, page_size=8,
+                       prefill_chunks=(4, 8), faults=plan)
+    _, router = _router_traffic_run(target_model, cfg, n=3)
+    seeds = [router.replicas[r].engine._injector.plan.seed
+             for r in range(3)]
+    assert seeds == [plan.seed, plan.seed + 1, plan.seed + 2]
+    # the offset changes the draw itself, not just the label
+    assert _u01(seeds[0], "alloc", 0) != _u01(seeds[1], "alloc", 0)
+
+
+@pytest.mark.parametrize("chaos_seed", [0, 1])
+def test_router_chaos_blast_radius(target_model, chaos_seed):
+    """The survivor contract at the router level: under a seeded chaos
+    plan on every replica, each surviving request's stream is bit-exact
+    against the fault-free *router* run (identical placement — submits
+    precede service, so placement state is fault-independent), failures
+    keep a clean prefix, and every replica's pages drain."""
+    base = EngineConfig(max_slots=3, max_seq=64, depth=2, page_size=8,
+                        prefill_chunks=(4, 8))
+    clean, _ = _router_traffic_run(target_model, base, n=3)
+    plan = _chaos_plan(chaos_seed, spec=False, chunked=True)
+    out, router = _router_traffic_run(target_model,
+                                      base.replace(faults=plan), n=3)
+    states = router.result_states()
+    assert len(states) == len(clean)
+    for uid, st in states.items():
+        assert st.done, f"{uid} not terminal: {st.status}"
+        if st.status == Status.FINISHED:
+            np.testing.assert_array_equal(out[uid], clean[uid])
+        else:
+            np.testing.assert_array_equal(out[uid],
+                                          clean[uid][:out[uid].size])
+    for rep in router.replicas.values():
+        _assert_reclaimed(rep.engine)
+    # the replicas did not fire in lockstep: at least one consult count
+    # diverged (deterministic per seed — pinned, not probabilistic)
+    fired = [router.replicas[r].engine._injector.fired for r in range(3)]
+    assert not (fired[0] == fired[1] == fired[2])
+
+
+def test_router_deadline_storm_is_replica_local(target_model):
+    """Advance ONE replica's clock past a resident deadline: that replica
+    times its request out; sibling replicas' clocks never moved and their
+    streams must be untouched — the router-level blast-radius claim."""
+    base = EngineConfig(max_slots=3, max_seq=64, depth=1, page_size=8,
+                        prefill_chunks=(4, 8))
+    clean, _ = _router_traffic_run(target_model, base, n=2,
+                                   policy="round-robin")
+    clocks = {}
+
+    def clock_factory(rid):
+        clocks[rid] = _FakeClock()
+        return clocks[rid]
+
+    model, params = target_model
+    rng = np.random.default_rng(0)
+    prompts, samplings = _traffic(rng)
+    router = Router(model, TGT, params,
+                    config=RouterConfig(replicas=2,
+                                        placement="round-robin",
+                                        engine=base),
+                    clock_factory=clock_factory)
+    for i, (p, sp) in enumerate(zip(prompts, samplings)):
+        kw = {"sampling": sp} if sp is not None else {}
+        if i == 0:
+            kw["deadline_ms"] = 100.0
+        router.submit(Request(uid=i, prompt=p, max_new_tokens=8, **kw))
+    storm_rid = router.owner_of(0)
+    for _ in range(2):
+        router.step()
+    clocks[storm_rid].t = 10.0          # storm: far past the deadline
+    out = router.run(max_steps=3000)
+    states = router.result_states()
+    assert states[0].status == Status.TIMED_OUT
+    np.testing.assert_array_equal(out[0], clean[0][:out[0].size])
+    for uid, st in states.items():
+        if uid == 0:
+            continue
+        assert st.status == Status.FINISHED
+        np.testing.assert_array_equal(out[uid], clean[uid])
+    # nothing on the sibling replica departed abnormally
+    for rid, rep in router.replicas.items():
+        if rid != storm_rid:
+            assert rep.engine.stats["timed_out"] == 0
+            assert rep.engine.stats["failed"] == 0

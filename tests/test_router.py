@@ -1,0 +1,534 @@
+"""Multi-replica router: placement invariants, lifecycle, and the
+bounce-retry contract.
+
+Host-logic level (duck-typed fake replicas — placement is pure logic over
+the replica signal surface): least-pressure never places onto a
+SHEDDING/DRAINING replica, round-robin cycles are fair permutations of the
+active set, affinity lands on the prefix-holding replica exactly while it
+sits on the HEALTHY/DEGRADED rungs, and ``Router.submit`` retries a
+bounced request once on a non-affinity replica before re-raising
+``AdmissionRejected`` with the refusing replica's id attached.  A
+hypothesis layer (optional dev dep, importorskip like
+``tests/test_sampling.py``) drives the same invariants across drawn
+health/pressure assignments.
+
+Engine level (real tiny engines): drain completes with zero lost requests
+in both modes (finish-in-place and recompute-migration), join is visible
+to the very next placement decision, and ``ElasticGroup`` / ``StepClock``
+/ ``FaultPlan.offset`` / ``data_shards`` behave as documented.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.models import registry
+from repro.runtime.elastic import ElasticGroup, MemberState
+from repro.runtime.serving import (AdmissionRejected, EngineConfig,
+                                   FaultPlan, FaultSpec, HealthState,
+                                   PLACEMENT_POLICIES, Request,
+                                   RequestState, Router, RouterConfig,
+                                   StepClock, Status)
+from repro.runtime.serving.sampling import SamplingParams
+
+TGT = ArchConfig(name="tiny-router", family="dense", n_layers=2,
+                 d_model=32, n_heads=4, n_kv_heads=2, d_ff=64, vocab=97,
+                 head_dim=8, param_dtype="float32", act_dtype="float32",
+                 max_seq=64)
+
+
+# ---------------------------------------------------------------------------
+# ElasticGroup: deterministic membership (host logic)
+# ---------------------------------------------------------------------------
+
+def test_elastic_group_membership_and_epochs():
+    g = ElasticGroup()
+    assert g.join("a") == 1 and g.join("b") == 2 and g.join("c") == 3
+    assert g.active() == ("a", "b", "c")           # join order, always
+    assert g.drain("b") == 4
+    assert g.active() == ("a", "c")                # out of placement now
+    assert g.members() == ("a", "b", "c")          # still in the group
+    assert g.state("b") is MemberState.DRAINING
+    g.retire("b")
+    assert g.members() == ("a", "c")
+    assert g.join("d") == 6                        # every transition bumps
+    assert g.active() == ("a", "c", "d")
+    assert [m for _, m, _, _ in g.transitions] == \
+        ["a", "b", "c", "b", "b", "d"]
+
+
+def test_elastic_group_illegal_transitions():
+    g = ElasticGroup()
+    g.join("a")
+    with pytest.raises(ValueError):
+        g.join("a")                                # double join
+    with pytest.raises(KeyError):
+        g.drain("ghost")                           # never joined
+    g.drain("a")
+    with pytest.raises(ValueError):
+        g.drain("a")                               # already draining
+    g.retire("a")
+    with pytest.raises(ValueError):
+        g.retire("a")                              # retired is final
+    with pytest.raises(ValueError):
+        g.join("a")                                # ids are never reused
+
+
+# ---------------------------------------------------------------------------
+# RouterConfig validation
+# ---------------------------------------------------------------------------
+
+def test_router_config_validation():
+    with pytest.raises(ValueError):
+        RouterConfig(replicas=0)
+    with pytest.raises(ValueError):
+        RouterConfig(placement="random")
+    with pytest.raises(ValueError):
+        RouterConfig(fault_seed_stride=-1)
+    with pytest.raises(ValueError):
+        RouterConfig(engine="nope")
+    cfg = RouterConfig(replicas=2, placement="affinity")
+    assert cfg.replace(replicas=4).replicas == 4
+    assert set(PLACEMENT_POLICIES) == {"least-pressure", "round-robin",
+                                       "affinity"}
+
+
+# ---------------------------------------------------------------------------
+# placement invariants over fake replicas (pure host logic)
+# ---------------------------------------------------------------------------
+
+class _FakeReplica:
+    """The replica signal surface the router places against, scripted."""
+
+    def __init__(self, rid, *, health=HealthState.HEALTHY, pressure=0.0,
+                 load=0, prefix=0):
+        self.rid = rid
+        self.health = health
+        self._pressure = pressure
+        self._load = load
+        self._prefix = prefix
+        self.accepted = []
+
+    def pressure(self):
+        return self._pressure
+
+    def unfinished(self):
+        return self._load + len(self.accepted)
+
+    def prefix_len(self, prompt):
+        return self._prefix
+
+    def submit(self, request):
+        # mirrors ServingEngine.submit's shedding refusal
+        if self.health >= HealthState.SHEDDING:
+            raise AdmissionRejected(request.uid,
+                                    self.health.name.lower())
+        self.accepted.append(request)
+        return RequestState(request)
+
+
+def _fake_router(specs, placement, **cfg_kw):
+    """A router over scripted fakes; extra replicas joined later are
+    plain healthy fakes."""
+    fakes = {}
+
+    def factory(rid, model, cfg, params, *, config, clock, devices):
+        fakes[rid] = (_FakeReplica(rid, **specs[rid]) if rid < len(specs)
+                      else _FakeReplica(rid))
+        return fakes[rid]
+
+    router = Router(config=RouterConfig(replicas=len(specs),
+                                        placement=placement, **cfg_kw),
+                    replica_factory=factory)
+    return router, fakes
+
+
+def _rq(uid, plen=4, session=None):
+    return Request(uid=uid, prompt=np.arange(1, plen + 1, dtype=np.int32),
+                   max_new_tokens=4, session=session)
+
+
+def test_least_pressure_picks_min_then_load_then_rid():
+    router, _ = _fake_router([dict(pressure=0.5), dict(pressure=0.2),
+                              dict(pressure=0.2, load=3)],
+                             "least-pressure")
+    router.submit(_rq(0))
+    assert router.owner_of(0) == 1        # lowest pressure, lowest load
+    # replica 1 now carries the request: tie breaks to it no longer
+    router.replicas[1]._pressure = 0.5
+    router.submit(_rq(1))
+    assert router.owner_of(1) == 2        # 0.2 beats both 0.5s
+
+
+def test_least_pressure_never_places_on_shedding_or_draining():
+    router, fakes = _fake_router(
+        [dict(pressure=0.0, health=HealthState.SHEDDING),
+         dict(pressure=0.0, health=HealthState.DRAINING),
+         dict(pressure=0.9)], "least-pressure")
+    for i in range(4):
+        router.submit(_rq(i))
+    assert all(router.owner_of(i) == 2 for i in range(4))
+    assert not fakes[0].accepted and not fakes[1].accepted
+    # lifecycle drain excludes too, even while healthy
+    router.group.drain(2)
+    with pytest.raises(AdmissionRejected) as ei:
+        router.submit(_rq(9))
+    assert ei.value.reason == "no-active-replicas"
+
+
+def test_round_robin_is_a_fair_permutation():
+    router, fakes = _fake_router([{}, {}, {}], "round-robin")
+    for i in range(9):
+        router.submit(_rq(i))
+    counts = [len(fakes[r].accepted) for r in range(3)]
+    assert counts == [3, 3, 3]
+    # each cycle of 3 consecutive placements is a permutation of the set
+    owners = [router.owner_of(i) for i in range(9)]
+    for c in range(3):
+        assert sorted(owners[3 * c:3 * c + 3]) == [0, 1, 2]
+
+
+def test_round_robin_skips_unhealthy():
+    router, fakes = _fake_router(
+        [{}, dict(health=HealthState.SHEDDING), {}], "round-robin")
+    for i in range(4):
+        router.submit(_rq(i))
+    assert not fakes[1].accepted
+    assert [router.owner_of(i) for i in range(4)] == [0, 2, 0, 2]
+
+
+def test_affinity_session_pin_and_prefix_probe():
+    router, fakes = _fake_router([dict(pressure=0.9), {}, dict(prefix=8)],
+                                 "affinity")
+    # no pin, no prefix hit for this prompt shape on 0/1 -> probe wins
+    router.submit(_rq(0, session="conv"))
+    assert router.owner_of(0) == 2
+    # the session is pinned now: it sticks even as pressure shifts
+    fakes[2]._pressure = 1.0
+    router.submit(_rq(1, session="conv"))
+    assert router.owner_of(1) == 2
+    # a sessionless request with no prefix anywhere falls back to
+    # least-pressure
+    fakes[2]._prefix = 0
+    router.submit(_rq(2))
+    assert router.owner_of(2) == 1
+
+
+def test_affinity_holder_off_ladder_falls_back():
+    # the prefix holder left HEALTHY/DEGRADED: probe must not pick it
+    router, fakes = _fake_router(
+        [dict(prefix=8, health=HealthState.SHEDDING), {}], "affinity")
+    router.submit(_rq(0))
+    assert router.owner_of(0) == 1
+    assert not fakes[0].accepted
+    # DEGRADED is still an affinity rung
+    fakes[0].health = HealthState.DEGRADED
+    router.submit(_rq(1))
+    assert router.owner_of(1) == 0
+
+
+# ---------------------------------------------------------------------------
+# the bounce-retry regression (satellite fix)
+# ---------------------------------------------------------------------------
+
+def test_submit_retries_once_off_the_affinity_pin():
+    """A pinned replica that went SHEDDING between placements bounces the
+    submit; the router must retry exactly once on a non-affinity replica
+    instead of surfacing the rejection — one sick replica must not bounce
+    traffic the rest of the fleet has capacity for."""
+    router, fakes = _fake_router([{}, {}], "affinity")
+    router.submit(_rq(0, session="conv"))
+    pinned = router.owner_of(0)
+    other = 1 - pinned
+    fakes[pinned].health = HealthState.SHEDDING    # after the pin
+    router.submit(_rq(1, session="conv"))
+    assert router.owner_of(1) == other
+    assert router.stats["rejected"] == 1 and router.stats["retries"] == 1
+    # and the session re-pins to where the request actually landed
+    assert router._sessions["conv"] == other
+
+
+def test_submit_reraises_with_replica_id_when_fleet_is_out():
+    router, fakes = _fake_router([{}, {}], "affinity")
+    router.submit(_rq(0, session="conv"))
+    pinned = router.owner_of(0)
+    for f in fakes.values():
+        f.health = HealthState.SHEDDING
+    with pytest.raises(AdmissionRejected) as ei:
+        router.submit(_rq(1, session="conv"))
+    # the pin was tried, everyone else is filtered out -> the pin's id
+    assert ei.value.replica == pinned
+    assert ei.value.uid == 1
+    assert f"replica {pinned}" in str(ei.value)
+
+
+def test_submit_second_bounce_reraises_with_retry_replica_id():
+    class _Flaky(_FakeReplica):
+        def submit(self, request):
+            raise AdmissionRejected(request.uid, "shedding")
+
+    flaky = {}
+
+    def factory(rid, model, cfg, params, *, config, clock, devices):
+        flaky[rid] = _Flaky(rid)
+        return flaky[rid]
+
+    router = Router(config=RouterConfig(replicas=2,
+                                        placement="least-pressure"),
+                    replica_factory=factory)
+    with pytest.raises(AdmissionRejected) as ei:
+        router.submit(_rq(0))
+    # both bounced: the re-raise names the *retry* replica and chains
+    assert ei.value.replica == 1
+    assert isinstance(ei.value.__cause__, AdmissionRejected)
+    assert router.stats["retries"] == 1
+
+
+def test_submit_retry_disabled_reraises_first_bounce():
+    router, fakes = _fake_router(
+        [dict(health=HealthState.HEALTHY), {}], "affinity",
+        retry_rejected=False)
+    router.submit(_rq(0, session="conv"))
+    pinned = router.owner_of(0)
+    fakes[pinned].health = HealthState.SHEDDING
+    with pytest.raises(AdmissionRejected) as ei:
+        router.submit(_rq(1, session="conv"))
+    assert ei.value.replica == pinned
+    assert router.stats["retries"] == 0
+
+
+# ---------------------------------------------------------------------------
+# hypothesis layer: the same invariants across drawn fleets
+# ---------------------------------------------------------------------------
+
+def test_placement_invariants_hypothesis_layer():
+    pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as hst
+
+    healths = hst.sampled_from(list(HealthState))
+    fleet = hst.lists(
+        hst.tuples(healths, hst.floats(0.0, 1.0), hst.integers(0, 5)),
+        min_size=1, max_size=6)
+
+    @settings(max_examples=60, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(fleet=fleet, holder=hst.integers(0, 5), n_reqs=hst.integers(1, 8))
+    def prop(fleet, holder, n_reqs):
+        holder %= len(fleet)
+        specs = [dict(health=h, pressure=p, load=ld,
+                      prefix=8 if i == holder else 0)
+                 for i, (h, p, ld) in enumerate(fleet)]
+        placeable = [i for i, (h, _, _) in enumerate(fleet)
+                     if h < HealthState.SHEDDING]
+        for policy in PLACEMENT_POLICIES:
+            router, fakes = _fake_router(specs, policy)
+            for i in range(n_reqs):
+                try:
+                    router.submit(_rq(i))
+                except AdmissionRejected:
+                    assert not placeable
+                    break
+                rid = router.owner_of(i)
+                # never onto SHEDDING/DRAINING, any policy
+                assert fleet[rid][0] < HealthState.SHEDDING
+                if policy == "affinity" and holder in placeable:
+                    # the prefix holder takes every request while it is
+                    # on the HEALTHY/DEGRADED rungs
+                    assert rid == holder
+            if policy == "round-robin" and placeable:
+                counts = [len(fakes[i].accepted) for i in placeable]
+                assert max(counts) - min(counts) <= 1   # fair cycle
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# real engines: drain / join lifecycle
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def target_model():
+    model = registry.build_model(TGT)
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _requests(n=6, max_new=6):
+    rng = np.random.default_rng(3)
+    reqs = []
+    for i in range(n):
+        sp = (SamplingParams(temperature=1.0, top_k=20, seed=100 + i)
+              if i % 2 else None)
+        reqs.append(Request(
+            uid=i, prompt=rng.integers(0, 97, 5 + (i % 4) * 3)
+            .astype(np.int32), max_new_tokens=max_new,
+            **({"sampling": sp} if sp else {})))
+    return reqs
+
+
+def _mk_router(target_model, n, **cfg_kw):
+    model, params = target_model
+    ec = EngineConfig(max_slots=2, max_seq=64, depth=1, page_size=8,
+                      prefill_chunks=(4, 8))
+    return Router(model, TGT, params,
+                  config=RouterConfig(replicas=n, engine=ec, **cfg_kw))
+
+
+def test_drain_in_place_loses_zero_requests(target_model):
+    router = _mk_router(target_model, 2)
+    for r in _requests():
+        router.submit(r)
+    for _ in range(3):
+        router.step()
+    router.drain(1)                       # residents finish where they are
+    out = router.run(max_steps=3000)
+    states = router.result_states()
+    assert len(out) == 6
+    assert all(st.status == Status.FINISHED for st in states.values())
+    # the drained replica emptied, settled, and retired inside run()
+    assert router.group.state(1) is MemberState.RETIRED
+    for rep in router.replicas.values():
+        mgr = rep.engine.cache_mgr
+        assert mgr.free_pages == mgr.num_pages
+
+
+def test_drain_migrate_loses_zero_requests(target_model):
+    router = _mk_router(target_model, 2)
+    for r in _requests():
+        router.submit(r)
+    for _ in range(3):
+        router.step()
+    moved = router.drain(0, migrate=True)
+    assert moved                          # it was mid-flight, so it held
+    assert all(router.owner_of(uid) == 1 for uid in moved)
+    out = router.run(max_steps=3000)
+    assert len(out) == 6
+    assert all(st.status == Status.FINISHED
+               for st in router.result_states().values())
+    # the evacuated engine counted migrations, not failures
+    evac = router.replicas[0].engine
+    assert evac.stats["migrated"] == len(moved)
+    assert evac.stats["failed"] == 0
+
+
+def test_drain_refuses_migration_into_empty_fleet(target_model):
+    router = _mk_router(target_model, 1)
+    router.submit(_requests(1)[0])
+    with pytest.raises(AdmissionRejected) as ei:
+        router.drain(0, migrate=True)
+    assert ei.value.replica == 0
+    # refused before any state changed: still active, still serving
+    assert router.group.is_active(0)
+    out = router.run(max_steps=3000)
+    assert len(out) == 1
+
+
+def test_join_is_visible_to_next_placement(target_model):
+    router = _mk_router(target_model, 1)
+    reqs = _requests(4)
+    for r in reqs[:2]:
+        router.submit(r)
+    rid = router.join()
+    assert rid == 1 and router.group.active() == (0, 1)
+    # least-pressure: the empty joiner takes the very next request
+    router.submit(reqs[2])
+    assert router.owner_of(2) == 1
+    out = router.run(max_steps=3000)
+    assert len(out) == 3
+    assert router.stats["joins"] == 1
+
+
+def test_per_replica_stats_rows(target_model):
+    router = _mk_router(target_model, 2)
+    for r in _requests(4):
+        router.submit(r)
+    router.run(max_steps=3000)
+    rows = router.replica_stats()
+    assert [r["replica"] for r in rows] == [0, 1]
+    assert all(r["state"] == "ACTIVE" and r["health"] == "HEALTHY"
+               for r in rows)
+    assert sum(r["requests"] for r in rows) == 4
+    assert all(r["tokens_out"] > 0 for r in rows)
+
+
+# ---------------------------------------------------------------------------
+# small pieces: StepClock, FaultPlan.offset, data_shards
+# ---------------------------------------------------------------------------
+
+def test_step_clock():
+    with pytest.raises(ValueError):
+        StepClock(dt=0)
+    c = StepClock(dt=0.5)
+    assert c() == 0.0
+    c.tick()
+    c.tick()
+    assert c() == 1.0
+
+
+def test_fault_plan_offset_shifts_every_seed():
+    plan = FaultPlan.of(seed=7, alloc=0.1,
+                        logits=FaultSpec(1.0, seed=40, max_fires=1))
+    off = plan.offset(3)
+    assert off.seed == 10
+    assert off.spec("logits").seed == 43          # per-site override too
+    assert off.spec("alloc").seed is None         # follows the plan seed
+    assert off.spec("logits").max_fires == 1      # rates/caps untouched
+    assert plan.offset(0) is plan
+
+
+def test_router_offsets_fault_plans_per_replica():
+    plan = FaultPlan.of(seed=5, alloc=0.1)
+    specs = [{}, {}, {}]
+    seen = {}
+
+    def factory(rid, model, cfg, params, *, config, clock, devices):
+        seen[rid] = config.faults
+        return _FakeReplica(rid)
+
+    Router(config=RouterConfig(replicas=3,
+                               engine=EngineConfig(faults=plan),
+                               fault_seed_stride=10),
+           replica_factory=factory)
+    assert [seen[r].seed for r in range(3)] == [5, 15, 25]
+    # stride 0: every replica runs the identical plan
+    seen.clear()
+    Router(config=RouterConfig(replicas=3,
+                               engine=EngineConfig(faults=plan),
+                               fault_seed_stride=0),
+           replica_factory=factory)
+    assert [seen[r].seed for r in range(3)] == [5, 5, 5]
+
+
+def test_data_shards_splits_the_data_axis():
+    from types import SimpleNamespace
+    from repro.launch.mesh import data_shards
+    mesh = SimpleNamespace(axis_names=("data", "model"),
+                           devices=np.arange(8).reshape(4, 2))
+    shards = data_shards(mesh, 2)
+    assert [sorted(s) for s in shards] == [[0, 1, 2, 3], [4, 5, 6, 7]]
+    # uneven split: leading shards take the remainder
+    shards = data_shards(mesh, 3)
+    assert [len(s) for s in shards] == [4, 2, 2]
+    # more replicas than data extent: shards cycle (time-sharing)
+    shards = data_shards(mesh, 6)
+    assert [sorted(s) for s in shards[:2]] == \
+        [sorted(shards[4]), sorted(shards[5])]
+    with pytest.raises(ValueError):
+        data_shards(mesh, 0)
+
+
+def test_router_with_mesh_places_replicas(target_model):
+    from repro.launch.mesh import make_test_mesh
+    model, params = target_model
+    router = Router(model, TGT, params,
+                    config=RouterConfig(
+                        replicas=2,
+                        engine=EngineConfig(max_slots=2, max_seq=64,
+                                            page_size=8)),
+                    mesh=make_test_mesh())
+    assert all(rep.devices for rep in router.replicas.values())
+    for r in _requests(2):
+        router.submit(r)
+    assert len(router.run(max_steps=3000)) == 2
