@@ -186,6 +186,7 @@ def run(report, smoke: bool = False):
     _speculative_sweep(report, smoke=smoke)
     _fault_sweep(report, model, params, smoke=smoke)
     _replica_sweep(report, model, params, smoke=smoke)
+    _precision_sweep(report, model, params, smoke=smoke)
 
 
 # ---------------------------------------------------------------------------
@@ -1261,3 +1262,90 @@ def _replica_sweep(report, model, params, *, smoke: bool):
                 f"interleaved best-of and never gated — the gate is the "
                 f"deterministic step ratio, valid because tokens are "
                 f"bit-identical and per-step cost is fleet-invariant")
+
+
+# ---------------------------------------------------------------------------
+# multi-precision KV sweep: resident bytes vs greedy fidelity per format
+# ---------------------------------------------------------------------------
+
+def _precision_sweep(report, model, params, *, smoke: bool):
+    """The KV storage-format trade, recorded per format (fp32/bf16/int8):
+    arena-resident bytes at equal slots, the slot capacity an equal byte
+    budget buys (the serving win — narrower rows admit more concurrent
+    sequences), per-decode-step copied bytes from HLO cost analysis (the
+    arena write narrows with the format), and greedy token fidelity vs
+    the fp32 oracle through the tolerance harness.  Every gated column is
+    deterministic: byte accounting and compiled-program analysis, never
+    wall-clock."""
+    from repro.runtime.serving import tolerance
+
+    slots, max_seq = (3, 48) if smoke else (4, 64)
+    n_req, gen = (6, 10) if smoke else (10, 12)
+    rng = np.random.default_rng(0)
+    lens = [8, 12, 16]
+    prompts = [rng.integers(0, CFG.vocab, lens[i % 3]).astype(np.int32)
+               for i in range(n_req)]
+    config = EngineConfig(max_slots=slots, max_seq=max_seq, depth=0,
+                          page_size=8)
+    tokens = jnp.zeros((slots,), jnp.int32)
+    pos = jnp.full((slots,), 4, jnp.int32)
+
+    def decode(params, tokens, cache, pos):
+        logits, cache = model.decode_step(params, tokens, cache, pos)
+        return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+    oracle = tolerance.serve_streams(model, CFG, params, prompts,
+                                     max_new_tokens=gen, config=config,
+                                     kv_format="fp32")
+    rows, resident, copied, capacity, fidelity = [], {}, {}, {}, {}
+    for fmt in ("fp32", "bf16", "int8"):
+        cache = model.init_cache(slots, max_seq, kv_format=fmt)
+        resident[fmt] = hlo_analysis.resident_bytes(cache)["resident"]
+        cost, _ = _step_cost(decode, (2,), params, tokens, cache, pos)
+        copied[fmt] = _copied_bytes(cost)
+        streams = (oracle if fmt == "fp32" else
+                   tolerance.serve_streams(model, CFG, params, prompts,
+                                           max_new_tokens=gen,
+                                           config=config, kv_format=fmt))
+        fidelity[fmt] = tolerance.compare_streams(oracle, streams)
+        per_slot = resident[fmt] / slots
+        # slots an fp32-sized byte budget buys at this format's width
+        capacity[fmt] = int(resident["fp32"] // per_slot)
+        rows.append({"format": fmt,
+                     "resident_kb": round(resident[fmt] / 1e3, 2),
+                     "bytes_per_slot": int(per_slot),
+                     "slots_equal_bytes": capacity[fmt],
+                     "copied_kb": round(copied[fmt] / 1e3, 2),
+                     "match_rate": round(fidelity[fmt].match_rate, 4)})
+    report.table("serving_precision_sweep", rows)
+
+    report.claims("serving_precision", {
+        "int8 arena resident <= 0.5x fp32 at equal slots": (
+            resident["int8"] <= 0.5 * resident["fp32"],
+            f"int8={resident['int8'] / 1e3:.1f}kB vs "
+            f"fp32={resident['fp32'] / 1e3:.1f}kB "
+            f"({resident['int8'] / resident['fp32']:.3f}x)"),
+        "int8 serves >= 1.9x the slots at equal arena bytes": (
+            capacity["int8"] >= int(1.9 * slots),
+            f"{capacity['int8']} slots vs {slots} fp32 slots in "
+            f"{resident['fp32'] / 1e3:.1f}kB"),
+        "decode copied bytes shrink with the storage width": (
+            copied["int8"] < copied["bf16"] < copied["fp32"],
+            f"fp32={copied['fp32'] / 1e3:.2f}kB > "
+            f"bf16={copied['bf16'] / 1e3:.2f}kB > "
+            f"int8={copied['int8'] / 1e3:.2f}kB"),
+        "int8 greedy match rate >= 0.99 vs the fp32 oracle": (
+            fidelity["int8"].match_rate >= 0.99,
+            fidelity["int8"].describe()),
+        "fp32 tolerance self-test: bit-identical streams": (
+            fidelity["fp32"].identical, fidelity["fp32"].describe()),
+    })
+    report.note("serving_precision",
+                f"equal-slot arenas ({slots} slots x {max_seq} rows): "
+                f"bf16 {resident['bf16'] / resident['fp32']:.3f}x, int8 "
+                f"{resident['int8'] / resident['fp32']:.3f}x of the fp32 "
+                f"resident bytes (int8 = 1-byte rows + f32 per-row-per-"
+                f"head scale sidecar); greedy match vs fp32: "
+                f"bf16 {fidelity['bf16'].match_rate:.4f}, "
+                f"int8 {fidelity['int8'].match_rate:.4f} over "
+                f"{n_req} x {gen} greedy tokens")

@@ -54,9 +54,12 @@ _TIMING = ("_s", "_ms", "tokens_per_s", "ttft", "wall", "idle",
 
 # substrings marking a deterministic column whose cost direction is a
 # *decrease* — e.g. the replica sweep's critical-path speedup ratios,
-# where 3.9x -> 3.1x is the regression and an increase is the win.
+# where 3.9x -> 3.1x is the regression and an increase is the win.  The
+# precision sweep's capacity and fidelity columns read the same way: a
+# narrow KV format serving *fewer* slots per byte budget, or matching the
+# fp32 oracle on *fewer* greedy tokens, is the drift worth failing on.
 # Checked after _TIMING, so a timing-named ratio stays warn-only.
-_INVERTED = ("speedup",)
+_INVERTED = ("speedup", "slots_equal_bytes", "match_rate")
 
 
 def _is_timing(col: str) -> bool:

@@ -1,0 +1,162 @@
+"""KV-cache storage formats: the serving analogue of Ara's multi-precision
+FPU lanes (PAPERS.md, arxiv 1906.00478 — narrow operands double lane
+throughput per cycle).
+
+A :class:`KVFormat` names how K/V rows live in the slot-major arena:
+
+  * ``fp32``  — reference; ``store_dtype=None`` means "the model's activation
+    dtype", which keeps the default serving path *structurally* identical to
+    the pre-format code (same pytree, same dtypes, same executables — the
+    bit-identity acceptance pin).
+  * ``bf16``  — half the resident bytes, no scale sidecar; bf16 round-to-
+    nearest-even on write, widen-on-read in the kernels.
+  * ``int8``  — quarter-width storage with a per-row-per-KV-head absmax
+    scale sidecar (f32), dequant fused into the Pallas inner loop.
+  * ``fp8``   — e4m3 storage behind a capability gate (the jax build must
+    ship ``float8_e4m3fn`` *and* the backend must be able to convert);
+    same scale sidecar as int8 with the e4m3 finite max as qmax.
+
+Quantize-on-write contract: rows are produced in compute precision (f32),
+quantized exactly once at the arena boundary (the family hooks' emit /
+scatter path), and every read widens in-register — no wide arena is ever
+materialized.  The scale sidecar is a first-class cache leaf
+(``k_scale``/``v_scale``), so CoW prefix sharing, donation, NaN poisoning
+and extract/splice all compose through the existing pytree machinery.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+__all__ = [
+    "KVFormat", "get", "available", "names", "bytes_per_row",
+    "quantize", "dequantize", "SCALE_DTYPE",
+]
+
+# The sidecar dtype.  f32, never the storage dtype: scales multiply into
+# the widened tiles, and a narrow scale would re-introduce the very
+# rounding the absmax scheme exists to bound.
+SCALE_DTYPE = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class KVFormat:
+    """One arena storage format.
+
+    ``store_dtype is None`` means "store at the model's activation dtype"
+    — the fp32 reference format, kept dtype-agnostic so a bf16-activation
+    model's default arena stays exactly what it was before this layer
+    existed (pure-refactor pin).
+    """
+    name: str
+    store_dtype: Optional[str]   # jnp dtype name, or None = cfg.adtype
+    scaled: bool = False         # carries a per-row per-KV-head scale sidecar
+    qmax: float = 0.0            # absmax maps to ±qmax (scaled formats only)
+
+    def resolve_dtype(self, adtype):
+        """The concrete storage dtype for a model with activation dtype
+        ``adtype``."""
+        if self.store_dtype is None:
+            return jnp.dtype(adtype)
+        return jnp.dtype(self.store_dtype)
+
+    def store_bytes(self, adtype) -> int:
+        return self.resolve_dtype(adtype).itemsize
+
+
+_REGISTRY: dict[str, KVFormat] = {}
+
+
+def _register(fmt: KVFormat) -> KVFormat:
+    _REGISTRY[fmt.name] = fmt
+    return fmt
+
+
+FP32 = _register(KVFormat("fp32", None))
+BF16 = _register(KVFormat("bf16", "bfloat16"))
+INT8 = _register(KVFormat("int8", "int8", scaled=True, qmax=127.0))
+
+
+def _fp8_supported() -> bool:
+    """Capability gate: the dtype must exist *and* round-trip a conversion
+    on this backend (older jaxlibs expose the name but can't lower it)."""
+    if not hasattr(jnp, "float8_e4m3fn"):
+        return False
+    try:
+        jnp.zeros((1,), jnp.float32).astype(jnp.float8_e4m3fn)
+        return True
+    except Exception:
+        return False
+
+
+if _fp8_supported():  # pragma: no branch - fixed per container
+    # 448 = largest finite e4m3 value; absmax maps onto the full range.
+    _register(KVFormat("fp8", "float8_e4m3fn", scaled=True, qmax=448.0))
+
+
+def names() -> tuple[str, ...]:
+    """Every format name this build supports (fp8 only when gated in)."""
+    return tuple(_REGISTRY)
+
+
+def available() -> dict[str, KVFormat]:
+    return dict(_REGISTRY)
+
+
+def get(name: str) -> KVFormat:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown kv_format {name!r}; available: {sorted(_REGISTRY)}"
+            + ("" if "fp8" in _REGISTRY else
+               " (fp8 requires a float8_e4m3fn-capable jax build)")
+        ) from None
+
+
+def bytes_per_row(fmt: KVFormat, n_kv_heads: int, head_dim: int,
+                  adtype="float32") -> int:
+    """Resident arena bytes per token row (K + V + scale sidecar).
+
+    This is the quantity the resident-bytes CI gate divides: at hd=16,
+    int8 = 2*KVH*16*1 + 2*KVH*4 = 40*KVH vs fp32's 128*KVH (0.3125x).
+    """
+    store = 2 * n_kv_heads * head_dim * fmt.store_bytes(adtype)
+    scale = 2 * n_kv_heads * jnp.dtype(SCALE_DTYPE).itemsize if fmt.scaled \
+        else 0
+    return store + scale
+
+
+def quantize(fmt: KVFormat, x):
+    """Quantize rows ``x`` of shape ``(..., n_kv_heads, head_dim)`` to the
+    format's storage dtype.  Returns ``(q, scale)`` with ``scale`` of shape
+    ``(..., n_kv_heads)`` (f32); unscaled formats return ``scale=None``.
+
+    Per-row-per-KV-head absmax: ``scale = amax/qmax`` (1.0 for all-zero
+    rows so dequant of untouched arena rows is exact zero, matching the
+    zero-initialized reference arena).
+    """
+    if not fmt.scaled:
+        q = x if fmt.store_dtype is None else x.astype(fmt.store_dtype)
+        return q, None
+    x32 = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32), axis=-1)
+    scale = jnp.where(amax > 0, amax / fmt.qmax, 1.0).astype(SCALE_DTYPE)
+    y = x32 / scale[..., None]
+    if fmt.store_dtype == "int8":
+        q = jnp.clip(jnp.round(y), -fmt.qmax, fmt.qmax).astype(jnp.int8)
+    else:
+        q = jnp.clip(y, -fmt.qmax, fmt.qmax).astype(fmt.store_dtype)
+    return q, scale
+
+
+def dequantize(fmt: KVFormat, q, scale=None):
+    """Widen stored rows back to f32 compute precision.  The fused-kernel
+    path does this in-register; this reference form exists for the naive
+    paths and tests."""
+    wide = q.astype(jnp.float32)
+    if scale is None:
+        return wide
+    return wide * scale.astype(jnp.float32)[..., None]

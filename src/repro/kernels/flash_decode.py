@@ -12,6 +12,12 @@ softmax carry; GQA grouping is preserved so the kernel reads each KV head
 once for its ``group`` query heads.  Grid = (B·KVH, Sk/bk), the KV-strip
 axis innermost with the (m, l, acc) carries in VMEM scratch.
 
+Quantized-arena support (core/kv_format.py — the paper's multi-precision
+lanes): an optional per-row scale pair rides along as two extra VMEM
+operands and dequant fuses into the inner loop — each K/V strip widens to
+f32 *in-register* (``k.astype(f32) * ks[:, None]``) right before its MXU
+dot, so the narrow arena is the only thing that ever lives in memory.
+
 The KV-sequence axis is the one sharded over lanes at the system level
 (``kv_seq`` in core/lanes.py): each lane runs this kernel over its local KV
 strip and the cross-lane softmax combine is a tiny 3-step reduction (C4).
@@ -30,8 +36,14 @@ from repro.core import compat
 NEG_INF = -1e30
 
 
-def _fd_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-               scale: float, window: int | None, bk: int, nk: int):
+def _fd_kernel(len_ref, q_ref, k_ref, v_ref, *refs,
+               scale: float, window: int | None, bk: int, nk: int,
+               scaled: bool):
+    if scaled:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        ks_ref = vs_ref = None
+        o_ref, m_ref, l_ref, acc_ref = refs
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -56,6 +68,11 @@ def _fd_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     def _step():
         q = q_ref[0].astype(jnp.float32)             # (G, hd)
         k = k_ref[0].astype(jnp.float32)             # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)             # (bk, hd)
+        if scaled:
+            # fused dequant: widen in-register, scale per KV row
+            k = k * ks_ref[0][:, None]
+            v = v * vs_ref[0][:, None]
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
         s = jnp.where(mask, s, NEG_INF)
         m_prev = m_ref[...]
@@ -65,7 +82,7 @@ def _fd_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         p = jnp.where(mask, p, 0.0)
         l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
         acc_ref[...] = (acc_ref[...] * alpha[:, None]
-                        + jnp.dot(p, v_ref[0].astype(jnp.float32),
+                        + jnp.dot(p, v,
                                   preferred_element_type=jnp.float32))
         m_ref[...] = m_new
 
@@ -79,6 +96,7 @@ def _fd_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
                  lengths: jax.Array, *, window: int | None = None,
                  scale: float | None = None, bk: int = 512,
+                 scales: tuple[jax.Array, jax.Array] | None = None,
                  interpret: bool = False) -> jax.Array:
     """q: (BKV, G, D) one query token per row-group; k/v: (BKV, Sk, D);
     lengths: (BKV,) int32 live-KV count per row.  Returns (BKV, G, D).
@@ -87,6 +105,9 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
     n_heads // kv_heads, so each KV row is read once for its G queries.
     Requires Sk % bk == 0 (ops.py pads; padded keys sit beyond every
     ``lengths`` so the tail mask kills them).
+
+    ``scales``: optional (k_scale, v_scale) pair of (BKV, Sk) f32 dequant
+    scales for a quantized cache — folded like K/V minus the head dim.
     """
     bkv, g, d = q.shape
     bkv_k, sk, dk = k.shape
@@ -96,17 +117,25 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
         raise ValueError(f"Sk={sk} unaligned to block bk={bk}")
     scale = scale if scale is not None else d ** -0.5
     nk = sk // bk
+    scaled = scales is not None
+    in_specs = [
+        pl.BlockSpec((1,), lambda b, j: (b,),
+                     memory_space=pltpu.SMEM),
+        pl.BlockSpec((1, g, d), lambda b, j: (b, 0, 0)),
+        pl.BlockSpec((1, bk, d), lambda b, j: (b, j, 0)),
+        pl.BlockSpec((1, bk, d), lambda b, j: (b, j, 0)),
+    ]
+    operands = [lengths.astype(jnp.int32), q, k, v]
+    if scaled:
+        in_specs += [pl.BlockSpec((1, bk), lambda b, j: (b, j)),
+                     pl.BlockSpec((1, bk), lambda b, j: (b, j))]
+        operands += [scales[0].astype(jnp.float32),
+                     scales[1].astype(jnp.float32)]
     return pl.pallas_call(
         functools.partial(_fd_kernel, scale=scale, window=window,
-                          bk=bk, nk=nk),
+                          bk=bk, nk=nk, scaled=scaled),
         grid=(bkv, nk),
-        in_specs=[
-            pl.BlockSpec((1,), lambda b, j: (b,),
-                         memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, g, d), lambda b, j: (b, 0, 0)),
-            pl.BlockSpec((1, bk, d), lambda b, j: (b, j, 0)),
-            pl.BlockSpec((1, bk, d), lambda b, j: (b, j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, g, d), lambda b, j: (b, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((bkv, g, d), q.dtype),
         scratch_shapes=[
@@ -117,4 +146,4 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
         compiler_params=compat.pallas_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(lengths.astype(jnp.int32), q, k, v)
+    )(*operands)

@@ -16,6 +16,10 @@ carries in VMEM scratch.  Queries are folded (G·C, hd) so the MXU sees one
 SMEM scalar — chunk position in the prompt is runtime data, not a compile
 key).  Strips entirely beyond ``prefix + C`` are skipped via ``pl.when``
 (the ``vl = 0`` fast path); rows past the live length are tail-predicated.
+
+Quantized-arena support mirrors :mod:`flash_decode`: optional per-row
+scale operands, dequant fused into the strip loop — K/V widen to f32
+in-register right before their MXU dots, never in memory.
 """
 from __future__ import annotations
 
@@ -31,9 +35,14 @@ from repro.core import compat
 NEG_INF = -1e30
 
 
-def _fpc_kernel(pre_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-                *, scale: float, window: int | None, c: int, g: int,
-                bk: int, nk: int):
+def _fpc_kernel(pre_ref, q_ref, k_ref, v_ref, *refs,
+                scale: float, window: int | None, c: int, g: int,
+                bk: int, nk: int, scaled: bool):
+    if scaled:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        ks_ref = vs_ref = None
+        o_ref, m_ref, l_ref, acc_ref = refs
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -60,6 +69,11 @@ def _fpc_kernel(pre_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
     def _step():
         q = q_ref[0].astype(jnp.float32)      # (G*C, hd)
         k = k_ref[0].astype(jnp.float32)      # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)      # (bk, hd)
+        if scaled:
+            # fused dequant: widen in-register, scale per KV row
+            k = k * ks_ref[0][:, None]
+            v = v * vs_ref[0][:, None]
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
         s = jnp.where(mask, s, NEG_INF)
         m_prev = m_ref[...]
@@ -69,7 +83,7 @@ def _fpc_kernel(pre_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         p = jnp.where(mask, p, 0.0)
         l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
         acc_ref[...] = (acc_ref[...] * alpha[:, None]
-                        + jnp.dot(p, v_ref[0].astype(jnp.float32),
+                        + jnp.dot(p, v,
                                   preferred_element_type=jnp.float32))
         m_ref[...] = m_new
 
@@ -83,6 +97,7 @@ def _fpc_kernel(pre_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 def flash_prefill_chunk(q: jax.Array, k: jax.Array, v: jax.Array,
                         prefix: jax.Array, *, window: int | None = None,
                         scale: float | None = None, bk: int = 512,
+                        scales: tuple[jax.Array, jax.Array] | None = None,
                         interpret: bool = False) -> jax.Array:
     """q: (BKV, G, C, D) one chunk of queries per row-group; k/v:
     (BKV, Sk, D) the cache arena with the chunk's K/V already written at
@@ -92,6 +107,9 @@ def flash_prefill_chunk(q: jax.Array, k: jax.Array, v: jax.Array,
     GQA folding is the caller's job (ops.py): BKV = batch·kv_heads, G =
     n_heads // kv_heads.  Requires Sk % bk == 0 (ops.py pads; padded rows
     sit beyond every live length, killed by the causal/tail mask).
+
+    ``scales``: optional (k_scale, v_scale) pair of (BKV, Sk) f32 dequant
+    scales for a quantized cache — folded like K/V minus the head dim.
     """
     bkv, g, c, d = q.shape
     bkv_k, sk, dk = k.shape
@@ -102,17 +120,25 @@ def flash_prefill_chunk(q: jax.Array, k: jax.Array, v: jax.Array,
     scale = scale if scale is not None else d ** -0.5
     nk = sk // bk
     qf = q.reshape(bkv, g * c, d)
+    scaled = scales is not None
+    in_specs = [
+        pl.BlockSpec((1,), lambda b, j: (b,),
+                     memory_space=pltpu.SMEM),
+        pl.BlockSpec((1, g * c, d), lambda b, j: (b, 0, 0)),
+        pl.BlockSpec((1, bk, d), lambda b, j: (b, j, 0)),
+        pl.BlockSpec((1, bk, d), lambda b, j: (b, j, 0)),
+    ]
+    operands = [prefix.astype(jnp.int32), qf, k, v]
+    if scaled:
+        in_specs += [pl.BlockSpec((1, bk), lambda b, j: (b, j)),
+                     pl.BlockSpec((1, bk), lambda b, j: (b, j))]
+        operands += [scales[0].astype(jnp.float32),
+                     scales[1].astype(jnp.float32)]
     out = pl.pallas_call(
         functools.partial(_fpc_kernel, scale=scale, window=window,
-                          c=c, g=g, bk=bk, nk=nk),
+                          c=c, g=g, bk=bk, nk=nk, scaled=scaled),
         grid=(bkv, nk),
-        in_specs=[
-            pl.BlockSpec((1,), lambda b, j: (b,),
-                         memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, g * c, d), lambda b, j: (b, 0, 0)),
-            pl.BlockSpec((1, bk, d), lambda b, j: (b, j, 0)),
-            pl.BlockSpec((1, bk, d), lambda b, j: (b, j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, g * c, d), lambda b, j: (b, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((bkv, g * c, d), q.dtype),
         scratch_shapes=[
@@ -123,5 +149,5 @@ def flash_prefill_chunk(q: jax.Array, k: jax.Array, v: jax.Array,
         compiler_params=compat.pallas_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(prefix.astype(jnp.int32), qf, k, v)
+    )(*operands)
     return out.reshape(bkv, g, c, d)

@@ -253,13 +253,19 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 # flash-decode (serving decode step; per-slot length masking)
 # ---------------------------------------------------------------------------
 
-def _flash_decode_ref(q, k, v, *, lengths, window, scale, bk):
+def _flash_decode_ref(q, k, v, *, lengths, window, scale, bk,
+                      k_scale=None, v_scale=None):
     """Blockwise one-token decode attention in pure jnp.
 
     q: (B, KVH, G, hd); k/v: (B, S, KVH, hd); lengths: (B,).  Strip-mines
     the KV axis with an online-softmax carry; the per-slot live length is
     applied as tail predication (core.masking.tail_mask) per KV strip —
     the per-row ``vl`` of the serving engine's slot batch.
+
+    ``k_scale``/``v_scale``: optional (B, S, KVH) dequant scales for
+    quantized caches; K/V strips widen to f32 in-register and multiply by
+    their scale strip (the same fusion the Pallas kernel does).  ``None``
+    keeps the unscaled path expression-identical to the pre-format code.
     """
     b, s, kvh, hd = k.shape
     g = q.shape[2]
@@ -272,31 +278,45 @@ def _flash_decode_ref(q, k, v, *, lengths, window, scale, bk):
 
     ks = jnp.moveaxis(kp.reshape(b, nkb, bk, kvh, hd), 1, 0)
     vs = jnp.moveaxis(vp.reshape(b, nkb, bk, kvh, hd), 1, 0)
+    scaled = k_scale is not None
+    if scaled:
+        ksc = jnp.moveaxis(
+            _pad_to(k_scale, bk, 1).reshape(b, nkb, bk, kvh), 1, 0)
+        vsc = jnp.moveaxis(
+            _pad_to(v_scale, bk, 1).reshape(b, nkb, bk, kvh), 1, 0)
+    else:
+        zeros = jnp.zeros((nkb, b, 0, kvh), jnp.float32)
+        ksc = vsc = zeros
 
     def body(carry, inp):
         m, l, acc = carry
-        kb, vb, jb = inp
+        kb, vb, ksb, vsb, jb = inp
         # live tail of this strip: elements with kpos < lengths  (and inside
         # the sliding window when one is set)
         mask = masking.tail_mask(bk, (lengths - jb * bk)[:, None])  # (B, bk)
         if window is not None:
             kpos = jb * bk + jnp.arange(bk)[None, :]
             mask &= kpos >= (lengths - window)[:, None]
-        sc = jnp.einsum("bkgh,bskh->bkgs", q32, kb.astype(jnp.float32))
+        kw = kb.astype(jnp.float32)
+        vw = vb.astype(jnp.float32)
+        if scaled:
+            kw = kw * ksb[..., None]
+            vw = vw * vsb[..., None]
+        sc = jnp.einsum("bkgh,bskh->bkgs", q32, kw)
         sc = jnp.where(mask[:, None, None, :], sc, _fd.NEG_INF)
         m_new = jnp.maximum(m, sc.max(-1))
         alpha = jnp.exp(m - m_new)
         p = jnp.where(mask[:, None, None, :],
                       jnp.exp(sc - m_new[..., None]), 0.0)
         l = l * alpha + p.sum(-1)
-        acc = acc * alpha[..., None] + jnp.einsum(
-            "bkgs,bskh->bkgh", p, vb.astype(jnp.float32))
+        acc = acc * alpha[..., None] + jnp.einsum("bkgs,bskh->bkgh", p, vw)
         return (m_new, l, acc), None
 
     init = (jnp.full((b, kvh, g), _fd.NEG_INF, jnp.float32),
             jnp.zeros((b, kvh, g), jnp.float32),
             jnp.zeros((b, kvh, g, hd), jnp.float32))
-    (m, l, acc), _ = lax.scan(body, init, (ks, vs, jnp.arange(nkb)))
+    (m, l, acc), _ = lax.scan(body, init, (ks, vs, ksc, vsc,
+                                           jnp.arange(nkb)))
     safe = jnp.where(l > 0, l, 1.0)
     return (acc / safe[..., None]).astype(q.dtype)
 
@@ -305,6 +325,8 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
                  lengths: Optional[jax.Array] = None,
                  window: Optional[int] = None,
                  scale: Optional[float] = None, bk: int = 512,
+                 k_scale: Optional[jax.Array] = None,
+                 v_scale: Optional[jax.Array] = None,
                  mode: Optional[Mode] = None) -> jax.Array:
     """One-token decode attention with per-sequence length masking.
 
@@ -313,6 +335,10 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
     sequence (``None`` = all S live, e.g. enc-dec cross-attention).
     Returns (B, H, hd).  GQA is handled here: H is grouped onto KVH so each
     KV head is read once for its H/KVH query heads.
+
+    ``k_scale``/``v_scale``: optional (B, S, KVH) per-row dequant scales
+    for a quantized cache (core/kv_format.py); dequant fuses into the
+    inner loop — the arena is never widened in memory.
     """
     b, h, hd = q.shape
     _, s, kvh, _ = k.shape
@@ -326,7 +352,8 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
     mode = mode or _resolved()
     if mode == "ref":
         out = _flash_decode_ref(qg, k, v, lengths=lengths, window=window,
-                                scale=scale, bk=bk)
+                                scale=scale, bk=bk,
+                                k_scale=k_scale, v_scale=v_scale)
         return out.reshape(b, h, hd)
     bk_ = min(bk, s)
     kp = _pad_to(k, bk_, 1)
@@ -337,8 +364,17 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
     vf = jnp.moveaxis(vp, 2, 1).reshape(b * kvh, vp.shape[1], hd)
     qf = qg.reshape(b * kvh, g, hd)
     lf = jnp.repeat(lengths, kvh)
+    scales = None
+    if k_scale is not None:
+        # scales fold exactly like K/V minus the head_dim axis
+        ksf = jnp.moveaxis(_pad_to(k_scale, bk_, 1), 2, 1).reshape(
+            b * kvh, kp.shape[1])
+        vsf = jnp.moveaxis(_pad_to(v_scale, bk_, 1), 2, 1).reshape(
+            b * kvh, vp.shape[1])
+        scales = (ksf, vsf)
     out = _fd.flash_decode(qf, kf, vf, lf, window=window, scale=scale,
-                           bk=bk_, interpret=(mode == "interpret"))
+                           bk=bk_, scales=scales,
+                           interpret=(mode == "interpret"))
     return out.reshape(b, h, hd)
 
 
@@ -346,7 +382,8 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
 # flash-prefill-chunk (chunked prompt ingestion; dynamic causal boundary)
 # ---------------------------------------------------------------------------
 
-def _flash_prefill_chunk_ref(q, k, v, *, prefix, window, scale, bk):
+def _flash_prefill_chunk_ref(q, k, v, *, prefix, window, scale, bk,
+                             k_scale=None, v_scale=None):
     """Blockwise chunk-append attention in pure jnp.
 
     q: (B, KVH, G, C, hd); k/v: (B, S, KVH, hd); prefix: (B,) rows live
@@ -354,6 +391,9 @@ def _flash_prefill_chunk_ref(q, k, v, *, prefix, window, scale, bk):
     Strip-mines the KV axis with an online-softmax carry; each chunk query
     at position prefix + i attends kpos <= prefix + i — causal within the
     chunk, full over the already-written prefix.
+
+    ``k_scale``/``v_scale``: optional (B, S, KVH) dequant scales — same
+    in-register widening contract as :func:`_flash_decode_ref`.
     """
     b, s, kvh, hd = k.shape
     g, c = q.shape[2], q.shape[3]
@@ -367,29 +407,42 @@ def _flash_prefill_chunk_ref(q, k, v, *, prefix, window, scale, bk):
 
     ks = jnp.moveaxis(kp.reshape(b, nkb, bk, kvh, hd), 1, 0)
     vs = jnp.moveaxis(vp.reshape(b, nkb, bk, kvh, hd), 1, 0)
+    scaled = k_scale is not None
+    if scaled:
+        ksc = jnp.moveaxis(
+            _pad_to(k_scale, bk, 1).reshape(b, nkb, bk, kvh), 1, 0)
+        vsc = jnp.moveaxis(
+            _pad_to(v_scale, bk, 1).reshape(b, nkb, bk, kvh), 1, 0)
+    else:
+        ksc = vsc = jnp.zeros((nkb, b, 0, kvh), jnp.float32)
 
     def body(carry, inp):
         m, l, acc = carry
-        kb, vb, jb = inp
+        kb, vb, ksb, vsb, jb = inp
         kpos = jb * bk + jnp.arange(bk)[None, :]           # (1, bk)
         mask = kpos[:, None, :] <= qpos[..., None]         # (B, C, bk)
         if window is not None:
             mask &= kpos[:, None, :] > (qpos[..., None] - window)
-        sc = jnp.einsum("bkgch,bskh->bkgcs", q32, kb.astype(jnp.float32))
+        kw = kb.astype(jnp.float32)
+        vw = vb.astype(jnp.float32)
+        if scaled:
+            kw = kw * ksb[..., None]
+            vw = vw * vsb[..., None]
+        sc = jnp.einsum("bkgch,bskh->bkgcs", q32, kw)
         sc = jnp.where(mask[:, None, None], sc, _fpc.NEG_INF)
         m_new = jnp.maximum(m, sc.max(-1))
         alpha = jnp.exp(m - m_new)
         p = jnp.where(mask[:, None, None],
                       jnp.exp(sc - m_new[..., None]), 0.0)
         l = l * alpha + p.sum(-1)
-        acc = acc * alpha[..., None] + jnp.einsum(
-            "bkgcs,bskh->bkgch", p, vb.astype(jnp.float32))
+        acc = acc * alpha[..., None] + jnp.einsum("bkgcs,bskh->bkgch", p, vw)
         return (m_new, l, acc), None
 
     init = (jnp.full((b, kvh, g, c), _fpc.NEG_INF, jnp.float32),
             jnp.zeros((b, kvh, g, c), jnp.float32),
             jnp.zeros((b, kvh, g, c, hd), jnp.float32))
-    (m, l, acc), _ = lax.scan(body, init, (ks, vs, jnp.arange(nkb)))
+    (m, l, acc), _ = lax.scan(body, init, (ks, vs, ksc, vsc,
+                                           jnp.arange(nkb)))
     safe = jnp.where(l > 0, l, 1.0)
     return (acc / safe[..., None]).astype(q.dtype)
 
@@ -397,6 +450,8 @@ def _flash_prefill_chunk_ref(q, k, v, *, prefix, window, scale, bk):
 def flash_prefill_chunk(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         prefix: jax.Array, window: Optional[int] = None,
                         scale: Optional[float] = None, bk: int = 512,
+                        k_scale: Optional[jax.Array] = None,
+                        v_scale: Optional[jax.Array] = None,
                         mode: Optional[Mode] = None) -> jax.Array:
     """Chunk-append prefill attention with a dynamic causal boundary.
 
@@ -407,6 +462,10 @@ def flash_prefill_chunk(q: jax.Array, k: jax.Array, v: jax.Array, *,
     kernel), so every chunk of every prompt position reuses one compiled
     shape — the whole point of stripmined prefill.  GQA is handled here:
     H is grouped onto KVH so each KV head is read once per chunk.
+
+    ``k_scale``/``v_scale``: optional (B, S, KVH) per-row dequant scales
+    for a quantized cache (core/kv_format.py); dequant fuses into the
+    inner loop — the arena is never widened in memory.
     """
     b, c, h, hd = q.shape
     _, s, kvh, _ = k.shape
@@ -419,7 +478,8 @@ def flash_prefill_chunk(q: jax.Array, k: jax.Array, v: jax.Array, *,
     mode = mode or _resolved()
     if mode == "ref":
         out = _flash_prefill_chunk_ref(qg, k, v, prefix=prefix,
-                                       window=window, scale=scale, bk=bk)
+                                       window=window, scale=scale, bk=bk,
+                                       k_scale=k_scale, v_scale=v_scale)
         return out.reshape(b, h, c, hd).transpose(0, 2, 1, 3)
     bk_ = min(bk, s)
     kp = _pad_to(k, bk_, 1)
@@ -430,8 +490,15 @@ def flash_prefill_chunk(q: jax.Array, k: jax.Array, v: jax.Array, *,
     vf = jnp.moveaxis(vp, 2, 1).reshape(b * kvh, vp.shape[1], hd)
     qf = qg.reshape(b * kvh, g, c, hd)
     pf = jnp.repeat(prefix, kvh)
+    scales = None
+    if k_scale is not None:
+        ksf = jnp.moveaxis(_pad_to(k_scale, bk_, 1), 2, 1).reshape(
+            b * kvh, kp.shape[1])
+        vsf = jnp.moveaxis(_pad_to(v_scale, bk_, 1), 2, 1).reshape(
+            b * kvh, vp.shape[1])
+        scales = (ksf, vsf)
     out = _fpc.flash_prefill_chunk(qf, kf, vf, pf, window=window,
-                                   scale=scale, bk=bk_,
+                                   scale=scale, bk=bk_, scales=scales,
                                    interpret=(mode == "interpret"))
     out = out.reshape(b, kvh, g, c, hd).reshape(b, h, c, hd)
     return out.transpose(0, 2, 1, 3)

@@ -142,7 +142,11 @@ def report_stats(eng: ServingEngine) -> None:
     stats = dict(eng.stats)
     ttft = sorted(stats.pop("ttft_s", {}).values())
     print("engine:", stats)
-    print(f"arena: {eng.arena_bytes / 1e6:.2f} MB resident, "
+    slots = eng.scheduler.max_slots
+    print(f"arena: {eng.arena_bytes / 1e6:.2f} MB resident "
+          f"(kv_format={eng.kv_format}, "
+          f"{eng.arena_bytes // max(slots, 1)} bytes/slot, "
+          f"{eng.kv_row_bytes} bytes/row), "
           f"donation {'on' if eng.donate else 'off'} "
           f"(in-place slot writes are unconditional)")
     total = max(stats["requests"], 1)
@@ -252,6 +256,12 @@ def main(argv=None):
                    help="copy-on-write prefix cache: fork repeated "
                         "page-aligned prompt prefixes onto shared pages "
                         "(requires --prefill-mode chunked)")
+    p.add_argument("--kv-format", choices=["fp32", "bf16", "int8"],
+                   default="fp32",
+                   help="KV-arena storage format: fp32 = bit-exact "
+                        "reference, bf16 = half the resident bytes, int8 = "
+                        "quarter-width rows + per-row scale sidecar "
+                        "(quantize-on-write; tolerance-measured vs fp32)")
     p.add_argument("--donate", choices=["auto", "on", "off"], default="auto",
                    help="KV-arena buffer donation: auto = on once the "
                         "arena crosses the in-place pay-off threshold "
@@ -362,7 +372,7 @@ def main(argv=None):
         num_pages=args.pages, prefill_chunks=chunks,
         prefill_budget=args.prefill_budget,
         prefix_sharing=args.prefix_sharing, donate=donate,
-        base_seed=args.seed,
+        base_seed=args.seed, kv_format=args.kv_format,
         speculative=(parse_speculative(args.speculative)
                      if args.speculative else None),
         faults=(parse_fault_plan(args.fault_plan, seed=args.seed)

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from jax.ad_checkpoint import checkpoint_name
 
-from repro.core import compat, lanes
+from repro.core import compat, kv_format as kvf, lanes
 from repro.kernels import ops
 
 RULES = lanes.LogicalRules()
@@ -322,12 +322,21 @@ def attention_chunk(p: dict, cfg, x: jax.Array, slot_kv: dict,
     O(arena).  ``positions`` are absolute (start + arange(C)) so RoPE
     matches monolithic prefill; ``start`` is traced, so every chunk
     position reuses one compiled shape.  Returns (out, (k_rows, v_rows)),
-    rows shaped (B, C, KVH, hd) in the cache dtype.
+    rows shaped (B, C, KVH, hd) in the cache dtype; when ``slot_kv`` is a
+    scaled-format view (carries ``k_scale``/``v_scale`` leaves) the rows
+    are quantized on write and the return is (out, (k_rows, v_rows,
+    k_scales, v_scales)) with scales shaped (B, C, KVH) f32.
     """
     b, c, d = x.shape
     q, k, v = _project_qkv(p, cfg, x, positions, rules)
-    k_rows = k.astype(slot_kv["k"].dtype)
-    v_rows = v.astype(slot_kv["v"].dtype)
+    scaled = "k_scale" in slot_kv
+    if scaled:
+        fmt = kvf.get(kv_cache_format(slot_kv))
+        k_rows, k_scales = kvf.quantize(fmt, k)
+        v_rows, v_scales = kvf.quantize(fmt, v)
+    else:
+        k_rows = k.astype(slot_kv["k"].dtype)
+        v_rows = v.astype(slot_kv["v"].dtype)
     # Scatter, not dynamic_update_slice: a speculative verify chunk may
     # overrun the slot's last rows (start + C > Smax), and DUS would CLAMP
     # the start so the window fits — shifting every patched row down and
@@ -338,6 +347,13 @@ def attention_chunk(p: dict, cfg, x: jax.Array, slot_kv: dict,
     ck = slot_kv["k"].at[:, rows_idx].set(k_rows)
     cv = slot_kv["v"].at[:, rows_idx].set(v_rows)
     prefix = jnp.full((b,), start, jnp.int32)
+    if scaled:
+        cks = slot_kv["k_scale"].at[:, rows_idx].set(k_scales)
+        cvs = slot_kv["v_scale"].at[:, rows_idx].set(v_scales)
+        o = ops.flash_prefill_chunk(q, ck, cv, prefix=prefix, window=window,
+                                    k_scale=cks, v_scale=cvs)
+        out = _dot(o.reshape(b, c, -1), p["wo"], cfg.adtype)
+        return out, (k_rows, v_rows, k_scales, v_scales)
     o = ops.flash_prefill_chunk(q, ck, cv, prefix=prefix, window=window)
     out = _dot(o.reshape(b, c, -1), p["wo"], cfg.adtype)
     return out, (k_rows, v_rows)
@@ -357,30 +373,74 @@ def attention_decode_rows(p: dict, cfg, x_t: jax.Array, layer_kv: dict,
     collects the rows of every layer and writes them into the resident
     arena with one in-place scatter.  x_t: (B, d); layer_kv: {"k","v"} of
     (B, Smax, KVH, hd).  Returns (out, (k_row, v_row)) with rows shaped
-    (B, KVH, hd).
+    (B, KVH, hd); scaled-format views quantize on write and return
+    (out, (k_row, v_row, k_scale, v_scale)) with scales shaped (B, KVH).
     """
     b, d = x_t.shape
     nh, hd = cfg.n_heads, cfg.hd
     q, k_t, v_t = _decode_qkv(p, cfg, x_t, pos, True)
-    k_row = k_t[:, 0].astype(layer_kv["k"].dtype)
-    v_row = v_t[:, 0].astype(layer_kv["v"].dtype)
+    scaled = "k_scale" in layer_kv
     bidx = jnp.arange(b)
+    if scaled:
+        fmt = kvf.get(kv_cache_format(layer_kv))
+        k_row, k_sc = kvf.quantize(fmt, k_t[:, 0])
+        v_row, v_sc = kvf.quantize(fmt, v_t[:, 0])
+    else:
+        k_row = k_t[:, 0].astype(layer_kv["k"].dtype)
+        v_row = v_t[:, 0].astype(layer_kv["v"].dtype)
     ck = layer_kv["k"].at[bidx, pos].set(k_row)
     cv = layer_kv["v"].at[bidx, pos].set(v_row)
     k_all = lanes.constrain(ck, rules, "batch", "kv_seq", None, None)
     v_all = lanes.constrain(cv, rules, "batch", "kv_seq", None, None)
+    if scaled:
+        cks = layer_kv["k_scale"].at[bidx, pos].set(k_sc)
+        cvs = layer_kv["v_scale"].at[bidx, pos].set(v_sc)
+        o = ops.flash_decode(q[:, 0], k_all, v_all, lengths=pos + 1,
+                             window=window, k_scale=cks, v_scale=cvs)
+        out = _dot(o.reshape(b, nh * hd), p["wo"], cfg.adtype)
+        return out, (k_row, v_row, k_sc, v_sc)
     o = ops.flash_decode(q[:, 0], k_all, v_all, lengths=pos + 1,
                          window=window)
     out = _dot(o.reshape(b, nh * hd), p["wo"], cfg.adtype)
     return out, (k_row, v_row)
 
 
-def init_kv_cache(cfg, batch: int, max_seq: int, dtype=None) -> dict:
-    dtype = dtype or cfg.adtype
-    return {
+def init_kv_cache(cfg, batch: int, max_seq: int, dtype=None,
+                  kv_format: str = "fp32") -> dict:
+    """Per-layer KV cache in a storage format (core/kv_format.py).
+
+    ``fp32`` (the default) stores at ``dtype or cfg.adtype`` — structurally
+    and bit-wise identical to the pre-format cache.  Scaled formats (int8,
+    fp8) add ``k_scale``/``v_scale`` sidecar leaves of (batch, max_seq,
+    KVH) f32, initialised to 1.0 so dequant of never-written rows is exact
+    zero (matching the zero-initialised reference arena).
+    """
+    fmt = kvf.get(kv_format)
+    if fmt.store_dtype is None:
+        dtype = dtype or cfg.adtype
+    else:
+        dtype = fmt.store_dtype
+    cache = {
         "k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.hd), dtype),
         "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.hd), dtype),
     }
+    if fmt.scaled:
+        ones = jnp.ones((batch, max_seq, cfg.n_kv_heads), kvf.SCALE_DTYPE)
+        cache["k_scale"] = ones
+        cache["v_scale"] = ones
+    return cache
+
+
+def kv_cache_format(cache: dict) -> str:
+    """Recover the storage format of a (per-layer or stacked) KV cache
+    pytree from its structure/dtype — the leaves, not a side channel, are
+    the source of truth, so views/forks/donated generations can't drift."""
+    k = cache["k"]
+    if "k_scale" in cache:
+        return "int8" if k.dtype == jnp.int8 else "fp8"
+    if k.dtype == jnp.bfloat16:
+        return "bf16"
+    return "fp32"
 
 
 # ---------------------------------------------------------------------------

@@ -242,7 +242,8 @@ def moe_layer_chunk(p, cfg, x, kv_l, positions, start, nvalid, extra=None,
     x = x + a
     h = L.rmsnorm(p["ln2"], x, cfg.rms_eps)
     y, _ = moe_mlp_apply(p["moe"], cfg, h, rules=rules)
-    return x + y, {"k": rows[0], "v": rows[1]}
+    from repro.models import transformer as T
+    return x + y, T.kv_emit_dict(rows)
 
 
 def moe_layer_decode_rows(p, cfg, x_t, kv_l, pos, extra=None, *,
@@ -265,4 +266,5 @@ def moe_layer_decode_rows(p, cfg, x_t, kv_l, pos, extra=None, *,
     x_t = x_t + a
     h = L.rmsnorm(p["ln2"], x_t, cfg.rms_eps)
     y, _ = moe_mlp_apply(p["moe"], cfg, h[:, None, :], rules=rules)
-    return x_t + y[:, 0], {"k": rows[0], "v": rows[1]}
+    from repro.models import transformer as T
+    return x_t + y[:, 0], T.kv_emit_dict(rows)

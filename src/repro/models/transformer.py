@@ -12,12 +12,14 @@ are shared by every LM-family architecture.
 from __future__ import annotations
 
 import functools
+import inspect
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import kv_format as kv_format_mod
 from repro.core import lanes
 from repro.models import layers as L
 
@@ -99,26 +101,42 @@ def dense_layer_decode_rows(p, cfg, x_t, layer_kv, pos, *, window=None,
     return x_t, rows
 
 
+def kv_emit_dict(rows) -> dict:
+    """K/V row emission dict from a layer hook's ``rows`` tuple.
+
+    2-tuple (k, v) for plain caches; 4-tuple (k, v, k_scale, v_scale) for
+    scaled storage formats (core/kv_format.py) — the scales ride the emit
+    pytree so the driver's single arena scatter writes them with the rows.
+    """
+    d = {"k": rows[0], "v": rows[1]}
+    if len(rows) == 4:
+        d["k_scale"] = rows[2]
+        d["v_scale"] = rows[3]
+    return d
+
+
 def _dense_layer_chunk_emit(p, cfg, x, kv_l, positions, start, *,
                             window=None, rules=RULES):
-    """Hook adapter: dense chunk layer -> {"k","v"} chunk-row emission."""
+    """Hook adapter: dense chunk layer -> {"k","v"[,scales]} emission."""
     x, rows = dense_layer_chunk(p, cfg, x, kv_l, positions, start,
                                 window=window, rules=rules)
-    return x, {"k": rows[0], "v": rows[1]}
+    return x, kv_emit_dict(rows)
 
 
 def _dense_layer_decode_emit(p, cfg, x_t, kv_l, pos, *, window=None,
                              rules=RULES):
-    """Hook adapter: dense decode layer -> {"k","v"} row emission."""
+    """Hook adapter: dense decode layer -> {"k","v"[,scales]} emission."""
     x_t, rows = dense_layer_decode_rows(p, cfg, x_t, kv_l, pos,
                                         window=window, rules=rules)
-    return x_t, {"k": rows[0], "v": rows[1]}
+    return x_t, kv_emit_dict(rows)
 
 
 def dense_chunk_scatter(cache, emits, slot, start):
     """Write one chunk's K/V rows into slot ``slot`` of the arena.
 
-    ``emits``: the layer scan's ys — {"k","v"} of (L, 1, C, KVH, hd).  The
+    ``emits``: the layer scan's ys — {"k","v"} of (L, 1, C, KVH, hd), plus
+    {"k_scale","v_scale"} of (L, 1, C, KVH) for scaled formats (the same
+    three leading index dims, so one scatter expression covers both).  The
     write is a single scatter per leaf at rows [start, start + C) of the
     slot, which lowers in place under buffer donation.  Scatter (not
     ``dynamic_update_slice``) deliberately: an out-of-range ``slot`` (a
@@ -128,27 +146,24 @@ def dense_chunk_scatter(cache, emits, slot, start):
     """
     c = emits["k"].shape[2]
     idx = start + jnp.arange(c)
-    return {"k": cache["k"].at[:, slot, idx].set(
-                emits["k"][:, 0].astype(cache["k"].dtype)),
-            "v": cache["v"].at[:, slot, idx].set(
-                emits["v"][:, 0].astype(cache["v"].dtype))}
+    return {key: cache[key].at[:, slot, idx].set(
+                emits[key][:, 0].astype(cache[key].dtype))
+            for key in emits}
 
 
 def dense_rows_scatter(cache, emits, pos):
     """Scatter one decode step's K/V rows — ``emits`` {"k","v"} of
-    (L, B, KVH, hd) — into each slot's ``pos`` column: the arena's only
-    write this step (in place under donation).  A parked slot
-    (pos = PARKED_POS, mid-chunked-prefill) scatters out of bounds and is
-    dropped."""
-    k_rows, v_rows = emits["k"], emits["v"]
-    nl, b = k_rows.shape[:2]
+    (L, B, KVH, hd), plus {"k_scale","v_scale"} of (L, B, KVH) for scaled
+    formats — into each slot's ``pos`` column: the arena's only write this
+    step (in place under donation).  A parked slot (pos = PARKED_POS,
+    mid-chunked-prefill) scatters out of bounds and is dropped."""
+    nl, b = emits["k"].shape[:2]
     li = jnp.broadcast_to(jnp.arange(nl)[:, None], (nl, b))
     bi = jnp.broadcast_to(jnp.arange(b)[None, :], (nl, b))
     pi = jnp.broadcast_to(pos[None, :], (nl, b))
-    return {"k": cache["k"].at[li, bi, pi].set(
-                k_rows.astype(cache["k"].dtype)),
-            "v": cache["v"].at[li, bi, pi].set(
-                v_rows.astype(cache["v"].dtype))}
+    return {key: cache[key].at[li, bi, pi].set(
+                emits[key].astype(cache[key].dtype))
+            for key in emits}
 
 
 def attention_prefill(p_attn, cfg, h, cache_kv, positions, *, window=None,
@@ -171,6 +186,21 @@ def attention_prefill(p_attn, cfg, h, cache_kv, positions, *, window=None,
                        impl="naive")   # no bwd in prefill: kv-outer wins
     o = of.transpose(0, 2, 1, 3)
     out = L._dot(o.reshape(b, s, -1), p_attn["wo"], cfg.adtype)
+    if "k_scale" in cache_kv:
+        # quantize-on-write: monolithic prefill attends the fresh full-
+        # precision K/V above; only the arena copy is narrowed
+        fmt = kv_format_mod.get(L.kv_cache_format(cache_kv))
+        kq, ks = kv_format_mod.quantize(fmt, k)
+        vq, vs = kv_format_mod.quantize(fmt, v)
+        new_kv = {
+            "k": lax.dynamic_update_slice(cache_kv["k"], kq, (0, 0, 0, 0)),
+            "v": lax.dynamic_update_slice(cache_kv["v"], vq, (0, 0, 0, 0)),
+            "k_scale": lax.dynamic_update_slice(
+                cache_kv["k_scale"], ks, (0, 0, 0)),
+            "v_scale": lax.dynamic_update_slice(
+                cache_kv["v_scale"], vs, (0, 0, 0)),
+        }
+        return out, new_kv
     new_kv = {
         "k": lax.dynamic_update_slice(
             cache_kv["k"], k.astype(cache_kv["k"].dtype), (0, 0, 0, 0)),
@@ -252,7 +282,19 @@ class LM:
             lambda p, c, x, extra, **kw: dense_layer_apply(
                 p, c, x, positions=kw["positions"], rules=self.rules))
         self._init_layer_cache = init_layer_cache or (
-            lambda cfg, batch, max_seq: L.init_kv_cache(cfg, batch, max_seq))
+            lambda cfg, batch, max_seq, kv_format="fp32":
+                L.init_kv_cache(cfg, batch, max_seq, kv_format=kv_format))
+        # storage-format capability: a family opts into quantized arenas by
+        # accepting ``kv_format`` in its layer-cache constructor.  Families
+        # with recurrent state (ssm/hybrid) deliberately do not — state
+        # error compounds through the recurrence — so non-fp32 requests
+        # fail loudly at init_cache instead of silently storing junk.
+        self._kv_format_capable = init_layer_cache is None or (
+            "kv_format" in inspect.signature(init_layer_cache).parameters)
+        # the arena storage format this model object currently serves;
+        # set by init_cache and keyed into every compiled-step cache
+        # (engine._per_model) so mixed fleets never share executables
+        self.kv_format = "fp32"
         # per-layer static side inputs (e.g. hymba window schedule): (L,) arrays
         self._layer_xs_fn = layer_xs_fn
         # serving hooks: dense defaults for pure-KV caches (``extra`` is the
@@ -342,12 +384,35 @@ class LM:
         return ce + aux, {"ce": ce, "aux": aux}
 
     # -- serving -------------------------------------------------------------
-    def init_cache(self, batch: int, max_seq: int):
-        """Stacked per-layer caches (leading axis = layer)."""
+    def init_cache(self, batch: int, max_seq: int,
+                   kv_format: str = "fp32"):
+        """Stacked per-layer caches (leading axis = layer).
+
+        ``kv_format`` selects the arena storage format (core/kv_format.py);
+        families whose layer-cache constructor doesn't accept it (recurrent
+        state) reject non-fp32 formats.  The chosen format becomes the
+        model's current serving format (``self.kv_format``) — one model
+        object serves one format at a time; the engine keys its compiled
+        steps on it.
+        """
         cfg = self.cfg
-        one = self._init_layer_cache(cfg, batch, max_seq)
+        kv_format_mod.get(kv_format)          # validate against this build
+        if kv_format != "fp32" and not self._kv_format_capable:
+            raise ValueError(
+                f"family cache {self._init_layer_cache!r} does not support "
+                f"kv_format={kv_format!r}: recurrent/custom state stays "
+                f"full-precision (see serving README format matrix)")
+        self.kv_format = kv_format
+        one = self._layer_cache_for(batch, max_seq)
         return jax.tree.map(
             lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)), one)
+
+    def _layer_cache_for(self, batch: int, max_seq: int):
+        """One per-layer cache in the model's current storage format."""
+        if self._kv_format_capable:
+            return self._init_layer_cache(self.cfg, batch, max_seq,
+                                          kv_format=self.kv_format)
+        return self._init_layer_cache(self.cfg, batch, max_seq)
 
     def prefill(self, params, tokens, cache, *, remat: str = "full"):
         """Run the prompt, fill the cache, return last-position logits.
@@ -386,13 +451,14 @@ class LM:
     def _cache_factors(self):
         """Per-leaf batch factor of the family cache pytree (leaf dim 1 is
         batch × factor: 1 for KV/conv leaves, n_heads for fused SSD state).
-        Read off an abstract batch=1 layer cache; memoised per model."""
-        factors = self.__dict__.get("_cache_factors_memo")
+        Read off an abstract batch=1 layer cache; memoised per model and
+        storage format (scaled formats add sidecar leaves)."""
+        memo = self.__dict__.setdefault("_cache_factors_memo", {})
+        factors = memo.get(self.kv_format)
         if factors is None:
-            one = jax.eval_shape(
-                lambda: self._init_layer_cache(self.cfg, 1, 8))
+            one = jax.eval_shape(lambda: self._layer_cache_for(1, 8))
             factors = jax.tree.map(lambda leaf: leaf.shape[0], one)
-            self._cache_factors_memo = factors
+            memo[self.kv_format] = factors
         return factors
 
     def _seq_axes(self):
@@ -401,21 +467,21 @@ class LM:
         conv tail).  Detected structurally — the axis whose extent tracks
         ``max_seq`` across two abstract instantiations — so family modules
         never have to declare it.  Indices are for the *per-layer* leaf
-        (the stacked arena leaf's axis is one higher); memoised per model.
+        (the stacked arena leaf's axis is one higher); memoised per model
+        and storage format.
         """
-        axes = self.__dict__.get("_seq_axes_memo")
+        memo = self.__dict__.setdefault("_seq_axes_memo", {})
+        axes = memo.get(self.kv_format)
         if axes is None:
-            small = jax.eval_shape(
-                lambda: self._init_layer_cache(self.cfg, 1, 8))
-            big = jax.eval_shape(
-                lambda: self._init_layer_cache(self.cfg, 1, 16))
+            small = jax.eval_shape(lambda: self._layer_cache_for(1, 8))
+            big = jax.eval_shape(lambda: self._layer_cache_for(1, 16))
 
             def ax(ls, lb):
                 diff = [i for i, (p, q) in enumerate(zip(ls.shape, lb.shape))
                         if p != q]
                 return diff[0] if diff else -1
             axes = jax.tree.map(ax, small, big)
-            self._seq_axes_memo = axes
+            memo[self.kv_format] = axes
         return axes
 
     @property

@@ -29,6 +29,9 @@ from repro.runtime.serving.router import (PLACEMENT_POLICIES, Router,
 from repro.runtime.serving.sampling import GREEDY, SamplingParams
 from repro.runtime.serving.scheduler import AdmissionRejected, Scheduler
 from repro.runtime.serving.speculative import SpecConfig, SpecController
+from repro.runtime.serving.tolerance import (TokenMatchReport,
+                                             compare_streams, measure,
+                                             serve_streams)
 
 # kept importable for compatibility, deliberately outside __all__
 _internal = (cache_insert, chunk_plan, padded_len, tail_plan)
@@ -43,4 +46,6 @@ __all__ = ["EngineConfig", "ServingEngine",
            "PagedKVCacheManager", "AllocResult", "PrefixMatch",
            "DEFAULT_BUCKETS",
            "Request", "RequestState", "Status", "Scheduler",
-           "GREEDY", "SamplingParams"]
+           "GREEDY", "SamplingParams",
+           "TokenMatchReport", "compare_streams", "measure",
+           "serve_streams"]

@@ -143,7 +143,9 @@ class PagedKVCacheManager:
 
     def __init__(self, num_pages: int, page_size: int, *,
                  max_chains: Optional[int] = None,
-                 fault: Optional[Any] = None):
+                 fault: Optional[Any] = None,
+                 kv_format: str = "fp32",
+                 row_bytes: Optional[int] = None):
         """``max_chains`` (optional): retention policy for registered
         prefix chains.  ``None`` (the default) keeps the original
         lifetime — a chain's pages return to the pool with their last
@@ -162,16 +164,36 @@ class PagedKVCacheManager:
         ``fault("alloc")`` fires, :meth:`allocate` / :meth:`extend` refuse
         with ``reason="fault-injected"`` and the normal recovery machinery
         (admission backoff, youngest-preemption) takes over — the manager
-        itself stays decoupled from the injector type."""
+        itself stays decoupled from the injector type.
+
+        ``kv_format``: the arena's storage format (core/kv_format.py).
+        Scaled formats (int8/fp8) carry a per-page *scale sidecar* — the
+        host-side accounting of the f32 scale rows that live alongside
+        each page's quantized K/V rows.  The sidecar is allocated with the
+        page, shared by reference on fork (CoW prefix sharing forks scales
+        too), and released exactly when the page pools — on *every*
+        departure path, including abnormal ones (MIGRATED/FAILED/
+        TIMED_OUT), which all route through :meth:`free` / chain eviction.
+
+        ``row_bytes``: optional resident arena bytes per token row (K + V
+        + sidecar; see ``kv_format.bytes_per_row``) — lets the manager
+        report page-accurate byte stats without knowing the model shape."""
         if num_pages < 1 or page_size < 1:
             raise ValueError((num_pages, page_size))
         if max_chains is not None and max_chains < 1:
             raise ValueError(f"max_chains must be >= 1 or None, "
                              f"got {max_chains}")
+        from repro.core import kv_format as kv_format_mod
         self.num_pages = num_pages
         self.page_size = page_size
         self.max_chains = max_chains
         self._fault = fault
+        self.kv_format = kv_format
+        self._scaled = kv_format_mod.get(kv_format).scaled
+        self.row_bytes = row_bytes
+        # pages whose scale sidecar is live (== pages out of the pool,
+        # enforced at every hand-out/pooling point when the format scales)
+        self._scale_pages: set[int] = set()
         self._free: list[int] = list(range(num_pages - 1, -1, -1))
         self._table: dict[int, list[int]] = {}     # slot -> owned page ids
         self._length: dict[int, int] = {}          # slot -> token count
@@ -189,7 +211,7 @@ class PagedKVCacheManager:
         self._tick = 0
         self.stats = {"forks": 0, "shared_pages": 0, "max_page_ref": 0,
                       "peak_pages_used": 0, "registered_pages": 0,
-                      "evicted_chains": 0}
+                      "evicted_chains": 0, "scale_sidecar_pages": 0}
 
     # -- queries -------------------------------------------------------------
     def pages_for(self, length: int) -> int:
@@ -227,6 +249,34 @@ class PagedKVCacheManager:
         overwrite rows other slots are reading through the share view."""
         return bool(self._hosted.get(slot)) and slot not in self._table
 
+    @property
+    def scale_sidecar_pages(self) -> int:
+        """Pages with a live scale sidecar (0 for unscaled formats).
+        Invariant for scaled formats: == pages out of the pool — a leaked
+        sidecar entry means a departure path skipped the release."""
+        return len(self._scale_pages)
+
+    def resident_kv_bytes(self, slot: int) -> int:
+        """Resident arena bytes currently accounted to ``slot``'s pages
+        (K + V + scale sidecar); 0 when ``row_bytes`` wasn't provided."""
+        if self.row_bytes is None:
+            return 0
+        return len(self._table.get(slot, ())) * self.page_size \
+            * self.row_bytes
+
+    def _sidecar_take(self, pages) -> None:
+        if self._scaled:
+            self._scale_pages.update(pages)
+            self.stats["scale_sidecar_pages"] = len(self._scale_pages)
+
+    def _sidecar_release(self, page: int) -> None:
+        # called exactly where a page returns to the pool (free / fork
+        # release / chain eviction) — the sidecar must never outlive the
+        # page, whatever the departure status was
+        if self._scaled:
+            self._scale_pages.discard(page)
+            self.stats["scale_sidecar_pages"] = len(self._scale_pages)
+
     def _note_usage(self) -> None:
         used = self.num_pages - len(self._free)
         if used > self.stats["peak_pages_used"]:
@@ -249,6 +299,7 @@ class PagedKVCacheManager:
         taken = [self._free.pop() for _ in range(need)]
         for p in taken:
             self._ref[p] = 1
+        self._sidecar_take(taken)
         self._table[slot] = taken
         self._length[slot] = length
         self._note_usage()
@@ -272,6 +323,7 @@ class PagedKVCacheManager:
             p = self._free.pop()
             self._ref[p] = 1
             taken.append(p)
+        self._sidecar_take(taken)
         self._table[slot].extend(taken)
         self._length[slot] = new_length
         self._note_usage()
@@ -287,6 +339,7 @@ class PagedKVCacheManager:
             if n <= 0:
                 self._ref.pop(page, None)
                 self._unregister(page)
+                self._sidecar_release(page)
                 self._free.append(page)
                 freed.append(page)
             else:
@@ -399,6 +452,7 @@ class PagedKVCacheManager:
         for page in reversed(pages):
             self._unregister(page)
             self._ref.pop(page, None)
+            self._sidecar_release(page)
             self._free.append(page)
         self.stats["evicted_chains"] += 1
         return AllocResult(True, freed=tuple(reversed(pages)))
@@ -486,6 +540,7 @@ class PagedKVCacheManager:
             if n <= 0:
                 self._ref.pop(p, None)
                 self._unregister(p)
+                self._sidecar_release(p)
                 self._free.append(p)
                 freed.append(p)
             else:

@@ -19,6 +19,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Optional
 
+from repro.core import kv_format as kv_format_mod
 from repro.runtime.serving.chunking import validate_buckets
 from repro.runtime.serving.faults import FaultPlan
 from repro.runtime.serving.health import HealthConfig
@@ -67,6 +68,11 @@ class EngineConfig:
                         engine steps
     ``preempt_cap``     preemption-recomputes before a request departs
                         FAILED (``"recompute-cap"``); None = unbounded
+    ``kv_format``       KV-arena storage format (core/kv_format.py):
+                        "fp32" (reference, bit-identical default) |
+                        "bf16" | "int8" | "fp8" (capability-gated).
+                        Part of every compiled-step cache key — engines
+                        with different formats never share executables
     """
     max_slots: int = 8
     max_seq: int = 256
@@ -86,8 +92,11 @@ class EngineConfig:
     admission_attempt_cap: Optional[int] = None
     admission_backoff_cap: int = 32
     preempt_cap: Optional[int] = None
+    kv_format: str = "fp32"
 
     def __post_init__(self):
+        # raises with the available-format list on unknown / ungated names
+        kv_format_mod.get(self.kv_format)
         for name in ("max_slots", "max_seq", "page_size"):
             if getattr(self, name) < 1:
                 raise ValueError(f"EngineConfig.{name} must be >= 1, "

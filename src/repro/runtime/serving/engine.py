@@ -77,6 +77,7 @@ from __future__ import annotations
 
 import collections
 import functools
+import inspect
 import time
 import warnings
 import weakref
@@ -86,6 +87,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import kv_format as kv_format_mod
 from repro.core import masking
 from repro.core.dispatch import DispatchQueue
 from repro.models.layers import PARKED_POS
@@ -125,13 +127,20 @@ def _per_model(build):
     alive.  Instead the compiled fn is memoised on the model instance
     itself (a self-cycle the garbage collector reclaims with the model),
     with a ``WeakValueDictionary`` index kept purely for
-    tests/diagnostics."""
+    tests/diagnostics.
+
+    The model's current KV storage format is part of the cache key: a
+    model re-initialised for a different ``kv_format`` serves a different
+    arena pytree, so a fleet mixing formats never silently shares
+    executables (jit would retrace on avals anyway; the key makes the
+    separation explicit and observable)."""
     name = build.__name__
     index: weakref.WeakValueDictionary = weakref.WeakValueDictionary()
 
     @functools.wraps(build)
     def get(model, donate: bool = True):
-        attr = f"_{name}_compiled_{bool(donate)}"
+        fmt = getattr(model, "kv_format", "fp32")
+        attr = f"_{name}_compiled_{bool(donate)}_{fmt}"
         fn = model.__dict__.get(attr)
         if fn is None:
             fn = build(model, donate)
@@ -489,13 +498,33 @@ class ServingEngine:
         # stays decoupled from the injector type
         self._injector = (FaultInjector(config.faults)
                           if config.faults is not None else None)
+        # KV storage format (core/kv_format.py): resolved once here, then
+        # threaded to the model arena (init_cache), the page accountant
+        # (scale-sidecar lifecycle) and the compiled-step cache keys
+        self.kv_format = config.kv_format
+        fmt = kv_format_mod.get(self.kv_format)
+        # drivers whose init_cache predates the format parameter (encdec's
+        # cross-attention arena) can only serve the fp32 reference format
+        if "kv_format" in inspect.signature(model.init_cache).parameters:
+            self._cache_kw = {"kv_format": self.kv_format}
+        elif self.kv_format != "fp32":
+            raise ValueError(
+                f"family {cfg.family!r} does not support kv_format="
+                f"{self.kv_format!r}: its cache constructor is fp32-only")
+        else:
+            self._cache_kw = {}
+        self.kv_row_bytes = kv_format_mod.bytes_per_row(
+            fmt, getattr(cfg, "n_kv_heads", 1), getattr(cfg, "hd", 0),
+            cfg.adtype) * cfg.n_layers
         num_pages = config.num_pages
         if num_pages is None:       # default: pool sized to the full arena
             num_pages = max_slots * -(-max_seq // config.page_size)
         self.cache_mgr = PagedKVCacheManager(
             num_pages, config.page_size,
             max_chains=config.prefix_chain_cap,
-            fault=self._cache_fault if self._injector else None)
+            fault=self._cache_fault if self._injector else None,
+            kv_format=self.kv_format,
+            row_bytes=self.kv_row_bytes)
         self.scheduler = Scheduler(
             max_slots, self.cache_mgr,
             prefix_extra=self.prefix_extra,
@@ -524,7 +553,7 @@ class ServingEngine:
         self._share = ({"src": jnp.arange(max_slots, dtype=jnp.int32),
                         "len": jnp.zeros((max_slots,), jnp.int32)}
                        if self.prefix_sharing else None)
-        self._cache = model.init_cache(max_slots, max_seq)
+        self._cache = model.init_cache(max_slots, max_seq, **self._cache_kw)
 
         self.arena_bytes = sum(
             leaf.nbytes for leaf in jax.tree.leaves(self._cache))
@@ -556,7 +585,7 @@ class ServingEngine:
         # batch=1 zero cache reused by every monolithic admission (purely
         # functional — prefill returns a new cache, this one is never
         # written and never donated)
-        self._one_cache = model.init_cache(1, max_seq)
+        self._one_cache = model.init_cache(1, max_seq, **self._cache_kw)
         if prefill_chunks is not None:
             self._chunk_fn = (
                 _compiled_prefill_chunk_shared(model, self.donate)
@@ -640,7 +669,10 @@ class ServingEngine:
                       "timed_out": 0, "failed": 0, "migrated": 0,
                       "quarantined": 0,
                       "poisoned": 0, "deadline_overrun_s": {},
-                      "host_blocked_s": 0.0, "ttft_s": {}}
+                      "host_blocked_s": 0.0, "ttft_s": {},
+                      "kv_format": self.kv_format,
+                      "kv_row_bytes": self.kv_row_bytes,
+                      "arena_bytes": self.arena_bytes}
         if self._injector is not None:
             # live view of per-site fire counts (aliased, not copied)
             self.stats["faults"] = self._injector.fired

@@ -1,0 +1,117 @@
+"""Token-match tolerance harness for reduced-precision KV serving.
+
+Narrow KV formats (``EngineConfig.kv_format``: bf16/int8/fp8) trade arena
+bytes for quantization noise.  Greedy decode turns that noise into a
+discrete, measurable signal: either the argmax token matches the fp32
+reference stream or it does not.  This module runs the same workload
+through two engines — an fp32 *oracle* and a *candidate* format — and
+reports the per-request greedy match rate and first-divergence positions.
+
+The comparison is prefix-based: positions are counted as matched up to the
+first mismatch and unmatched after it, because greedy decode is
+autoregressive — one flipped token changes every subsequent input, so
+post-divergence agreement is coincidence, not fidelity.  A length mismatch
+(one stream retired earlier) diverges at the shorter length.
+
+``fp32`` vs ``fp32`` must report ``match_rate == 1.0`` and no divergences
+under every serving mode (monolithic/chunked × plain/speculative) — the
+harness's own self-test (tests/test_tolerance.py) pins that.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.runtime.serving.config import EngineConfig
+from repro.runtime.serving.engine import ServingEngine
+from repro.runtime.serving.request import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenMatchReport:
+    """Greedy token agreement between an oracle and a candidate run.
+
+    ``requests``          streams compared
+    ``positions``         total oracle token positions
+    ``matched``           positions matched before each stream's divergence
+    ``match_rate``        matched / positions (1.0 for an empty workload)
+    ``first_divergence``  uid -> position of the first mismatch; streams
+                          that match end-to-end do not appear
+    """
+    requests: int
+    positions: int
+    matched: int
+    match_rate: float
+    first_divergence: dict
+
+    @property
+    def identical(self) -> bool:
+        return not self.first_divergence
+
+    def describe(self) -> str:
+        div = (", ".join(f"{uid}@{pos}" for uid, pos in
+                         sorted(self.first_divergence.items(),
+                                key=lambda kv: str(kv[0])))
+               if self.first_divergence else "none")
+        return (f"match {self.matched}/{self.positions} "
+                f"({self.match_rate:.4f}) over {self.requests} requests; "
+                f"first divergence: {div}")
+
+
+def compare_streams(oracle: dict, candidate: dict) -> TokenMatchReport:
+    """Compare two uid -> token-array mappings (``engine.run()`` outputs).
+
+    Every oracle uid must be present in the candidate (a missing stream
+    diverges at position 0).  Match counting is prefix-based; a length
+    mismatch diverges at the shorter stream's length.
+    """
+    positions = matched = 0
+    first_divergence: dict = {}
+    for uid in sorted(oracle, key=str):
+        ref = np.asarray(oracle[uid]).ravel()
+        got = np.asarray(candidate.get(uid, ())).ravel()
+        positions += ref.size
+        n = min(ref.size, got.size)
+        agree = ref[:n] == got[:n]
+        if bool(agree.all()) and got.size >= ref.size:
+            matched += ref.size
+            continue
+        div = int(np.argmax(~agree)) if not agree.all() else n
+        matched += div
+        first_divergence[uid] = div
+    return TokenMatchReport(
+        requests=len(oracle), positions=positions, matched=matched,
+        match_rate=(matched / positions) if positions else 1.0,
+        first_divergence=first_divergence)
+
+
+def serve_streams(model, cfg, params, prompts, *, max_new_tokens: int,
+                  config: EngineConfig,
+                  kv_format: Optional[str] = None) -> dict:
+    """Run one greedy workload through a fresh engine and return the
+    uid -> tokens mapping.  ``kv_format`` overrides the config's format
+    (the one knob the harness varies); everything else — chunking,
+    speculation, slots — comes from ``config`` so oracle and candidate
+    runs differ in storage format only."""
+    if kv_format is not None:
+        config = config.replace(kv_format=kv_format)
+    eng = ServingEngine(model, cfg, params, config=config)
+    for i, prompt in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=np.asarray(prompt, np.int32),
+                           max_new_tokens=max_new_tokens))
+    return eng.run()
+
+
+def measure(model, cfg, params, prompts, *, max_new_tokens: int,
+            config: EngineConfig, kv_format: str) -> TokenMatchReport:
+    """Serve the workload under fp32 and under ``kv_format``, identically
+    configured otherwise, and report greedy token agreement."""
+    oracle = serve_streams(model, cfg, params, prompts,
+                           max_new_tokens=max_new_tokens, config=config,
+                           kv_format="fp32")
+    candidate = serve_streams(model, cfg, params, prompts,
+                              max_new_tokens=max_new_tokens, config=config,
+                              kv_format=kv_format)
+    return compare_streams(oracle, candidate)

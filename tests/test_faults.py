@@ -295,6 +295,40 @@ def test_abnormal_departure_releases_forked_prefix_pages():
     assert s.all_done and s.stats["failed"] == 2
 
 
+def test_abnormal_departure_releases_scale_sidecar():
+    """Regression (the scale-sidecar leak): under a scaled KV format
+    (int8) every page carries a per-page scale-sidecar reservation, and an
+    *abnormal* departure (FAILED here; MIGRATED/TIMED_OUT take the same
+    ``free()`` path) must release the sidecar with the page — including
+    shared prefix pages whose refcount drains across forked requests.
+    A leak leaves ``scale_sidecar_pages`` nonzero after the pool refills,
+    and the accountant's resident-bytes view drifts from the arena."""
+    m = PagedKVCacheManager(num_pages=8, page_size=4, kv_format="int8",
+                            row_bytes=40)
+    s = Scheduler(2, m, chunked=True)
+    donor = s.submit(_req("donor", plen=8, max_new=2))
+    fork = s.submit(_req("fork", plen=8, max_new=2))
+    assert len(s.schedule()) == 2
+    # sidecar invariant: one reservation per page out of the pool
+    assert m.scale_sidecar_pages == 8 - m.free_pages > 0
+    # 8 prompt + 2 gen rows -> 3 pages of 4 rows, at 40 bytes/row
+    assert m.resident_kv_bytes(donor.slot) == 3 * 4 * 40
+    m.register_prefix(donor.slot, donor.request.prompt, 8)
+    match = m.lookup(fork.request.prompt, 7)
+    assert match is not None and match.shared_len == 4
+    assert m.fork(fork.slot, match)
+    assert m.scale_sidecar_pages == 8 - m.free_pages
+    # both depart abnormally; the refcount-ordered frees must drain the
+    # sidecar in lockstep with the pages
+    s.depart(donor, Status.FAILED, "nan-logits")
+    assert m.scale_sidecar_pages == 8 - m.free_pages
+    s.depart(fork, Status.TIMED_OUT, "deadline")
+    assert m.free_pages == 8
+    assert m.scale_sidecar_pages == 0
+    assert m.stats["scale_sidecar_pages"] == 0
+    assert s.all_done
+
+
 def test_depart_from_waiting_removes_from_queue():
     s = Scheduler(1, PagedKVCacheManager(8, 4))
     s.submit(_req("a"))

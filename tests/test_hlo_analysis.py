@@ -133,3 +133,38 @@ def test_roofline_terms_math():
     np.testing.assert_allclose(t.bound_s, 0.5)
     np.testing.assert_allclose(t.roofline_fraction, 0.8)
     np.testing.assert_allclose(t.useful_flops_ratio, 0.8)
+
+
+# ---------------------------------------------------------------------------
+# resident_bytes: the arena-footprint instrument behind the KV-format gates
+# ---------------------------------------------------------------------------
+
+def test_resident_bytes_sums_pytree_leaves():
+    tree = {"k": np.zeros((2, 8, 4), np.float32),
+            "v": np.zeros((2, 8, 4), np.int8),
+            "s": np.zeros((2, 8), np.float32)}
+    out = hlo_analysis.resident_bytes(tree)
+    assert out["resident"] == 2 * 8 * 4 * 4 + 2 * 8 * 4 * 1 + 2 * 8 * 4
+    # abstract leaves (eval_shape output) measure identically — footprints
+    # without materialising
+    abstract = jax.eval_shape(lambda: {k: jnp.asarray(v)
+                                       for k, v in tree.items()})
+    assert hlo_analysis.resident_bytes(abstract)["resident"] \
+        == out["resident"]
+
+
+def test_resident_bytes_with_compiled_memory_analysis():
+    spec = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    compiled = jax.jit(lambda a, b: a @ b).lower(spec, spec).compile()
+    out = hlo_analysis.resident_bytes([np.zeros((64, 64), np.float32)] * 2,
+                                      compiled)
+    assert out["resident"] == 2 * 64 * 64 * 4
+    for key in ("argument_bytes", "output_bytes", "temp_bytes",
+                "peak_bytes"):
+        assert key in out and out[key] >= 0.0
+    # the backend's own analysis must agree with the leaf arithmetic on
+    # the declared I/O (when it reports at all — 0.0 means "not reported")
+    if out["argument_bytes"]:
+        assert out["argument_bytes"] == 2 * 64 * 64 * 4
+    if out["output_bytes"]:
+        assert out["output_bytes"] == 64 * 64 * 4

@@ -1,0 +1,241 @@
+"""The KV storage-format layer (core/kv_format.py) and its threading
+through the arena: registry + capability gate, quantize/dequantize error
+bounds, per-row byte accounting, cache-pytree structure (the fp32 pin and
+the scaled-format scale sidecar), family gating (recurrent state stays
+full-precision), and the end-to-end int8 serving path measured against
+the fp32 oracle by the tolerance harness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core import kv_format as kvf
+from repro.models import layers as L
+from repro.models import registry
+from repro.runtime.serving import EngineConfig, Request, ServingEngine
+from repro.runtime.serving import tolerance
+
+TINY = ArchConfig(name="tiny-kvf", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab=128, head_dim=16,
+                  param_dtype="float32", act_dtype="float32", max_seq=128)
+
+
+# ---------------------------------------------------------------------------
+# registry + capability gate
+# ---------------------------------------------------------------------------
+
+def test_registry_formats_and_unknown_name():
+    assert kvf.get("fp32").store_dtype is None         # "use the adtype"
+    assert not kvf.get("fp32").scaled
+    assert kvf.get("bf16").store_dtype == "bfloat16"
+    i8 = kvf.get("int8")
+    assert i8.scaled and i8.qmax == 127.0
+    with pytest.raises(ValueError, match="fp32"):      # lists what exists
+        kvf.get("int7")
+
+
+def test_fp8_capability_gate():
+    # fp8 registers only when the runtime actually supports the dtype; on
+    # either side of the gate the registry answer must be consistent
+    if "fp8" in kvf.names():
+        f8 = kvf.get("fp8")
+        assert f8.scaled and f8.qmax > 0
+        jnp.zeros((2,), jnp.float32).astype(f8.store_dtype)  # must not raise
+    else:
+        with pytest.raises(ValueError):
+            kvf.get("fp8")
+
+
+def test_bytes_per_row():
+    kvh, hd = 2, 16
+    assert kvf.bytes_per_row(kvf.get("fp32"), kvh, hd, jnp.float32) \
+        == 2 * kvh * hd * 4
+    assert kvf.bytes_per_row(kvf.get("bf16"), kvh, hd, jnp.float32) \
+        == 2 * kvh * hd * 2
+    # int8: 1-byte rows plus one f32 scale per (row, head) for K and V
+    assert kvf.bytes_per_row(kvf.get("int8"), kvh, hd, jnp.float32) \
+        == 2 * kvh * hd * 1 + 2 * kvh * 4
+    # fp32 resolves through the adtype: a bf16 arena stores 2-byte rows
+    assert kvf.bytes_per_row(kvf.get("fp32"), kvh, hd, jnp.bfloat16) \
+        == 2 * kvh * hd * 2
+
+
+# ---------------------------------------------------------------------------
+# quantize / dequantize
+# ---------------------------------------------------------------------------
+
+def test_int8_roundtrip_error_bound():
+    fmt = kvf.get("int8")
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 7, 2, 16), jnp.float32)
+    q, scale = kvf.quantize(fmt, x)
+    assert q.dtype == jnp.int8 and q.shape == x.shape
+    assert scale.dtype == kvf.SCALE_DTYPE and scale.shape == x.shape[:-1]
+    d = kvf.dequantize(fmt, q, scale)
+    # symmetric rounding: error <= scale/2 per element, scale = absmax/127
+    bound = np.asarray(scale)[..., None] * 0.5 + 1e-7
+    assert np.all(np.abs(np.asarray(d - x)) <= bound)
+    # the row absmax element is exactly representable
+    amax = np.max(np.abs(np.asarray(x)), axis=-1)
+    assert np.allclose(np.max(np.abs(np.asarray(d)), axis=-1), amax,
+                       rtol=1e-5)
+
+
+def test_quantize_zero_row_is_exact():
+    fmt = kvf.get("int8")
+    q, scale = kvf.quantize(fmt, jnp.zeros((2, 4, 1, 8), jnp.float32))
+    assert np.all(np.asarray(q) == 0)
+    assert np.all(np.asarray(scale) == 1.0)        # no div-by-zero sentinel
+    assert np.all(np.asarray(kvf.dequantize(fmt, q, scale)) == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# cache pytree structure
+# ---------------------------------------------------------------------------
+
+def test_fp32_cache_pytree_unchanged():
+    # the fp32 default must build the exact pre-format-layer pytree:
+    # {"k", "v"} in the activation dtype, no sidecar leaves
+    cache = L.init_kv_cache(TINY, 2, 16)
+    assert sorted(cache) == ["k", "v"]
+    assert cache["k"].dtype == TINY.adtype
+    assert L.kv_cache_format(cache) == "fp32"
+
+
+def test_scaled_cache_has_ones_sidecar():
+    cache = L.init_kv_cache(TINY, 2, 16, kv_format="int8")
+    assert sorted(cache) == ["k", "k_scale", "v", "v_scale"]
+    assert cache["k"].dtype == jnp.int8
+    assert cache["k_scale"].shape == (2, 16, TINY.n_kv_heads)
+    assert cache["k_scale"].dtype == kvf.SCALE_DTYPE
+    # ones, not zeros: dequantizing a never-written row yields exact zero
+    assert np.all(np.asarray(cache["k_scale"]) == 1.0)
+    assert L.kv_cache_format(cache) == "int8"
+    assert L.kv_cache_format(L.init_kv_cache(TINY, 2, 16,
+                                             kv_format="bf16")) == "bf16"
+
+
+def test_recurrent_families_reject_narrow_formats():
+    for family in ("ssm", "hybrid"):
+        bundle = registry.build("mamba2-2.7b" if family == "ssm"
+                                else "hymba-1.5b", reduced=True)
+        with pytest.raises(ValueError, match="full-precision"):
+            bundle.model.init_cache(2, 16, kv_format="int8")
+        bundle.model.init_cache(2, 16, kv_format="fp32")   # fine
+
+
+def test_engine_config_validates_format():
+    with pytest.raises(ValueError):
+        EngineConfig(kv_format="int7")
+    assert EngineConfig(kv_format="int8").kv_format == "int8"
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: int8 serving vs the fp32 oracle
+# ---------------------------------------------------------------------------
+
+def _tiny_workload(n=6):
+    rng = np.random.default_rng(0)
+    lens = [8, 12, 16]
+    return [rng.integers(0, TINY.vocab, lens[i % 3]).astype(np.int32)
+            for i in range(n)]
+
+
+def test_int8_serving_matches_fp32_oracle():
+    model = registry.build_model(TINY)
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+    config = EngineConfig(max_slots=4, max_seq=64, depth=0, page_size=8)
+    report = tolerance.measure(model, TINY, params, _tiny_workload(),
+                               max_new_tokens=8, config=config,
+                               kv_format="int8")
+    assert report.requests == 6 and report.positions == 48
+    # quantization noise may flip rare argmax near-ties on a random-init
+    # model; wholesale divergence means the format layer is broken
+    assert report.match_rate >= 0.9, report.describe()
+
+
+def test_int8_engine_accounting_and_drain():
+    model = registry.build_model(TINY)
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+
+    def build(fmt):
+        return ServingEngine(model, TINY, params, config=EngineConfig(
+            max_slots=4, max_seq=64, depth=0, page_size=8, kv_format=fmt))
+
+    ref = build("fp32")
+    ref_bytes, ref_rows = ref.arena_bytes, ref.kv_row_bytes
+    eng = build("int8")
+    # quarter-width rows + f32 sidecar: well under half the fp32 arena
+    assert eng.arena_bytes <= 0.5 * ref_bytes
+    assert eng.kv_row_bytes < ref_rows
+    assert eng.stats["kv_format"] == "int8"
+    assert eng.stats["arena_bytes"] == eng.arena_bytes
+    for i, p in enumerate(_tiny_workload()):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=8))
+    out = eng.run()
+    assert len(out) == 6
+    # after drain: every page and every sidecar reservation is reclaimed
+    assert eng.cache_mgr.free_pages == eng.cache_mgr.num_pages
+    assert eng.cache_mgr.scale_sidecar_pages == 0
+
+
+def test_compiled_step_cache_keyed_by_format():
+    # two engines over ONE model object, different formats: the per-model
+    # compiled-step memo must not hand the int8 engine an fp32 executable
+    model = registry.build_model(TINY)
+    attrs_before = {a for a in vars(model) if "_compiled_" in a}
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+    for fmt in ("fp32", "int8"):
+        ServingEngine(model, TINY, params, config=EngineConfig(
+            max_slots=2, max_seq=32, depth=0, kv_format=fmt))
+    attrs = {a for a in vars(model) if "_compiled_" in a} - attrs_before
+    assert any(a.endswith("_fp32") for a in attrs)
+    assert any(a.endswith("_int8") for a in attrs)
+
+
+# ---------------------------------------------------------------------------
+# fused-dequant kernels: scaled operands vs pre-dequantized reference
+# ---------------------------------------------------------------------------
+
+def _quantized_kv(rng, b, s, kvh, hd):
+    fmt = kvf.get("int8")
+    k = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    kq, ks = kvf.quantize(fmt, k)
+    vq, vs = kvf.quantize(fmt, v)
+    return (kq, ks, vq, vs,
+            kvf.dequantize(fmt, kq, ks), kvf.dequantize(fmt, vq, vs))
+
+
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+@pytest.mark.parametrize("window", [None, 8])
+def test_flash_decode_fused_dequant_matches_wide(mode, window):
+    # the fused in-register dequant must equal attention over a
+    # pre-dequantized (wide) arena — the path it exists to avoid
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+    B, H, KVH, S, hd = 3, 8, 2, 40, 16
+    q = jnp.asarray(rng.standard_normal((B, H, hd)), jnp.float32)
+    kq, ks, vq, vs, k_wide, v_wide = _quantized_kv(rng, B, S, KVH, hd)
+    lengths = jnp.asarray([1, 17, 40], jnp.int32)
+    got = ops.flash_decode(q, kq, vq, lengths=lengths, window=window,
+                           k_scale=ks, v_scale=vs, mode=mode, bk=16)
+    want = ops.flash_decode(q, k_wide, v_wide, lengths=lengths,
+                            window=window, mode="ref", bk=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+@pytest.mark.parametrize("window", [None, 8])
+def test_flash_prefill_chunk_fused_dequant_matches_wide(mode, window):
+    from repro.kernels import ops
+    rng = np.random.default_rng(1)
+    B, C, H, KVH, S, hd = 3, 8, 8, 2, 40, 16
+    q = jnp.asarray(rng.standard_normal((B, C, H, hd)), jnp.float32)
+    kq, ks, vq, vs, k_wide, v_wide = _quantized_kv(rng, B, S, KVH, hd)
+    prefix = jnp.asarray([0, 17, S - C], jnp.int32)
+    got = ops.flash_prefill_chunk(q, kq, vq, prefix=prefix, window=window,
+                                  k_scale=ks, v_scale=vs, mode=mode, bk=16)
+    want = ops.flash_prefill_chunk(q, k_wide, v_wide, prefix=prefix,
+                                   window=window, mode="ref", bk=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)

@@ -1,0 +1,95 @@
+"""The token-match tolerance harness (serving/tolerance.py): stream
+comparison semantics as host logic, and the fp32-vs-fp32 self-test — the
+oracle compared against itself must report a perfect match under every
+serving mode the format layer touches ({monolithic, chunked} x {plain,
+speculative}).  If this drifts, tolerance numbers for the narrow formats
+measure harness noise, not quantization."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.models import registry
+from repro.runtime.serving import EngineConfig, SpecConfig
+from repro.runtime.serving import tolerance
+
+TGT = ArchConfig(name="tiny-tol-target", family="dense", n_layers=2,
+                 d_model=32, n_heads=4, n_kv_heads=2, d_ff=64, vocab=97,
+                 head_dim=8, param_dtype="float32", act_dtype="float32",
+                 max_seq=64)
+DFT = ArchConfig(name="tiny-tol-draft", family="dense", n_layers=1,
+                 d_model=16, n_heads=2, n_kv_heads=1, d_ff=32, vocab=97,
+                 head_dim=8, param_dtype="float32", act_dtype="float32",
+                 max_seq=64)
+
+
+# ---------------------------------------------------------------------------
+# compare_streams: host logic
+# ---------------------------------------------------------------------------
+
+def test_identical_streams_match_perfectly():
+    streams = {0: np.array([1, 2, 3]), "b": np.array([4, 5])}
+    rep = tolerance.compare_streams(streams, streams)
+    assert rep.match_rate == 1.0 and rep.identical
+    assert rep.requests == 2 and rep.positions == 5 and rep.matched == 5
+    assert "none" in rep.describe()
+
+
+def test_prefix_counting_stops_at_first_divergence():
+    # post-divergence agreement (the trailing 9) is coincidence under
+    # autoregressive decode and must NOT count as matched
+    rep = tolerance.compare_streams({0: np.array([7, 8, 9, 9])},
+                                    {0: np.array([7, 5, 9, 9])})
+    assert rep.matched == 1 and rep.first_divergence == {0: 1}
+    assert rep.match_rate == 0.25 and not rep.identical
+
+
+def test_length_mismatch_diverges_at_shorter_length():
+    rep = tolerance.compare_streams({0: np.array([1, 2, 3, 4])},
+                                    {0: np.array([1, 2])})
+    assert rep.matched == 2 and rep.first_divergence == {0: 2}
+    # a LONGER candidate that agrees on the oracle prefix still matches
+    rep = tolerance.compare_streams({0: np.array([1, 2])},
+                                    {0: np.array([1, 2, 3, 4])})
+    assert rep.match_rate == 1.0 and rep.identical
+
+
+def test_missing_stream_diverges_at_zero():
+    rep = tolerance.compare_streams({0: np.array([1, 2]), 1: np.array([3])},
+                                    {0: np.array([1, 2])})
+    assert rep.first_divergence == {1: 0}
+    assert rep.matched == 2 and rep.positions == 3
+
+
+def test_empty_workload_is_a_perfect_match():
+    rep = tolerance.compare_streams({}, {})
+    assert rep.match_rate == 1.0 and rep.identical and rep.positions == 0
+
+
+# ---------------------------------------------------------------------------
+# self-test: the fp32 oracle vs itself, every serving mode
+# ---------------------------------------------------------------------------
+
+def _prompts(n=5):
+    rng = np.random.default_rng(0)
+    lens = [6, 9, 12]
+    return [rng.integers(0, TGT.vocab, lens[i % 3]).astype(np.int32)
+            for i in range(n)]
+
+
+@pytest.mark.parametrize("chunked", [False, True],
+                         ids=["monolithic", "chunked"])
+@pytest.mark.parametrize("spec", [False, True], ids=["plain", "spec"])
+def test_fp32_oracle_matches_itself(chunked, spec):
+    model = registry.build_model(TGT)
+    params = jax.jit(model.init)(jax.random.PRNGKey(0))
+    config = EngineConfig(
+        max_slots=3, max_seq=48, depth=0, page_size=8,
+        prefill_chunks=(8, 16) if chunked else None,
+        speculative=SpecConfig(draft=DFT, k=3) if spec else None)
+    report = tolerance.measure(model, TGT, params, _prompts(),
+                               max_new_tokens=8, config=config,
+                               kv_format="fp32")
+    assert report.identical, report.describe()
+    assert report.match_rate == 1.0
+    assert report.positions == 5 * 8 and report.matched == report.positions
